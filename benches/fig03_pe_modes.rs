@@ -1,0 +1,19 @@
+//! Bench: Fig. 3 — temporal vs spatial PE area/energy models.
+//! Prints the figure's rows and times the model evaluation.
+
+use apu::figures;
+use apu::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    println!("{}", figures::fig3().render());
+    let tech = Tech::tsmc16();
+    let cfg = PeConfig { block_h: 400, block_w: 400, bits: 4 };
+    let r = bench("fig3/pe_energy_both_modes", budget(), || {
+        (
+            pe_energy_per_cycle(&tech, &cfg, PeMode::Spatial).total(),
+            pe_energy_per_cycle(&tech, &cfg, PeMode::Temporal).total(),
+        )
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,36 @@
+//! Bench: Fig. 6 — routing-network config memory, plus the actual routing
+//! scheduler over structured layer pairs (the compile-time cost the mux
+//! design trades the hardware for).
+
+use apu::pruning::BlockStructure;
+use apu::sched::{build_demand, schedule_routes};
+use apu::util::bench::{bench, budget};
+use apu::util::rng::Rng;
+use apu::{figures, routing::RoutingDesign};
+
+fn main() {
+    println!("{}", figures::fig6().render());
+    let r = bench("fig6/config_bits_all_designs", budget(), || {
+        [64usize, 256, 1024, 4096]
+            .iter()
+            .map(|&n| {
+                RoutingDesign::Mux { n_pes: 10 }.config_bits(n)
+                    + RoutingDesign::Clos.config_bits(n)
+                    + RoutingDesign::Crossbar.config_bits(n)
+            })
+            .sum::<f64>()
+    });
+    println!("{}", r.report());
+
+    // schedule a 4000-activation layer-to-layer shuffle (the Fig. 9 chip's
+    // full-layer case: 10 blocks of 400).
+    let mut rng = Rng::new(1);
+    let prod = BlockStructure::random(4000, 4000, 10, &mut rng).unwrap();
+    let cons = BlockStructure::random(4000, 4000, 10, &mut rng).unwrap();
+    let r = bench("fig6/schedule_4000_acts_10pe", budget(), || {
+        let demand = build_demand(&prod.row_groups, &cons.col_groups).unwrap();
+        schedule_routes(&demand).unwrap().n_cycles
+    });
+    println!("{}", r.report());
+    println!("  ({:.1}k activations scheduled/s)", r.per_second(4000.0) / 1e3);
+}

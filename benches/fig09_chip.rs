@@ -1,0 +1,15 @@
+//! Bench: Fig. 9 — chip-spec generation + the §4.3 headline claims.
+
+use apu::figures;
+use apu::generator::{DesignInstance, GeneratorConfig};
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    let (t, _) = figures::fig9().unwrap();
+    println!("{}", t.render());
+    println!("{}", figures::headline_claims().unwrap().render());
+    let r = bench("fig9/generate_instance", budget(), || {
+        DesignInstance::generate(GeneratorConfig::default()).unwrap().metrics.tops_per_watt
+    });
+    println!("{}", r.report());
+}

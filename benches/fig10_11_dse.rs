@@ -1,0 +1,16 @@
+//! Bench: Figs. 10/11 — the DSE sweeps (block size and precision).
+
+use apu::figures;
+use apu::generator::{sweep_block_size, sweep_precision};
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    println!("{}", figures::fig10_11_block().unwrap().render());
+    println!("{}", figures::fig10_11_precision().unwrap().render());
+    let r = bench("fig10_11/full_sweep", budget(), || {
+        let a = sweep_block_size(&[200, 400, 800, 1024, 1600, 2048], 4).unwrap();
+        let b = sweep_precision(&[4, 8, 16]).unwrap();
+        a.len() + b.len()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,17 @@
+//! Bench: Fig. 13 — VGG-19 per-layer speedup + utilization (APU group-conv
+//! mapping vs the EIE-style unstructured baseline).
+
+use apu::compiler::cost::{cost_network, CostModel};
+use apu::figures;
+use apu::nn::zoo;
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    println!("{}", figures::fig13().unwrap().render());
+    let (best, util, _, _) = figures::fig13_14_summary().unwrap();
+    println!("best conv speedup {best:.1}x, mean conv utilization {:.1}%", util * 100.0);
+    let net = zoo::vgg19(true);
+    let model = CostModel::paper_9pe();
+    let r = bench("fig13/cost_vgg19", budget(), || cost_network(&model, &net).unwrap().total_cycles());
+    println!("{}", r.report());
+}

@@ -1,0 +1,16 @@
+//! Bench: Fig. 14 — ResNet-50 per-layer speedup + utilization.
+
+use apu::compiler::cost::{cost_network, CostModel};
+use apu::figures;
+use apu::nn::zoo;
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    println!("{}", figures::fig14().unwrap().render());
+    let (_, _, best, util) = figures::fig13_14_summary().unwrap();
+    println!("best conv speedup {best:.1}x, mean conv utilization {:.1}%", util * 100.0);
+    let net = zoo::resnet50(true);
+    let model = CostModel::paper_9pe();
+    let r = bench("fig14/cost_resnet50", budget(), || cost_network(&model, &net).unwrap().total_cycles());
+    println!("{}", r.report());
+}

@@ -1,0 +1,31 @@
+//! Bench: Fig. 15 — structured vs unstructured (EIE) FC speedups, with
+//! the VGGFC6 folding dip, plus the end-to-end simulated FC layer.
+
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::figures;
+use apu::sim::{Apu, ApuConfig};
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    println!("{}", figures::fig15().unwrap().render());
+
+    // Functional cycle-accurate run of a full 4000×4000 structured layer on
+    // the Fig. 9 machine (the §4.3 "single layer processing at 400 cycles").
+    let layers = synthetic_packed_network(&[4000, 4000], 10, 4, 3).unwrap();
+    let program = compile_packed_layers("fc4000", &layers, 0.1, 4, 10).unwrap();
+    let mut apu = Apu::new(ApuConfig::default());
+    apu.load(&program).unwrap();
+    let input: Vec<f32> = (0..4000).map(|i| ((i % 15) as f32 - 7.0) * 0.05).collect();
+    apu.run(&input).unwrap();
+    let st = apu.stats().clone();
+    println!(
+        "fc4000 single-layer: {} compute cycles/PE wave (paper: 400), {} route, {} host",
+        st.compute_cycles, st.route_cycles, st.host_cycles
+    );
+    let r = bench("fig15/simulate_fc4000_10pe", budget(), || {
+        apu.run(&input).unwrap().len()
+    });
+    println!("{}", r.report());
+    let macs_per_iter = 4000.0 * 4000.0 / 10.0;
+    println!("  simulator speed: {:.1} M MACs/s", r.per_second(macs_per_iter) / 1e6);
+}

@@ -1,0 +1,40 @@
+//! Bench: the simulator + coordinator hot paths (the §Perf targets).
+//! Not a paper figure — this is the performance-optimization harness.
+
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::pruning::Quantizer;
+use apu::sim::{Apu, ApuConfig};
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    // LeNet-class network (the e2e artifact shape).
+    let layers = synthetic_packed_network(&[800, 300, 100, 10], 10, 4, 7).unwrap();
+    let program = compile_packed_layers("lenet-shape", &layers, 0.15, 4, 10).unwrap();
+    let mut apu = Apu::new(ApuConfig::default());
+    apu.load(&program).unwrap();
+    let input: Vec<f32> = (0..800).map(|i| ((i % 15) as f32 - 7.0) * 0.1).collect();
+
+    let r = bench("sim/lenet_inference", budget(), || apu.run(&input).unwrap()[0]);
+    println!("{}", r.report());
+    let cycles = apu.stats().total_cycles() as f64 / apu.stats().inferences as f64;
+    println!("  {:.0} sim cycles/inference -> {:.1} M sim-cycles/s", cycles, r.per_second(cycles) / 1e6);
+    let macs = apu.stats().macs as f64 / apu.stats().inferences as f64;
+    println!("  {:.1} M MACs/s simulated", r.per_second(macs) / 1e6);
+
+    // big-block single layer (PE inner loop dominated)
+    let layers = synthetic_packed_network(&[4000, 4000], 10, 4, 3).unwrap();
+    let program = compile_packed_layers("fc4000", &layers, 0.1, 4, 10).unwrap();
+    let mut apu = Apu::new(ApuConfig::default());
+    apu.load(&program).unwrap();
+    let big: Vec<f32> = (0..4000).map(|i| ((i % 15) as f32 - 7.0) * 0.05).collect();
+    let r = bench("sim/fc4000_inference", budget(), || apu.run(&big).unwrap()[0]);
+    println!("{}", r.report());
+    println!("  {:.1} M MACs/s simulated", r.per_second(1_600_000.0) / 1e6);
+
+    // quantizer kernel
+    let q = Quantizer::new(4, 0.1);
+    let xs: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.37).sin()).collect();
+    let r = bench("quant/4096_values", budget(), || xs.iter().map(|&x| q.fake(x)).sum::<f32>());
+    println!("{}", r.report());
+    println!("  {:.1} M quants/s", r.per_second(4096.0) / 1e6);
+}

@@ -1,0 +1,37 @@
+//! Compile-and-map demo on the paper's evaluation networks: VGG-19 and
+//! ResNet-50 with group convolutions on the 9×513×513 instance
+//! (paper §4.4.3, Figs. 12–14), plus the multi-head-attention mapping
+//! (§4.4.4).
+//!
+//! ```bash
+//! cargo run --release --example compile_vgg
+//! ```
+
+use apu::compiler::cost::{cost_network, CostModel};
+use apu::nn::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let model = CostModel::paper_9pe();
+    for net in [zoo::vgg19(true), zoo::resnet50(true), zoo::transformer_mha(8, 512, 64)] {
+        let cost = cost_network(&model, &net)?;
+        println!(
+            "{:<18} {:>12} MACs  {:>12} cycles  {:>7.2} ms @1GHz  util {:>5.1}%",
+            cost.network,
+            cost.total_macs(),
+            cost.total_cycles(),
+            cost.seconds(1.0) * 1e3,
+            cost.mean_utilization() * 100.0
+        );
+        // top-3 most expensive layers
+        let mut idx: Vec<usize> = (0..cost.layers.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(cost.layers[i].total_cycles()));
+        for &i in idx.iter().take(3) {
+            let l = &cost.layers[i];
+            println!(
+                "    {:<14} {:?}: {} cycles (compute {}, route {}, host {}, stream {})",
+                l.name, l.case, l.total_cycles(), l.compute_cycles, l.route_cycles, l.host_cycles, l.stream_cycles
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Design-space exploration (paper §4.4, Figs. 10–11): sweep block size
+//! and precision; print the energy/area splits and the chip-level impact.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use apu::figures;
+use apu::generator::{DesignInstance, GeneratorConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("== block-size sweep (Figs. 10a / 11a) ==");
+    println!("{}", figures::fig10_11_block()?.render());
+    println!("== precision sweep (Figs. 10b / 11b) ==");
+    println!("{}", figures::fig10_11_precision()?.render());
+
+    println!("== chip instances across PE counts ==");
+    for n_pes in [4usize, 10, 16, 32] {
+        let inst = DesignInstance::generate(GeneratorConfig { n_pes, ..Default::default() })?;
+        let m = &inst.metrics;
+        println!(
+            "  {n_pes:>2} PEs: {:>6.2} mm2, {:>6.0} mW, {:>5.1} TOPS, {:>5.1} TOPS/W",
+            m.area_mm2, m.power_mw, m.tops, m.tops_per_watt
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): proves all layers compose.
+//!
+//! Python (build time, `make artifacts`): trains LeNet-300-100 with
+//! structured-pruning mask molding + INT4 QAT (L2), packs it through the
+//! Pallas block kernel graph (L1), and AOT-lowers to HLO text.
+//!
+//! This binary (the request path, no python):
+//!   1. imports the packed model bundle and compiles it to an APU program;
+//!   2. runs the full test-vector set on the cycle-accurate simulator;
+//!   3. runs the same inputs through the PJRT golden model (the lowered
+//!      JAX graph) and checks agreement;
+//!   4. reports accuracy, cycles, energy, and the headline TOPS/W.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_lenet
+//! ```
+
+use apu::compiler::{compile_packed_layers, import_bundle};
+use apu::runtime::{Manifest, Runtime};
+use apu::sim::{Apu, ApuConfig};
+use apu::util::bundle::Bundle;
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let model = import_bundle(manifest.model_bundle_path().to_str().unwrap())?;
+    println!(
+        "imported {}: {} layers, {}-bit, in_scale {:.4}",
+        model.name,
+        model.layers.len(),
+        model.bits,
+        model.in_scale
+    );
+
+    let program = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, 10)?;
+    let mut apu = Apu::new(ApuConfig::default());
+    apu.load(&program)?;
+
+    let tv = Bundle::load(manifest.testvec_path())?;
+    let x = tv.tensor("x")?.as_f32()?;
+    let y = tv.tensor("y")?.as_i32()?;
+    let golden_py = tv.tensor("logits")?.as_f32()?;
+    let n = tv.shape("x")?[0];
+    let din = tv.shape("x")?[1];
+
+    // PJRT golden model (the lowered JAX/Pallas graph).
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo_text(manifest.hlo_path("lenet_b1")?)?;
+
+    let (mut correct, mut sim_vs_py, mut sim_vs_pjrt) = (0usize, 0f32, 0f32);
+    for i in 0..n {
+        let xi = &x[i * din..(i + 1) * din];
+        let sim = apu.run(xi)?;
+        let pjrt = &exe.run_f32(&[(xi, &[1, din as i64])])?[0];
+        let py = &golden_py[i * 10..(i + 1) * 10];
+        if argmax(&sim) == y[i] as usize {
+            correct += 1;
+        }
+        for k in 0..10 {
+            sim_vs_py = sim_vs_py.max((sim[k] - py[k]).abs());
+            sim_vs_pjrt = sim_vs_pjrt.max((sim[k] - pjrt[k]).abs());
+        }
+    }
+    let st = apu.stats();
+    println!("e2e over {n} test vectors:");
+    println!("  INT4 accuracy                {:.3}", correct as f64 / n as f64);
+    println!("  max |sim - python golden|    {sim_vs_py:.2e}");
+    println!("  max |sim - PJRT golden|      {sim_vs_pjrt:.2e}");
+    println!(
+        "  cycles/inference             {} ({:.2} us @1GHz)",
+        st.total_cycles() / n as u64,
+        st.total_cycles() as f64 / n as f64 / 1000.0
+    );
+    println!("  energy/inference             {:.2} nJ", st.total_pj() / n as f64 / 1e3);
+    println!("  datapath efficiency          {:.1} TOPS/W", st.normalized_ops() / st.total_pj());
+    anyhow::ensure!(sim_vs_py < 1e-3, "simulator disagrees with python golden");
+    anyhow::ensure!(sim_vs_pjrt < 1e-3, "simulator disagrees with PJRT golden");
+    println!("ALL LAYERS COMPOSE ✓");
+    Ok(())
+}

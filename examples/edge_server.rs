@@ -1,0 +1,53 @@
+//! Edge-serving demo: the L3 coordinator under a Poisson arrival process,
+//! with the cycle-accurate simulator as the inference engine.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example edge_server
+//! ```
+
+use std::time::Duration;
+
+use apu::compiler::{compile_packed_layers, import_bundle};
+use apu::coordinator::{ApuEngine, BatchPolicy, Engine, Server, SyntheticLoad};
+use apu::runtime::Manifest;
+use apu::sim::{Apu, ApuConfig};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let bundle = manifest.model_bundle_path().to_str().unwrap().to_string();
+
+    for (batch, rate) in [(1usize, 100.0f64), (8, 400.0), (8, 2000.0)] {
+        let bundle = bundle.clone();
+        let server = Server::start(
+            move || {
+                let model = import_bundle(&bundle)?;
+                let program =
+                    compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, 10)?;
+                let apu = Apu::new(ApuConfig::default());
+                Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn Engine>)
+            },
+            BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(2) },
+        )?;
+        let mut load = SyntheticLoad::new(rate, 9);
+        let n = 128;
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            std::thread::sleep(load.next_gap());
+            rxs.push(server.submit(load.next_input(800))?);
+        }
+        for rx in rxs {
+            rx.recv()?;
+        }
+        let elapsed = t0.elapsed();
+        let mut m = server.shutdown()?;
+        println!(
+            "batch={batch} rate={rate:>6.0}req/s  ->  {:.0} req/s served, p50 {:.0}us p99 {:.0}us, mean batch {:.2}",
+            m.throughput_rps(elapsed),
+            m.latency_us.median(),
+            m.latency_us.p99(),
+            m.batch_sizes.mean()
+        );
+    }
+    Ok(())
+}

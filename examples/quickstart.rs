@@ -1,0 +1,50 @@
+//! Quickstart: generate a design instance, compile a tiny structured-pruned
+//! network, simulate an inference, and print the performance counters.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::generator::{DesignInstance, GeneratorConfig};
+use apu::sim::Apu;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Generate a design instance (the paper's Fig. 9 chip).
+    let instance = DesignInstance::generate(GeneratorConfig::default())?;
+    println!("generated instance:\n{}", instance.netlist());
+    println!("spec: {}\n", instance.spec_json());
+
+    // 2. Build a structured-pruned network (10 blocks → 10% density) and
+    //    compile it to an APU program with static routing schedules.
+    let layers = synthetic_packed_network(&[800, 400, 200, 10], 10, 4, 7)?;
+    let program = compile_packed_layers("quickstart-mlp", &layers, 0.15, 4, instance.config.n_pes)?;
+    println!(
+        "compiled {}: {} instructions, {} segments",
+        program.name,
+        program.insns.len(),
+        program.data.len()
+    );
+
+    // 3. Simulate one inference on the cycle-accurate machine.
+    let mut apu = Apu::new(instance.apu_config());
+    apu.load(&program)?;
+    let input: Vec<f32> = (0..800).map(|i| ((i % 15) as f32 - 7.0) * 0.1).collect();
+    let logits = apu.run(&input)?;
+    println!("logits: {logits:?}");
+
+    let st = apu.stats();
+    println!(
+        "cycles: {} total (route {}, compute {}, host {})",
+        st.total_cycles(),
+        st.route_cycles,
+        st.compute_cycles,
+        st.host_cycles
+    );
+    println!(
+        "energy: {:.2} nJ  ({:.1} TOPS/W on the datapath)",
+        st.total_pj() / 1e3,
+        st.normalized_ops() / st.total_pj()
+    );
+    Ok(())
+}

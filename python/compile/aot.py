@@ -1,0 +1,218 @@
+"""AOT compile path: JAX/Pallas -> HLO text + weights + test vectors.
+
+Runs ONCE at build time (`make artifacts`); python never appears on the
+request path. Outputs under artifacts/:
+
+  lenet_b{1,8}.hlo.txt   packed INT4 inference forward (Pallas block_fc,
+                         interpret=True) lowered to HLO *text* — the
+                         interchange format the rust runtime can parse
+                         (serialized protos from jax>=0.5 carry 64-bit ids
+                         that xla_extension 0.5.1 rejects).
+  block_fc_l1.hlo.txt    the standalone L1 kernel for one LeNet layer —
+                         runtime microbenchmarks load this directly.
+  lenet_model.{json,bin} the packed model for the rust compiler/simulator:
+                         INT4 weight codes, per-block scales, biases,
+                         routing permutations, layer graph.
+  testvec.{json,bin}     inputs + golden logits from the jnp packed
+                         forward; rust integration tests assert the
+                         cycle-accurate simulator and the PJRT runtime
+                         agree with these.
+  manifest.json          index of everything above.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+from .kernels import block_fc as bfc
+from .kernels import quant
+
+BITS = 4
+SEED = 0
+TRAIN_STEPS = int(os.environ.get("APU_AOT_TRAIN_STEPS", "500"))
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission (see /opt/xla-example/gen_hlo.py and DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default dump elides any constant with
+    # more than 10 elements as `{...}`, which the text parser reads back as
+    # zeros — the baked-in weights would silently vanish.
+    return comp.as_hlo_text(True)
+
+
+# ---------------------------------------------------------------------------
+# Binary tensor bundle: one .bin blob + JSON manifest of typed views.
+# (No npz on the rust side — the bundle reader there is ~80 lines of std.)
+# ---------------------------------------------------------------------------
+
+_DTYPES = {"f32": np.float32, "i8": np.int8, "u32": np.uint32, "i32": np.int32}
+
+
+class BundleWriter:
+    def __init__(self):
+        self.blob = bytearray()
+        self.tensors = {}
+
+    def add(self, name: str, arr: np.ndarray, dtype: str) -> None:
+        a = np.ascontiguousarray(arr.astype(_DTYPES[dtype]))
+        self.tensors[name] = {
+            "dtype": dtype,
+            "shape": list(a.shape),
+            "offset": len(self.blob),
+            "bytes": a.nbytes,
+        }
+        self.blob.extend(a.tobytes())
+
+    def write(self, json_path: str, bin_path: str, extra: dict | None = None) -> None:
+        doc = {"tensors": self.tensors, "bin": os.path.basename(bin_path)}
+        if extra:
+            doc.update(extra)
+        with open(bin_path, "wb") as f:
+            f.write(bytes(self.blob))
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Model export
+# ---------------------------------------------------------------------------
+
+
+def export_model(packed: dict, out_dir: str) -> dict:
+    """Write the packed model as INT4 codes + scales + permutations."""
+    bw_ = BundleWriter()
+    layers_meta = []
+    q = quant.qmax(BITS)
+    for li, layer in enumerate(packed["layers"]):
+        if layer["kind"] == "dense":
+            w = np.asarray(layer["w"])
+            scale = max(np.abs(w).max(), 1e-8) / q
+            bw_.add(f"l{li}.w_codes", np.round(w / scale), "i8")
+            bw_.add(f"l{li}.b", np.asarray(layer["b"]), "f32")
+            layers_meta.append(
+                {"kind": "dense", "dout": w.shape[0], "din": w.shape[1],
+                 "w_scale": float(scale), "relu": bool(layer["relu"])}
+            )
+            continue
+        s = layer["structure"]
+        wb = np.asarray(layer["w_blocks"])  # already on the INT4 grid
+        ws = np.asarray(layer["w_scale"])
+        codes = np.round(wb / ws[:, None, None])
+        assert np.abs(codes).max() <= q
+        bw_.add(f"l{li}.w_codes", codes, "i8")
+        bw_.add(f"l{li}.w_scale", ws, "f32")
+        bw_.add(f"l{li}.b", np.asarray(layer["b_blocks"]), "f32")
+        bw_.add(f"l{li}.out_scale", np.asarray(layer["out_scale"]), "f32")
+        bw_.add(f"l{li}.col_perm", s.col_permutation(), "u32")
+        bw_.add(f"l{li}.row_perm", s.row_permutation(), "u32")
+        layers_meta.append(
+            {"kind": "block", "nb": s.nb, "bh": s.bh, "bw": s.bw,
+             "dout": s.dout, "din": s.din, "relu": bool(layer["relu"])}
+        )
+    extra = {
+        "model": "lenet-300-100",
+        "bits": BITS,
+        "in_scale": packed["in_scale"],
+        "layers": layers_meta,
+    }
+    bw_.write(os.path.join(out_dir, "lenet_model.json"), os.path.join(out_dir, "lenet_model.bin"), extra)
+    return extra
+
+
+def export_testvec(packed: dict, x: np.ndarray, y: np.ndarray, out_dir: str) -> None:
+    logits = np.asarray(model.mlp_forward_infer(packed, jnp.asarray(x), use_pallas=False))
+    bw_ = BundleWriter()
+    bw_.add("x", x, "f32")
+    bw_.add("y", y, "i32")
+    bw_.add("logits", logits, "f32")
+    bw_.write(
+        os.path.join(out_dir, "testvec.json"),
+        os.path.join(out_dir, "testvec.bin"),
+        {"n": int(x.shape[0]), "accuracy": float((logits.argmax(-1) == y).mean())},
+    )
+
+
+def export_hlo(packed: dict, out_dir: str) -> list[str]:
+    files = []
+    for batch in (1, 8):
+        fn = lambda x: (model.mlp_forward_infer(packed, x, use_pallas=True, interpret=True),)
+        spec = jax.ShapeDtypeStruct((batch, 800), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        path = os.path.join(out_dir, f"lenet_b{batch}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        files.append(os.path.basename(path))
+
+    # Standalone L1 kernel (first masked layer) for runtime microbenches.
+    l0 = packed["layers"][0]
+    s = l0["structure"]
+    w = jnp.asarray(l0["w_blocks"])
+    b = jnp.asarray(l0["b_blocks"])
+    os_ = jnp.asarray(l0["out_scale"])
+
+    def kfn(a):
+        return (bfc.block_fc(w, a, b, os_, bits=BITS, relu=True, interpret=True),)
+
+    spec = jax.ShapeDtypeStruct((1, s.nb, s.bw), jnp.float32)
+    text = to_hlo_text(jax.jit(kfn).lower(spec))
+    path = os.path.join(out_dir, "block_fc_l1.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    files.append(os.path.basename(path))
+    return files
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=TRAIN_STEPS)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print(f"[aot] training LeNet-300-100 masked+INT4 ({args.steps} steps) ...")
+    r = train.train_model("lenet", True, steps=args.steps, seed=SEED)
+    print(f"[aot] test accuracy (QAT train graph): {r['test_accuracy']:.4f}")
+
+    print("[aot] packing + calibrating ...")
+    packed = model.mlp_pack(r["params"], r["x_test"][:256], bits=BITS)
+    logits = np.asarray(model.mlp_forward_infer(packed, jnp.asarray(r["x_test"]), use_pallas=False))
+    packed_acc = float((logits.argmax(-1) == r["y_test"]).mean())
+    print(f"[aot] test accuracy (packed INT4 graph): {packed_acc:.4f}")
+
+    meta = export_model(packed, args.out)
+    export_testvec(packed, r["x_test"][:32], r["y_test"][:32], args.out)
+    hlo_files = export_hlo(packed, args.out)
+
+    manifest = {
+        "model": meta["model"],
+        "bits": BITS,
+        "train_steps": args.steps,
+        "qat_accuracy": r["test_accuracy"],
+        "packed_accuracy": packed_acc,
+        "hlo": hlo_files,
+        "weights": ["lenet_model.json", "lenet_model.bin"],
+        "testvec": ["testvec.json", "testvec.bin"],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Synthetic-but-structured datasets for Table 1 (substitution log, DESIGN §2).
+
+We cannot ship MNIST/CIFAR/ImageNet in this environment, and Table 1's
+claim is a *delta* — masked+quantized training loses <1% accuracy vs dense
+training on the same task — which is observable on any learnable task of
+matching geometry. Each dataset is a deterministic Gaussian mixture:
+per-class templates (smooth random fields, so pixels correlate like image
+data) plus noise, with enough overlap that accuracy is not trivially 100%.
+
+Shapes mirror the paper's models:
+  lenet   : 784  (28x28x1),  10 classes  (LeNet-300-100)
+  deep    : 784  (28x28x1),  10 classes  (Deep MNIST convnet)
+  cifar   : 3072 (32x32x3),  10 classes  (CIFAR10 convnet)
+  alexnet : 3072 (32x32x3), 100 classes  (scaled AlexNet-style)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["Dataset", "make_dataset", "SPECS"]
+
+SPECS = {
+    "lenet": dict(dim=784, classes=10, image=(28, 28, 1)),
+    "deep": dict(dim=784, classes=10, image=(28, 28, 1)),
+    "cifar": dict(dim=3072, classes=10, image=(32, 32, 3)),
+    "alexnet": dict(dim=3072, classes=100, image=(32, 32, 3)),
+}
+
+
+@dataclass(frozen=True)
+class Dataset:
+    name: str
+    x_train: np.ndarray  # [n, dim] f32 in [-1, 1]
+    y_train: np.ndarray  # [n] int32
+    x_test: np.ndarray
+    y_test: np.ndarray
+    image: tuple  # (h, w, c) for conv models
+
+    @property
+    def dim(self) -> int:
+        return self.x_train.shape[1]
+
+    @property
+    def classes(self) -> int:
+        return int(self.y_train.max()) + 1
+
+
+def _smooth_templates(rng: np.random.Generator, classes: int, h: int, w: int, c: int) -> np.ndarray:
+    """Per-class smooth random fields: white noise blurred by box filters so
+    nearby pixels correlate, like real image statistics."""
+    t = rng.normal(size=(classes, h, w, c)).astype(np.float32)
+    for _ in range(3):  # separable 3x1 box blur passes
+        t = (np.roll(t, 1, axis=1) + t + np.roll(t, -1, axis=1)) / 3.0
+        t = (np.roll(t, 1, axis=2) + t + np.roll(t, -1, axis=2)) / 3.0
+    t /= np.abs(t).max(axis=(1, 2, 3), keepdims=True)
+    return t
+
+
+def make_dataset(
+    name: str,
+    n_train: int = 2048,
+    n_test: int = 512,
+    noise: float = 1.4,
+    seed: int = 0,
+) -> Dataset:
+    """Deterministic Gaussian-mixture classification task."""
+    spec = SPECS[name]
+    h, w, c = spec["image"]
+    classes = spec["classes"]
+    rng = np.random.default_rng(seed + hash(name) % (1 << 16))
+    templates = _smooth_templates(rng, classes, h, w, c)
+
+    def draw(n: int) -> tuple[np.ndarray, np.ndarray]:
+        y = rng.integers(0, classes, size=n).astype(np.int32)
+        x = templates[y] + noise * rng.normal(size=(n, h, w, c)).astype(np.float32)
+        return np.clip(x, -1.0, 1.0).reshape(n, -1).astype(np.float32), y
+
+    x_tr, y_tr = draw(n_train)
+    x_te, y_te = draw(n_test)
+    return Dataset(name=name, x_train=x_tr, y_train=y_tr, x_test=x_te, y_test=y_te, image=(h, w, c))

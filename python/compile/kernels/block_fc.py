@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: the structured-pruned fully-connected layer.
+
+This is the paper's compute hot-spot (§3.1): after structured pruning, a
+large FC layer is a set of ``nb`` exclusive dense blocks; each block is an
+independent mat-vec executed by one PE against weights resident in its
+local SRAM.
+
+TPU mapping (DESIGN.md §3 Hardware-Adaptation):
+
+* the grid iterates over blocks — grid step ``i`` *is* PE ``i``'s work;
+* ``BlockSpec`` pins block ``i``'s weights ``[bh, bw]`` in VMEM for the
+  whole step, reproducing the per-PE weight-SRAM locality (weights never
+  move; activations do — the paper's routing-network argument);
+* the MXU does the block mat-vec that the ASIC's 400-multiplier array +
+  9-stage adder tree does spatially; bias, ReLU and the end-of-tree INT-k
+  quantizer fuse into the same kernel, as in the Fig. 4a datapath.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO and the same artifact runs
+under the rust runtime. Numerics are validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+
+__all__ = ["block_fc", "quantize_activations"]
+
+
+def _block_fc_kernel(a_ref, w_ref, b_ref, s_ref, o_ref, *, bits, relu):
+    """One grid step = one PE processing its dense block.
+
+    a_ref: [batch, 1, bw] VMEM   (this block's slice of the activations)
+    w_ref: [1, bh, bw]   VMEM   (the PE's resident weight SRAM)
+    b_ref: [1, bh]
+    s_ref: [1, 1]                (per-block output quantization scale)
+    o_ref: [batch, 1, bh]
+    """
+    a = a_ref[:, 0, :]  # [batch, bw]
+    w = w_ref[0]  # [bh, bw]
+    # MXU work: [batch, bw] @ [bw, bh]. f32 accumulate == the ASIC's
+    # mixed-precision adder tree (quantization only at the end).
+    o = jax.lax.dot_general(
+        a,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o = o + b_ref[0][None, :]
+    if relu:
+        o = jnp.maximum(o, 0.0)
+    if bits is not None:
+        q = quant.qmax(bits)
+        s = s_ref[0, 0]
+        o = jnp.clip(jnp.round(o / s), -q, q) * s
+    o_ref[:, 0, :] = o
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "relu", "interpret"))
+def block_fc(
+    w: jnp.ndarray,  # [nb, bh, bw] packed dense blocks
+    a: jnp.ndarray,  # [batch, nb, bw] permuted activations
+    b: jnp.ndarray,  # [nb, bh] bias per block row
+    out_scale: jnp.ndarray,  # [nb] per-block output quant scale
+    *,
+    bits: int | None = 4,
+    relu: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:  # [batch, nb, bh]
+    """Structured-pruned FC layer over packed blocks (paper Fig. 2)."""
+    nb, bh, bw = w.shape
+    batch = a.shape[0]
+    if a.shape != (batch, nb, bw):
+        raise ValueError(f"activations {a.shape} mismatch blocks {w.shape}")
+    if b.shape != (nb, bh):
+        raise ValueError(f"bias {b.shape} mismatch blocks {w.shape}")
+    if out_scale.shape != (nb,):
+        raise ValueError(f"out_scale {out_scale.shape} != ({nb},)")
+
+    kernel = functools.partial(_block_fc_kernel, bits=bits, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((batch, 1, bw), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, bh, bw), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bh), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, 1, bh), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, nb, bh), jnp.float32),
+        interpret=interpret,
+    )(a, w, b, out_scale.reshape(nb, 1))
+
+
+def _quantize_kernel(x_ref, s_ref, o_ref, *, bits):
+    q = quant.qmax(bits)
+    s = s_ref[0]
+    o_ref[...] = jnp.clip(jnp.round(x_ref[...] / s), -q, q) * s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_activations(
+    x: jnp.ndarray,  # [batch, d]
+    scale: jnp.ndarray,  # [] scalar scale
+    *,
+    bits: int = 4,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Input-side activation quantizer (network ingress, paper §2.2)."""
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda: (0,) * x.ndim),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec(x.shape, lambda: (0,) * x.ndim),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x, scale.reshape(1))

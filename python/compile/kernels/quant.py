@@ -1,0 +1,80 @@
+"""INT-k fake quantization used across the stack (paper §2.2).
+
+The paper runs inference at 4-bit integer precision for weights and
+activations, with the quantizer applied at the *end* of the adder tree
+(mixed-precision accumulate, quantize once per output activation).
+
+We model this as symmetric uniform fake quantization: values are snapped
+to ``2**bits`` levels on a per-tensor (or per-block) scale, but carried in
+float so the same graph runs on CPU PJRT. The rust simulator implements
+the *true* integer datapath and must agree with this model exactly at the
+INT4 grid points — that equivalence is the cross-layer correctness signal
+(see rust/tests/integration_golden.rs).
+
+Straight-through estimators make the quantizer trainable (QAT, §2.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "qmax",
+    "scale_for",
+    "fake_quant",
+    "fake_quant_ste",
+    "quantize_int",
+    "dequantize_int",
+]
+
+
+def qmax(bits: int) -> int:
+    """Largest positive code of a symmetric signed ``bits``-bit grid.
+
+    4 bits -> 7 (codes -7..7; -8 unused to keep the grid symmetric, matching
+    the sign-magnitude multipliers in the PE datapath).
+    """
+    if bits < 2:
+        raise ValueError(f"quantization needs >=2 bits, got {bits}")
+    return (1 << (bits - 1)) - 1
+
+
+def scale_for(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Symmetric scale so that max|x| maps to the top code.
+
+    ``axis=None`` gives a per-tensor scale; an axis tuple gives per-block /
+    per-channel scales (kept on the non-reduced axes).
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    # Avoid a zero scale for all-zero tensors; any non-zero scale quantizes
+    # zeros to zeros.
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    return amax / qmax(bits)
+
+
+def quantize_int(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Float -> integer codes (round-to-nearest-even, saturating)."""
+    q = qmax(bits)
+    return jnp.clip(jnp.round(x / scale), -q, q).astype(jnp.int32)
+
+
+def dequantize_int(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jnp.ndarray, bits: int, scale: jnp.ndarray | None = None, axis=None) -> jnp.ndarray:
+    """Quantize-dequantize: snap ``x`` to its INT-k grid, stay in float."""
+    s = scale_for(x, bits, axis=axis) if scale is None else scale
+    q = qmax(bits)
+    return jnp.clip(jnp.round(x / s), -q, q) * s
+
+
+def fake_quant_ste(x: jnp.ndarray, bits: int, scale: jnp.ndarray | None = None, axis=None) -> jnp.ndarray:
+    """Fake quantization with a straight-through gradient (QAT §2.2).
+
+    Forward value is the quantized grid point; backward is identity, so the
+    quantizer is transparent to SGD while the loss sees INT-k numerics.
+    """
+    y = fake_quant(x, bits, scale=scale, axis=axis)
+    return x + jax.lax.stop_gradient(y - x)

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Two independent formulations of the structured-pruned FC layer:
+
+* :func:`block_fc_ref` — the *packed* formulation the accelerator executes:
+  each of ``nb`` dense blocks does an independent mat-vec (paper Fig. 1
+  right, Fig. 2), followed by bias, ReLU, and end-of-adder-tree INT-k
+  quantization (paper Fig. 4a datapath order).
+
+* :func:`masked_dense_ref` — the *unpacked* formulation the training graph
+  uses: a full masked matrix multiply (paper Eq. (1)).
+
+``pack/unpack`` tie the two together; test_kernel.py proves
+``pallas == block_fc_ref == permuted masked_dense_ref`` over randomized
+shapes, which is exactly the paper's claim that the permuted block-diagonal
+network computes the same function as the masked dense one.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import quant
+
+__all__ = ["block_fc_ref", "masked_dense_ref", "pack_blocks", "unpack_blocks"]
+
+
+def block_fc_ref(
+    w: jnp.ndarray,  # [nb, bh, bw] packed dense blocks
+    a: jnp.ndarray,  # [batch, nb, bw] permuted activations
+    b: jnp.ndarray,  # [nb, bh]
+    *,
+    bits: int = 4,
+    relu: bool = True,
+    out_scale: jnp.ndarray | None = None,  # [nb] per-block output scale
+) -> jnp.ndarray:  # [batch, nb, bh]
+    """Reference block-diagonal FC: per-block mat-vec + bias + ReLU + quant."""
+    # einsum over the block axis: each block's activations only ever meet
+    # that block's weights — the "exclusive and independent blocks" property.
+    o = jnp.einsum("nhw,bnw->bnh", w, a) + b[None, :, :]
+    if relu:
+        o = jnp.maximum(o, 0.0)
+    if bits is not None:
+        if out_scale is None:
+            o = quant.fake_quant(o, bits)
+        else:
+            o = quant.fake_quant(o, bits, scale=out_scale[None, :, None])
+    return o
+
+
+def masked_dense_ref(
+    w_full: jnp.ndarray,  # [dout, din] dense weights
+    mask: jnp.ndarray,  # [dout, din] binary block-structure mask (Eq. 1)
+    a: jnp.ndarray,  # [batch, din]
+    b: jnp.ndarray,  # [dout]
+    *,
+    bits: int = 4,
+    relu: bool = True,
+) -> jnp.ndarray:  # [batch, dout]
+    """Reference masked dense FC: (M ∘ W) a + b, then ReLU and quant."""
+    o = a @ (w_full * mask).T + b[None, :]
+    if relu:
+        o = jnp.maximum(o, 0.0)
+    if bits is not None:
+        o = quant.fake_quant(o, bits)
+    return o
+
+
+def pack_blocks(
+    w_full: jnp.ndarray,  # [dout, din]
+    row_groups: jnp.ndarray,  # [nb, bh] row indices per block
+    col_groups: jnp.ndarray,  # [nb, bw] col indices per block
+) -> jnp.ndarray:  # [nb, bh, bw]
+    """Extract each block's dense sub-matrix (paper Fig. 1 packing)."""
+    return w_full[row_groups[:, :, None], col_groups[:, None, :]]
+
+
+def unpack_blocks(
+    w_blocks: jnp.ndarray,  # [nb, bh, bw]
+    row_groups: jnp.ndarray,
+    col_groups: jnp.ndarray,
+    dout: int,
+    din: int,
+) -> jnp.ndarray:  # [dout, din] zeros outside the blocks
+    """Scatter packed blocks back into the (masked) full matrix."""
+    w = jnp.zeros((dout, din), dtype=w_blocks.dtype)
+    return w.at[row_groups[:, :, None], col_groups[:, None, :]].set(w_blocks)

@@ -1,0 +1,224 @@
+"""L2: the paper's network models in JAX, calling the L1 Pallas kernels.
+
+Two execution modes per model:
+
+* **train mode** — masked dense math (Eq. (1)): ``(M ∘ W) a + b`` with
+  fake-quant straight-through estimators, so gradients flow while the loss
+  sees INT4 numerics. Pruning is "molded" into training by construction —
+  the mask is applied every forward, so pruned weights never contribute
+  and their gradients are masked at the update (train.py).
+
+* **infer mode** — the packed block-diagonal form the APU executes: the
+  Pallas ``block_fc`` kernel over ``[nb, bh, bw]`` blocks with the routing
+  permutation applied to activations between layers. This is the graph
+  that ``aot.py`` lowers to HLO text for the rust runtime, and whose
+  numerics the rust cycle-accurate simulator must match.
+
+The equivalence of the two modes (test_model.py) is the paper's Fig. 1
+claim: permuted block-diagonal == masked dense.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import masks
+from .kernels import block_fc as bfc
+from .kernels import quant, ref
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Masked MLP (LeNet-300-100 and friends) — pure FC, the APU's home turf.
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(layer_dims: list[int], nb: int, seed: int) -> Params:
+    """Initialize a masked MLP: He-init dense weights + block structures.
+
+    The last layer is left dense (classifier heads are small and the paper
+    prunes the large FC layers; LeNet-300-100's 100->10 head is not
+    divisible into balanced blocks anyway).
+    """
+    key = jax.random.PRNGKey(seed)
+    layers = []
+    for li, (din, dout) in enumerate(zip(layer_dims[:-1], layer_dims[1:])):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (dout, din), jnp.float32) * jnp.sqrt(2.0 / din)
+        last = li == len(layer_dims) - 2
+        structure = None if last else masks.make_structure(dout, din, nb, seed=seed * 131 + li)
+        layers.append(
+            {
+                "w": w,
+                "b": jnp.zeros((dout,), jnp.float32),
+                "mask": None if structure is None else jnp.asarray(structure.mask()),
+                "structure": structure,
+            }
+        )
+    return {"layers": layers}
+
+
+def mlp_forward_train(params: Params, x: jnp.ndarray, *, bits: int | None = 4) -> jnp.ndarray:
+    """Masked dense forward with QAT fake-quant (train mode). Returns logits."""
+    h = x if bits is None else quant.fake_quant_ste(x, bits)
+    n = len(params["layers"])
+    for li, layer in enumerate(params["layers"]):
+        w, b = layer["w"], layer["b"]
+        if layer["mask"] is not None:
+            w = w * layer["mask"]
+        if bits is not None:
+            w = quant.fake_quant_ste(w, bits)
+        h = h @ w.T + b[None, :]
+        last = li == n - 1
+        if not last:
+            h = jnp.maximum(h, 0.0)
+            if bits is not None:
+                h = quant.fake_quant_ste(h, bits)
+    return h
+
+
+def mlp_pack(params: Params, calib_x: np.ndarray, *, bits: int = 4) -> Params:
+    """Freeze a trained masked MLP into the packed inference form.
+
+    Per masked layer: extract the dense blocks, fake-quantize weights on a
+    per-block scale, and calibrate the output-activation quantization scale
+    from a calibration batch (max |preact| per block over ``calib_x``) —
+    the 'quantizer at the end of the adder tree' of Fig. 4a.
+    """
+    packed_layers = []
+    h = quant.fake_quant(jnp.asarray(calib_x), bits)
+    in_scale = float(quant.scale_for(jnp.asarray(calib_x), bits))
+    n = len(params["layers"])
+    for li, layer in enumerate(params["layers"]):
+        w = np.asarray(layer["w"])
+        b = np.asarray(layer["b"])
+        s: masks.BlockStructure | None = layer["structure"]
+        last = li == n - 1
+        if s is None:
+            wq = np.asarray(quant.fake_quant(jnp.asarray(w), bits))
+            packed_layers.append({"kind": "dense", "w": wq, "b": b, "relu": not last})
+            h = jnp.maximum(h @ wq.T + b[None, :], 0.0) if not last else h @ wq.T + b[None, :]
+            continue
+        wb = np.asarray(ref.pack_blocks(jnp.asarray(w * np.asarray(layer["mask"])), jnp.asarray(s.row_groups), jnp.asarray(s.col_groups)))
+        w_scale = np.maximum(np.abs(wb).max(axis=(1, 2)), 1e-8) / quant.qmax(bits)  # [nb]
+        wbq = np.clip(np.round(wb / w_scale[:, None, None]), -quant.qmax(bits), quant.qmax(bits)) * w_scale[:, None, None]
+        # Calibrate the per-block output scale on the packed pre-activations.
+        a_pack = np.asarray(h)[:, s.col_permutation()].reshape(h.shape[0], s.nb, s.bw)
+        pre = np.einsum("nhw,bnw->bnh", wbq, a_pack) + b[s.row_groups][None, :, :]
+        post = np.maximum(pre, 0.0)
+        out_scale = np.maximum(np.abs(post).max(axis=(0, 2)), 1e-8) / quant.qmax(bits)  # [nb]
+        packed_layers.append(
+            {
+                "kind": "block",
+                "w_blocks": wbq.astype(np.float32),
+                "w_scale": w_scale.astype(np.float32),
+                "b_blocks": b[s.row_groups].astype(np.float32),
+                "out_scale": out_scale.astype(np.float32),
+                "structure": s,
+                "relu": True,
+            }
+        )
+        # Advance calibration activations through this layer (quantized).
+        o = ref.block_fc_ref(jnp.asarray(wbq), jnp.asarray(a_pack), jnp.asarray(b[s.row_groups]), bits=bits, relu=True, out_scale=jnp.asarray(out_scale))
+        flat = jnp.zeros((h.shape[0], s.dout))
+        h = flat.at[:, s.row_permutation()].set(np.asarray(o).reshape(h.shape[0], -1))
+    return {"layers": packed_layers, "in_scale": in_scale, "bits": bits}
+
+
+def mlp_forward_infer(packed: Params, x: jnp.ndarray, *, interpret: bool = True, use_pallas: bool = True) -> jnp.ndarray:
+    """Packed inference forward — the graph lowered to HLO for rust.
+
+    Activations are quantized at ingress, then each masked layer gathers
+    its block slices (the routing network's static schedule), runs the
+    Pallas block kernel, and scatters back (the next layer's gather folds
+    into one permutation at AOT time via XLA fusion).
+    """
+    bits = packed["bits"]
+    in_scale = jnp.float32(packed["in_scale"])
+    if use_pallas:
+        h = bfc.quantize_activations(x, in_scale, bits=bits, interpret=interpret)
+    else:
+        h = quant.fake_quant(x, bits, scale=in_scale)
+    for layer in packed["layers"]:
+        if layer["kind"] == "dense":
+            h = h @ jnp.asarray(layer["w"]).T + jnp.asarray(layer["b"])[None, :]
+            if layer["relu"]:
+                h = jnp.maximum(h, 0.0)
+            continue
+        s: masks.BlockStructure = layer["structure"]
+        a = h[:, jnp.asarray(s.col_permutation())].reshape(h.shape[0], s.nb, s.bw)
+        if use_pallas:
+            o = bfc.block_fc(
+                jnp.asarray(layer["w_blocks"]),
+                a,
+                jnp.asarray(layer["b_blocks"]),
+                jnp.asarray(layer["out_scale"]),
+                bits=bits,
+                relu=layer["relu"],
+                interpret=interpret,
+            )
+        else:
+            o = ref.block_fc_ref(
+                jnp.asarray(layer["w_blocks"]),
+                a,
+                jnp.asarray(layer["b_blocks"]),
+                bits=bits,
+                relu=layer["relu"],
+                out_scale=jnp.asarray(layer["out_scale"]),
+            )
+        flat = jnp.zeros((h.shape[0], s.dout))
+        h = flat.at[:, jnp.asarray(s.row_permutation())].set(o.reshape(h.shape[0], -1))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Small convnets (Deep-MNIST / CIFAR / AlexNet-style) — dense quantized convs
+# + masked FC head. The paper prunes FC layers; convs map to the APU via
+# unrolling / group conv (§4.4.3), which the rust compiler handles at the
+# shape level.
+# ---------------------------------------------------------------------------
+
+
+def convnet_init(image: tuple[int, int, int], classes: int, channels: list[int], fc_dim: int, nb: int, seed: int) -> Params:
+    """Conv stack (3x3, stride-2 downsampling) + masked FC + dense head."""
+    h, w, c = image
+    key = jax.random.PRNGKey(seed)
+    convs = []
+    cin = c
+    for cout in channels:
+        key, k = jax.random.split(key)
+        convs.append(
+            {
+                "w": jax.random.normal(k, (3, 3, cin, cout), jnp.float32) * jnp.sqrt(2.0 / (9 * cin)),
+                "b": jnp.zeros((cout,), jnp.float32),
+            }
+        )
+        cin = cout
+        h, w = (h + 1) // 2, (w + 1) // 2
+    flat = h * w * cin
+    # Pad the flattened dim handling is avoided by construction: image dims
+    # are powers-of-two-ish and we choose fc_dim divisible by nb.
+    key, k = jax.random.split(key)
+    head = mlp_init([flat, fc_dim, classes], nb, seed=seed + 7)
+    return {"convs": convs, "head": head, "image": image, "flat": flat}
+
+
+def convnet_forward_train(params: Params, x: jnp.ndarray, *, bits: int | None = 4) -> jnp.ndarray:
+    h_, w_, c_ = params["image"]
+    h = x.reshape(x.shape[0], h_, w_, c_)
+    if bits is not None:
+        h = quant.fake_quant_ste(h, bits)
+    for conv in params["convs"]:
+        w = conv["w"] if bits is None else quant.fake_quant_ste(conv["w"], bits)
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=(2, 2), padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        h = jnp.maximum(h + conv["b"][None, None, None, :], 0.0)
+        if bits is not None:
+            h = quant.fake_quant_ste(h, bits)
+    h = h.reshape(h.shape[0], -1)
+    return mlp_forward_train(params["head"], h, bits=bits)

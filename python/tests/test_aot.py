@@ -1,0 +1,59 @@
+"""AOT path: bundle format round-trip, HLO text emission, manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_bundle_roundtrip(tmp_path):
+    bw = aot.BundleWriter()
+    rng = np.random.default_rng(0)
+    f = rng.normal(size=(3, 4)).astype(np.float32)
+    i = rng.integers(-7, 8, size=(5,)).astype(np.int8)
+    u = np.arange(7, dtype=np.uint32)
+    bw.add("f", f, "f32")
+    bw.add("i", i, "i8")
+    bw.add("u", u, "u32")
+    jp, bp = str(tmp_path / "m.json"), str(tmp_path / "m.bin")
+    bw.write(jp, bp, {"hello": 1})
+    doc = json.load(open(jp))
+    blob = open(bp, "rb").read()
+    assert doc["hello"] == 1
+    for name, want in [("f", f), ("i", i), ("u", u)]:
+        t = doc["tensors"][name]
+        got = np.frombuffer(blob[t["offset"] : t["offset"] + t["bytes"]], dtype=aot._DTYPES[t["dtype"]]).reshape(t["shape"])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_hlo_text_emission():
+    def fn(x):
+        return (jnp.tanh(x) @ x.T,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((3, 3), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[3,3]" in text
+
+
+def test_export_model_and_testvec(tmp_path):
+    p = model.mlp_init([40, 30, 20, 10], nb=5, seed=1)
+    x = np.random.default_rng(0).normal(size=(8, 40)).astype(np.float32)
+    packed = model.mlp_pack(p, x[:4])
+    meta = aot.export_model(packed, str(tmp_path))
+    assert [l["kind"] for l in meta["layers"]] == ["block", "block", "dense"]
+    doc = json.load(open(tmp_path / "lenet_model.json"))
+    assert doc["bits"] == 4
+    # codes within INT4 range
+    blob = open(tmp_path / "lenet_model.bin", "rb").read()
+    t = doc["tensors"]["l0.w_codes"]
+    codes = np.frombuffer(blob[t["offset"] : t["offset"] + t["bytes"]], dtype=np.int8)
+    assert np.abs(codes).max() <= 7
+    y = np.random.default_rng(1).integers(0, 10, size=8).astype(np.int32)
+    aot.export_testvec(packed, x, y, str(tmp_path))
+    tv = json.load(open(tmp_path / "testvec.json"))
+    assert tv["n"] == 8

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps block counts, block dims, batch, bit widths, and ReLU
+on/off; every case asserts exact agreement (interpret-mode Pallas and the
+jnp oracle share f32 arithmetic, so tolerance is zero)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import masks
+from compile.kernels import block_fc as bfc
+from compile.kernels import quant, ref
+
+
+def _case(rng, nb, bh, bw, batch):
+    w = rng.normal(size=(nb, bh, bw)).astype(np.float32)
+    a = rng.normal(size=(batch, nb, bw)).astype(np.float32)
+    b = rng.normal(size=(nb, bh)).astype(np.float32)
+    pre = np.einsum("nhw,bnw->bnh", w, a) + b[None]
+    s = (np.maximum(np.abs(pre).max(axis=(0, 2)), 1e-6) / 7).astype(np.float32)
+    return map(jnp.asarray, (w, a, b, s))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    bh=st.integers(1, 16),
+    bw=st.integers(1, 16),
+    batch=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_block_fc_matches_ref(nb, bh, bw, batch, seed):
+    w, a, b, s = _case(np.random.default_rng(seed), nb, bh, bw, batch)
+    got = bfc.block_fc(w, a, b, s, bits=4, relu=True)
+    want = ref.block_fc_ref(w, a, b, bits=4, relu=True, out_scale=s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_block_fc_bits_relu_modes(bits, relu, seed):
+    w, a, b, s = _case(np.random.default_rng(seed), 3, 5, 7, 2)
+    got = bfc.block_fc(w, a, b, s, bits=bits, relu=relu)
+    want = ref.block_fc_ref(w, a, b, bits=bits, relu=relu, out_scale=s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_block_fc_no_quant():
+    w, a, b, s = _case(np.random.default_rng(0), 4, 8, 8, 2)
+    got = bfc.block_fc(w, a, b, s, bits=None, relu=False)
+    want = ref.block_fc_ref(w, a, b, bits=None, relu=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_block_fc_shape_validation():
+    import pytest
+
+    w = jnp.zeros((2, 3, 4))
+    a = jnp.zeros((1, 2, 5))  # bw mismatch
+    b = jnp.zeros((2, 3))
+    s = jnp.ones((2,))
+    with pytest.raises(ValueError):
+        bfc.block_fc(w, a, b, s)
+    with pytest.raises(ValueError):
+        bfc.block_fc(w, jnp.zeros((1, 2, 4)), jnp.zeros((2, 9)), s)
+    with pytest.raises(ValueError):
+        bfc.block_fc(w, jnp.zeros((1, 2, 4)), b, jnp.ones((3,)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.integers(1, 6),
+    bh=st.integers(1, 8),
+    bw=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_packed_equals_masked_dense(nb, bh, bw, seed):
+    """Fig. 1 equivalence: the permuted block pipeline computes exactly the
+    masked dense layer (no quantization so scales can't hide errors)."""
+    rng = np.random.default_rng(seed)
+    s = masks.make_structure(nb * bh, nb * bw, nb, seed)
+    w_full = rng.normal(size=(s.dout, s.din)).astype(np.float32)
+    a_flat = rng.normal(size=(2, s.din)).astype(np.float32)
+    bias = rng.normal(size=(s.dout,)).astype(np.float32)
+
+    dense = ref.masked_dense_ref(
+        jnp.asarray(w_full), jnp.asarray(s.mask()), jnp.asarray(a_flat), jnp.asarray(bias),
+        bits=None, relu=True,
+    )
+
+    wb = ref.pack_blocks(jnp.asarray(w_full * s.mask()), jnp.asarray(s.row_groups), jnp.asarray(s.col_groups))
+    a_pack = jnp.asarray(a_flat)[:, jnp.asarray(s.col_permutation())].reshape(2, nb, bw)
+    b_pack = jnp.asarray(bias)[jnp.asarray(s.row_groups)]
+    o = bfc.block_fc(wb, a_pack, b_pack, jnp.ones((nb,)), bits=None, relu=True)
+    flat = jnp.zeros((2, s.dout)).at[:, jnp.asarray(s.row_permutation())].set(o.reshape(2, -1))
+    np.testing.assert_allclose(np.asarray(flat), np.asarray(dense), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 8]))
+def test_quantize_activations_kernel(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    s = quant.scale_for(x, bits)
+    got = bfc.quantize_activations(x, s, bits=bits)
+    want = quant.fake_quant(x, bits, scale=s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(7)
+    s = masks.make_structure(12, 20, 4, 3)
+    w = rng.normal(size=(12, 20)).astype(np.float32) * s.mask()
+    wb = ref.pack_blocks(jnp.asarray(w), jnp.asarray(s.row_groups), jnp.asarray(s.col_groups))
+    back = ref.unpack_blocks(wb, jnp.asarray(s.row_groups), jnp.asarray(s.col_groups), 12, 20)
+    np.testing.assert_array_equal(np.asarray(back), w)

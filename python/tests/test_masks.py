@@ -1,0 +1,68 @@
+"""Property tests for structured-pruning mask generation (paper §2.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import masks
+
+
+@st.composite
+def structures(draw):
+    nb = draw(st.integers(1, 8))
+    bh = draw(st.integers(1, 12))
+    bw = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2**16))
+    return masks.make_structure(nb * bh, nb * bw, nb, seed)
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=structures())
+def test_groups_partition_indices(s):
+    """Every row/col index appears in exactly one group: blocks are
+    exclusive (no weight shared between PEs)."""
+    assert sorted(s.row_groups.reshape(-1).tolist()) == list(range(s.dout))
+    assert sorted(s.col_groups.reshape(-1).tolist()) == list(range(s.din))
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=structures())
+def test_mask_density_is_one_over_nb(s):
+    m = s.mask()
+    assert m.sum() == s.dout * s.din / s.nb
+    assert masks.mask_density(s) == pytest.approx(1.0 / s.nb)
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=structures())
+def test_permuted_mask_is_block_diagonal(s):
+    """After row/col permutation the mask is exactly block-diagonal —
+    the paper's Fig. 1 packing property."""
+    m = s.mask()[s.row_permutation()][:, s.col_permutation()]
+    for g in range(s.nb):
+        r0, c0 = g * s.bh, g * s.bw
+        block = m[r0 : r0 + s.bh, c0 : c0 + s.bw]
+        assert np.all(block == 1.0)
+    assert m.sum() == s.nb * s.bh * s.bw  # nothing outside the diagonal
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=structures())
+def test_permutations_are_bijective(s):
+    for p, n in [(s.col_permutation(), s.din), (s.row_permutation(), s.dout)]:
+        assert sorted(p.tolist()) == list(range(n))
+
+
+def test_rejects_indivisible_dims():
+    with pytest.raises(ValueError):
+        masks.make_structure(10, 12, 3, 0)
+
+
+def test_deterministic_by_seed():
+    a = masks.make_structure(20, 30, 5, seed=42)
+    b = masks.make_structure(20, 30, 5, seed=42)
+    assert np.array_equal(a.row_groups, b.row_groups)
+    assert np.array_equal(a.col_groups, b.col_groups)
+    c = masks.make_structure(20, 30, 5, seed=43)
+    assert not (np.array_equal(a.row_groups, c.row_groups) and np.array_equal(a.col_groups, c.col_groups))

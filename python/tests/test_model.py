@@ -1,0 +1,77 @@
+"""L2 model tests: train/infer mode equivalence, packing, convnets."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import masks, model
+
+
+@pytest.fixture(scope="module")
+def small_mlp():
+    return model.mlp_init([40, 30, 20, 10], nb=5, seed=1)
+
+
+def test_init_shapes(small_mlp):
+    layers = small_mlp["layers"]
+    assert layers[0]["w"].shape == (30, 40)
+    assert layers[1]["w"].shape == (20, 30)
+    assert layers[2]["w"].shape == (10, 20)
+    assert layers[2]["structure"] is None  # head stays dense
+    assert layers[0]["structure"].nb == 5
+
+
+def test_forward_train_shapes(small_mlp):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(6, 40)).astype(np.float32))
+    y = model.mlp_forward_train(small_mlp, x)
+    assert y.shape == (6, 10)
+    y32 = model.mlp_forward_train(small_mlp, x, bits=None)
+    assert y32.shape == (6, 10)
+    assert not np.allclose(np.asarray(y), np.asarray(y32))  # quant does something
+
+
+def test_masked_weights_do_not_leak(small_mlp):
+    """Zeroing all in-mask weights must zero the layer output: nothing
+    outside the mask contributes."""
+    layers = [dict(l) for l in small_mlp["layers"]]
+    l0 = layers[0]
+    w_off_mask = np.asarray(l0["w"]) * (1 - np.asarray(l0["mask"]))
+    params = {"layers": [{**l0, "w": jnp.asarray(w_off_mask)}] + layers[1:]}
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 40)).astype(np.float32))
+    h = model.mlp_forward_train({"layers": params["layers"][:1]}, x, bits=None)
+    # single masked layer, no-relu head semantics: output is exactly bias
+    np.testing.assert_allclose(np.asarray(h), np.zeros((3, 30)) + np.asarray(l0["b"]), atol=1e-6)
+
+
+def test_pack_infer_matches_pallas_and_jnp(small_mlp):
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(8, 40)).astype(np.float32)
+    packed = model.mlp_pack(small_mlp, x[:4])
+    y_ref = model.mlp_forward_infer(packed, jnp.asarray(x), use_pallas=False)
+    y_pal = model.mlp_forward_infer(packed, jnp.asarray(x), use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_ref))
+    assert y_ref.shape == (8, 10)
+
+
+def test_packed_weights_on_int4_grid(small_mlp):
+    packed = model.mlp_pack(small_mlp, np.random.default_rng(0).normal(size=(4, 40)).astype(np.float32))
+    for layer in packed["layers"]:
+        if layer["kind"] != "block":
+            continue
+        codes = layer["w_blocks"] / layer["w_scale"][:, None, None]
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+        assert np.abs(codes).max() <= 7 + 1e-4
+
+
+def test_convnet_forward():
+    p = model.convnet_init((8, 8, 1), 10, [4, 8], 32, nb=4, seed=0)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 64)).astype(np.float32))
+    y = model.convnet_forward_train(p, x)
+    assert y.shape == (2, 10)
+    y32 = model.convnet_forward_train(p, x, bits=None)
+    assert y32.shape == (2, 10)
+
+
+def test_convnet_flat_dim_divisible():
+    p = model.convnet_init((28, 28, 1), 10, [16, 32], 128, nb=8, seed=0)
+    assert p["flat"] % 8 == 0

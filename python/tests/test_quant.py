@@ -1,0 +1,96 @@
+"""Unit + property tests for the INT-k fake quantizer (paper §2.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import quant
+
+
+def test_qmax_values():
+    assert quant.qmax(4) == 7
+    assert quant.qmax(8) == 127
+    assert quant.qmax(16) == 32767
+    assert quant.qmax(2) == 1
+
+
+def test_qmax_rejects_degenerate():
+    with pytest.raises(ValueError):
+        quant.qmax(1)
+
+
+def test_zero_tensor_stays_zero():
+    x = jnp.zeros((4, 4))
+    assert np.all(np.asarray(quant.fake_quant(x, 4)) == 0.0)
+
+
+def test_grid_levels_count():
+    x = jnp.asarray(np.linspace(-1, 1, 10001, dtype=np.float32))
+    y = np.unique(np.asarray(quant.fake_quant(x, 4)))
+    assert len(y) == 15  # codes -7..7
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 64),
+)
+def test_idempotent(bits, seed, n):
+    """quant(quant(x)) == quant(x): grid points are fixed points."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32) * 10)
+    s = quant.scale_for(x, bits)
+    y1 = quant.fake_quant(x, bits, scale=s)
+    y2 = quant.fake_quant(y1, bits, scale=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([3, 4, 8]), seed=st.integers(0, 2**16))
+def test_error_bounded_by_half_lsb(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-5, 5, size=(128,)).astype(np.float32))
+    s = quant.scale_for(x, bits)
+    y = quant.fake_quant(x, bits, scale=s)
+    assert float(jnp.abs(y - x).max()) <= float(s) / 2 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_int_roundtrip_matches_fake_quant(bits, seed):
+    """Integer codes + dequant == fake-quant: the rust integer datapath
+    and the float HLO graph see the same numbers."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    s = quant.scale_for(x, bits)
+    codes = quant.quantize_int(x, s, bits)
+    assert int(jnp.abs(codes).max()) <= quant.qmax(bits)
+    np.testing.assert_allclose(
+        np.asarray(quant.dequantize_int(codes, s)),
+        np.asarray(quant.fake_quant(x, bits, scale=s)),
+        rtol=0, atol=0,
+    )
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant_ste(x, 4)))(jnp.asarray([0.3, -0.7, 0.11]))
+    np.testing.assert_allclose(np.asarray(g), np.ones(3), atol=0)
+
+
+def test_per_axis_scale_shape():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(5, 8, 3)).astype(np.float32))
+    s = quant.scale_for(x, 4, axis=(1, 2))
+    assert s.shape == (5, 1, 1)
+    y = quant.fake_quant(x, 4, axis=(1, 2))
+    assert y.shape == x.shape
+
+
+def test_monotone_on_grid():
+    """Quantization preserves order (weak monotonicity)."""
+    x = jnp.asarray(np.sort(np.random.default_rng(3).normal(size=256)).astype(np.float32))
+    y = np.asarray(quant.fake_quant(x, 4))
+    assert np.all(np.diff(y) >= 0)

@@ -1,0 +1,8 @@
+//! Baseline accelerator and processor models the paper compares against
+//! (§5, Fig. 15, Figs. 13–14 speedup denominators).
+
+pub mod dense;
+pub mod eie;
+
+pub use dense::{cpu_gpu_ratios, DenseSystolicModel};
+pub use eie::EieModel;

@@ -1,0 +1,205 @@
+//! Code emission: packed layers → executable APU program.
+
+use anyhow::{bail, Result};
+
+use crate::isa::{DataSegment, Insn, Program};
+use crate::pruning::{BlockStructure, PackedLayer};
+use crate::sched::{build_demand, schedule_routes};
+use crate::util::rng::Rng;
+
+/// Split the network input stream into `n` chunk blocks (the first
+/// layer's routing sources — the host streams input chunks onto the
+/// crossbar wires).
+fn input_chunks(din: usize, n: usize) -> Vec<Vec<u32>> {
+    let n = n.min(din).max(1);
+    (0..n)
+        .map(|g| {
+            let lo = g * din / n;
+            let hi = (g + 1) * din / n;
+            (lo as u32..hi as u32).collect()
+        })
+        .collect()
+}
+
+/// Merge producer groups onto `n_pes` crossbar wires (folded layers own
+/// more blocks than wires; wire = block mod n_pes).
+fn merge_by_wire(groups: &[Vec<u32>], n_pes: usize) -> Vec<Vec<u32>> {
+    if groups.len() <= n_pes {
+        return groups.to_vec();
+    }
+    let mut merged = vec![Vec::new(); n_pes];
+    for (g, grp) in groups.iter().enumerate() {
+        merged[g % n_pes].extend_from_slice(grp);
+    }
+    merged
+}
+
+/// Compile a stack of packed FC layers into an executable program.
+///
+/// Layers run back to back on the PE array; the ingress is quantized on
+/// the host; each layer gets a static routing schedule. Layers with more
+/// blocks than PEs are folded into waves (§4.4.3-II) sharing a `layer` id.
+pub fn compile_packed_layers(
+    name: &str,
+    layers: &[PackedLayer],
+    in_scale: f32,
+    bits: u32,
+    n_pes: usize,
+) -> Result<Program> {
+    if layers.is_empty() {
+        bail!("no layers to compile");
+    }
+    for pair in layers.windows(2) {
+        if pair[1].structure.din != pair[0].structure.dout {
+            bail!(
+                "layer dims mismatch: {} out vs {} in",
+                pair[0].structure.dout,
+                pair[1].structure.din
+            );
+        }
+    }
+    let mut p = Program {
+        name: name.to_string(),
+        din: layers[0].structure.din,
+        dout: layers.last().unwrap().structure.dout,
+        ..Default::default()
+    };
+
+    // Ingress quantizer on the host core.
+    let q_seg = p.push_data(DataSegment::F32(vec![in_scale, bits as f32]));
+    p.insns.push(Insn::HostOp { op: crate::isa::HostOpKind::Quantize, seg: q_seg });
+
+    let mut prev_groups: Option<Vec<Vec<u32>>> = None; // producer groups
+    for (li, layer) in layers.iter().enumerate() {
+        let s = &layer.structure;
+        let producers = match &prev_groups {
+            None => input_chunks(s.din, n_pes),
+            Some(g) => merge_by_wire(g, n_pes),
+        };
+        let (bh, bw) = (s.bh(), s.bw());
+        // Fold into waves of at most n_pes blocks.
+        for (wi, wave) in (0..s.nb).collect::<Vec<_>>().chunks(n_pes).enumerate() {
+            let wave_nb = wave.len();
+            p.insns.push(Insn::ConfigLayer {
+                layer: li as u16,
+                nb: wave_nb as u16,
+                bh: bh as u16,
+                bw: bw as u16,
+                bits: layer.bits as u8,
+                relu: layer.relu,
+            });
+            for (pe, &g) in wave.iter().enumerate() {
+                let w_seg = p.push_data(DataSegment::I8(layer.codes[g].clone()));
+                let b_seg = p.push_data(DataSegment::F32(layer.bias[g].clone()));
+                let s_seg = p.push_data(DataSegment::F32(vec![layer.w_scale[g], layer.out_scale[g]]));
+                p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_seg });
+                p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_seg });
+                p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_seg });
+            }
+            // Static routing schedule for this wave's consumers.
+            let consumers: Vec<Vec<u32>> = wave.iter().map(|&g| s.col_groups[g].clone()).collect();
+            let demand = build_demand(&producers, &consumers)?;
+            let sched = schedule_routes(&demand)?;
+            sched.verify(&demand)?;
+            let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
+            p.insns.push(Insn::Route { seg: r_seg, from_input: li == 0 });
+            p.insns.push(Insn::Compute { rows: bh as u16 });
+            // Scatter segment: [dout, wave row indices...]
+            let mut scat = Vec::with_capacity(1 + wave_nb * bh);
+            scat.push(s.dout as u32);
+            for &g in wave {
+                scat.extend_from_slice(&s.row_groups[g]);
+            }
+            let sc_seg = p.push_data(DataSegment::U32(scat));
+            p.insns.push(Insn::Scatter { seg: sc_seg });
+            let _ = wi;
+        }
+        prev_groups = Some(s.row_groups.clone());
+    }
+    p.insns.push(Insn::Halt);
+    p.validate()?;
+    Ok(p)
+}
+
+/// Synthesize a random packed FC network (figure benches and property
+/// tests): `dims = [din, h1, ..., dout]`, `nb` blocks per layer.
+pub fn synthetic_packed_network(dims: &[usize], nb: usize, bits: u32, seed: u64) -> Result<Vec<PackedLayer>> {
+    if dims.len() < 2 {
+        bail!("need at least one layer");
+    }
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for (li, pair) in dims.windows(2).enumerate() {
+        let (din, dout) = (pair[0], pair[1]);
+        let s = BlockStructure::random(dout, din, nb, &mut rng)?;
+        let w: Vec<f32> = (0..dout * din).map(|_| rng.normal() * (2.0 / din as f32).sqrt()).collect();
+        let b: Vec<f32> = (0..dout).map(|_| rng.normal() * 0.05).collect();
+        let out_scale: Vec<f32> = (0..nb).map(|_| 0.1 + rng.f64() as f32 * 0.4).collect();
+        let relu = li + 1 < dims.len() - 1 || dims.len() == 2;
+        layers.push(PackedLayer::quantize_from(s, bits, &w, &b, out_scale, relu)?);
+    }
+    Ok(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compiles_and_validates() {
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, 7).unwrap();
+        let p = compile_packed_layers("t", &layers, 0.1, 4, 4).unwrap();
+        assert_eq!(p.din, 16);
+        assert_eq!(p.dout, 12);
+        // one wave per layer: 2 ConfigLayers
+        let cfgs = p.insns.iter().filter(|i| matches!(i, Insn::ConfigLayer { .. })).count();
+        assert_eq!(cfgs, 2);
+    }
+
+    #[test]
+    fn folding_emits_waves() {
+        let layers = synthetic_packed_network(&[16, 20], 4, 4, 8).unwrap();
+        let p = compile_packed_layers("t", &layers, 0.1, 4, 2).unwrap();
+        let cfgs: Vec<_> = p
+            .insns
+            .iter()
+            .filter_map(|i| match i {
+                Insn::ConfigLayer { layer, nb, .. } => Some((*layer, *nb)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cfgs, vec![(0, 2), (0, 2)]); // 4 blocks → 2 waves of 2
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let l1 = synthetic_packed_network(&[16, 20], 4, 4, 9).unwrap();
+        let l2 = synthetic_packed_network(&[24, 12], 4, 4, 10).unwrap();
+        let stack: Vec<_> = l1.into_iter().chain(l2).collect();
+        assert!(compile_packed_layers("t", &stack, 0.1, 4, 4).is_err());
+    }
+
+    #[test]
+    fn input_chunks_partition() {
+        let ch = input_chunks(17, 4);
+        let all: Vec<u32> = ch.iter().flatten().copied().collect();
+        assert_eq!(all, (0..17).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn merge_by_wire_unions() {
+        let groups = vec![vec![0], vec![1], vec![2], vec![3], vec![4]];
+        let merged = merge_by_wire(&groups, 2);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0], vec![0, 2, 4]);
+        assert_eq!(merged[1], vec![1, 3]);
+    }
+
+    #[test]
+    fn disassembly_is_stable() {
+        let layers = synthetic_packed_network(&[8, 8], 2, 4, 11).unwrap();
+        let p = compile_packed_layers("t", &layers, 0.1, 4, 2).unwrap();
+        let asm = p.disassemble();
+        assert!(asm.contains("cfg.layer") && asm.contains("route") && asm.ends_with("halt\n"));
+    }
+}

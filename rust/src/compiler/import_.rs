@@ -1,0 +1,118 @@
+//! Import the python-exported model bundle (the TF/Caffe-parser analogue
+//! of paper Fig. 8: "parsing the model to extract the activation and
+//! weight parameters").
+
+use anyhow::{bail, Context, Result};
+
+use crate::pruning::{BlockStructure, PackedLayer};
+use crate::util::bundle::Bundle;
+use crate::util::json::Json;
+
+/// The imported model: packed layers + ingress scale, ready for
+/// [`crate::compiler::emit::compile_packed_layers`].
+#[derive(Debug)]
+pub struct ImportedModel {
+    pub name: String,
+    pub bits: u32,
+    pub in_scale: f32,
+    pub layers: Vec<PackedLayer>,
+}
+
+/// Load `lenet_model.json`-style bundles.
+pub fn import_bundle(manifest_path: &str) -> Result<ImportedModel> {
+    let b = Bundle::load(manifest_path)?;
+    let bits = b.manifest.get("bits").and_then(Json::as_usize).context("manifest missing bits")? as u32;
+    let in_scale = b.manifest.get("in_scale").and_then(Json::as_f64).context("manifest missing in_scale")? as f32;
+    let name = b.manifest.get("model").and_then(Json::as_str).unwrap_or("imported").to_string();
+    let layer_meta = b.manifest.get("layers").and_then(Json::as_arr).context("manifest missing layers")?;
+
+    let mut layers = Vec::new();
+    for (li, meta) in layer_meta.iter().enumerate() {
+        let kind = meta.get("kind").and_then(Json::as_str).context("layer missing kind")?;
+        let relu = meta.get("relu").and_then(Json::as_bool).unwrap_or(true);
+        match kind {
+            "block" => {
+                let nb = meta.get("nb").and_then(Json::as_usize).context("nb")?;
+                let dout = meta.get("dout").and_then(Json::as_usize).context("dout")?;
+                let din = meta.get("din").and_then(Json::as_usize).context("din")?;
+                let codes_flat = b.tensor(&format!("l{li}.w_codes"))?.as_i8()?;
+                let w_scale = b.tensor(&format!("l{li}.w_scale"))?.as_f32()?.to_vec();
+                let bias_flat = b.tensor(&format!("l{li}.b"))?.as_f32()?;
+                let out_scale = b.tensor(&format!("l{li}.out_scale"))?.as_f32()?.to_vec();
+                let col_perm = b.tensor(&format!("l{li}.col_perm"))?.as_u32()?;
+                let row_perm = b.tensor(&format!("l{li}.row_perm"))?.as_u32()?;
+                let structure = BlockStructure::from_flat_perms(dout, din, nb, row_perm, col_perm)?;
+                let (bh, bw) = (structure.bh(), structure.bw());
+                if codes_flat.len() != nb * bh * bw {
+                    bail!("layer {li}: codes len {} != {nb}x{bh}x{bw}", codes_flat.len());
+                }
+                if bias_flat.len() != nb * bh {
+                    bail!("layer {li}: bias len {} != {nb}x{bh}", bias_flat.len());
+                }
+                let codes: Vec<Vec<i8>> = codes_flat.chunks(bh * bw).map(|c| c.to_vec()).collect();
+                let bias: Vec<Vec<f32>> = bias_flat.chunks(bh).map(|c| c.to_vec()).collect();
+                layers.push(PackedLayer { structure, bits, codes, w_scale, bias, out_scale, relu });
+            }
+            "dense" => {
+                // Small unstructured head: one block spanning the layer,
+                // quantizer bypassed (out_scale = 0).
+                let dout = meta.get("dout").and_then(Json::as_usize).context("dout")?;
+                let din = meta.get("din").and_then(Json::as_usize).context("din")?;
+                let w_scale = meta.get("w_scale").and_then(Json::as_f64).context("w_scale")? as f32;
+                let codes = b.tensor(&format!("l{li}.w_codes"))?.as_i8()?.to_vec();
+                let bias = b.tensor(&format!("l{li}.b"))?.as_f32()?.to_vec();
+                if codes.len() != dout * din {
+                    bail!("layer {li}: dense codes len {} != {dout}x{din}", codes.len());
+                }
+                let row_perm: Vec<u32> = (0..dout as u32).collect();
+                let col_perm: Vec<u32> = (0..din as u32).collect();
+                let structure = BlockStructure::from_flat_perms(dout, din, 1, &row_perm, &col_perm)?;
+                layers.push(PackedLayer {
+                    structure,
+                    bits,
+                    codes: vec![codes],
+                    w_scale: vec![w_scale],
+                    bias: vec![bias],
+                    out_scale: vec![0.0],
+                    relu,
+                });
+            }
+            other => bail!("layer {li}: unknown kind {other}"),
+        }
+    }
+    Ok(ImportedModel { name, bits, in_scale, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The real artifact bundle, when present (built by `make artifacts`).
+    fn artifact_path() -> Option<String> {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/lenet_model.json");
+        std::path::Path::new(p).exists().then(|| p.to_string())
+    }
+
+    #[test]
+    fn imports_real_artifact_if_present() {
+        let Some(path) = artifact_path() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = import_bundle(&path).unwrap();
+        assert_eq!(m.bits, 4);
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.layers[0].structure.din, 800);
+        assert_eq!(m.layers[0].structure.nb, 10);
+        assert_eq!(m.layers[2].structure.dout, 10);
+        assert_eq!(m.layers[2].out_scale[0], 0.0); // head unquantized
+        // forward runs
+        let out = m.layers[0].forward(&vec![0.1; 800]).unwrap();
+        assert_eq!(out.len(), 300);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(import_bundle("/nonexistent/x.json").is_err());
+    }
+}

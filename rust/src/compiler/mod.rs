@@ -1,0 +1,24 @@
+//! Network compiler: high-level models → APU programs (paper §4.2, Fig. 8).
+//!
+//! The paper's flow parses a TensorFlow/Caffe model, extracts weights and
+//! activations, and translates the model into accelerator instructions.
+//! Ours is the same pipeline with the python bundle as the interchange:
+//!
+//! * [`import_`] — load the python-exported packed model (INT4 codes,
+//!   scales, permutations) into [`crate::pruning::PackedLayer`]s;
+//! * [`emit`] — lower packed layers into an executable [`crate::isa::Program`]:
+//!   per-layer routing schedules, wave folding when blocks exceed PEs,
+//!   host ops for ingress quantization;
+//! * [`cost`] — the analytic mapping/cost model for whole networks
+//!   (conv cases I–III of §4.4.3, pooling on host, attention per head):
+//!   produces per-layer cycle/energy/utilization without functional
+//!   simulation, validated against the cycle-accurate sim on small FC
+//!   networks (`rust/tests/integration_sim.rs`).
+
+pub mod cost;
+pub mod emit;
+pub mod import_;
+
+pub use cost::{CostModel, LayerCost, MappingCase, NetworkCost};
+pub use emit::{compile_packed_layers, synthetic_packed_network};
+pub use import_::import_bundle;

@@ -1,0 +1,138 @@
+//! Deadline-aware dynamic batcher.
+//!
+//! Requests accumulate until either the batch is full or the oldest
+//! request has waited `max_wait` — the standard latency/throughput dial
+//! for edge serving (the accelerator itself is batch-1; batching
+//! amortizes dispatch overhead and keeps the PJRT batch-8 artifact fed).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A pending request in the queue.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// FIFO queue + release logic.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        assert!(policy.max_batch > 0, "max_batch must be positive");
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push_back(Pending { payload, enqueued: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be released `now`?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(p) => now.duration_since(p.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` requests (FIFO order preserved).
+    pub fn take_batch(&mut self) -> Vec<Pending<T>> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+
+    /// Time until the oldest request's deadline (None if empty).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            let waited = now.duration_since(p.enqueued);
+            self.policy.max_wait.saturating_sub(waited)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_on_full_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready(Instant::now()));
+        b.push(3);
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push("x");
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn take_batch_caps_at_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn fifo_order_preserved_across_batches() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        for i in 0..4 {
+            b.push(i);
+        }
+        let first: Vec<i32> = b.take_batch().into_iter().map(|p| p.payload).collect();
+        let second: Vec<i32> = b.take_batch().into_iter().map(|p| p.payload).collect();
+        assert_eq!((first, second), (vec![0, 1], vec![2, 3]));
+    }
+
+    #[test]
+    fn deadline_counts_down() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
+        assert!(b.next_deadline(Instant::now()).is_none());
+        b.push(());
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,132 @@
+//! Inference engines the coordinator can drive.
+
+use anyhow::Result;
+
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::sim::Apu;
+
+/// Anything that can run a batch of inputs to outputs.
+pub trait Engine {
+    fn name(&self) -> &str;
+    fn input_dim(&self) -> usize;
+    fn output_dim(&self) -> usize;
+    /// Run a batch; must return one output per input, in order.
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The cycle-accurate APU simulator as a serving engine. Single-sample
+/// hardware: batches are processed back to back (the paper's accelerator
+/// is a batch-1 design; batching only amortizes coordinator overhead).
+pub struct ApuEngine {
+    apu: Apu,
+    din: usize,
+    dout: usize,
+    name: String,
+}
+
+impl ApuEngine {
+    pub fn new(mut apu: Apu, program: &crate::isa::Program) -> Result<ApuEngine> {
+        apu.load(program)?;
+        Ok(ApuEngine { apu, din: program.din, dout: program.dout, name: format!("apu-sim:{}", program.name) })
+    }
+
+    pub fn stats(&self) -> &crate::sim::SimStats {
+        self.apu.stats()
+    }
+}
+
+impl Engine for ApuEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn input_dim(&self) -> usize {
+        self.din
+    }
+
+    fn output_dim(&self) -> usize {
+        self.dout
+    }
+
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        inputs.iter().map(|x| self.apu.run(x)).collect()
+    }
+}
+
+/// The PJRT golden model as a serving engine: dispatches to the lowered
+/// batch-8 artifact when a full batch is available, else batch-1.
+pub struct GoldenEngine {
+    exe_b1: Executable,
+    exe_b8: Executable,
+    din: usize,
+    dout: usize,
+}
+
+impl GoldenEngine {
+    pub fn from_artifacts(manifest: &Manifest, din: usize, dout: usize) -> Result<GoldenEngine> {
+        let rt = Runtime::cpu()?;
+        let exe_b1 = rt.load_hlo_text(manifest.hlo_path("lenet_b1")?)?;
+        let exe_b8 = rt.load_hlo_text(manifest.hlo_path("lenet_b8")?)?;
+        Ok(GoldenEngine { exe_b1, exe_b8, din, dout })
+    }
+}
+
+impl Engine for GoldenEngine {
+    fn name(&self) -> &str {
+        "pjrt-golden"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.din
+    }
+
+    fn output_dim(&self) -> usize {
+        self.dout
+    }
+
+    fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut i = 0;
+        while i < inputs.len() {
+            if inputs.len() - i >= 8 {
+                // pack 8 inputs into the batch-8 executable
+                let mut flat = Vec::with_capacity(8 * self.din);
+                for x in &inputs[i..i + 8] {
+                    flat.extend_from_slice(x);
+                }
+                let res = self.exe_b8.run_f32(&[(&flat, &[8, self.din as i64])])?;
+                let logits = &res[0];
+                for b in 0..8 {
+                    out.push(logits[b * self.dout..(b + 1) * self.dout].to_vec());
+                }
+                i += 8;
+            } else {
+                let res = self.exe_b1.run_f32(&[(&inputs[i], &[1, self.din as i64])])?;
+                out.push(res[0].clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+    use crate::sim::ApuConfig;
+
+    #[test]
+    fn apu_engine_serves_batches() {
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, 42).unwrap();
+        let program = compile_packed_layers("t", &layers, 0.2, 4, 4).unwrap();
+        let apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        let mut eng = ApuEngine::new(apu, &program).unwrap();
+        assert_eq!(eng.input_dim(), 16);
+        let inputs: Vec<Vec<f32>> = (0..3).map(|i| vec![0.1 * i as f32; 16]).collect();
+        let out = eng.infer_batch(&inputs).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|o| o.len() == 12));
+        assert_eq!(eng.stats().inferences, 3);
+    }
+}

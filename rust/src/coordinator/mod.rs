@@ -1,0 +1,16 @@
+//! Edge-inference serving coordinator — the L3 request path.
+//!
+//! The paper's deployment story (§1, §6) is an edge SoC serving inference
+//! under real-time constraints. This module is the framework around the
+//! accelerator: a request queue, a deadline-aware dynamic batcher, a
+//! worker thread driving an inference engine (the cycle-accurate APU
+//! simulator or the PJRT golden model — python is never on this path),
+//! and latency/throughput metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{ApuEngine, Engine, GoldenEngine};
+pub use server::{Server, ServerMetrics, SyntheticLoad};

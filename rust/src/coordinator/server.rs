@@ -1,0 +1,263 @@
+//! The serving loop: worker thread + request channel + metrics.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::Engine;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One inference request.
+struct Request {
+    input: Vec<f32>,
+    submitted: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// The response handed back to the caller.
+#[derive(Debug)]
+pub struct Reply {
+    pub output: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub completed: u64,
+    pub batches: u64,
+    pub latency_us: Summary,
+    pub batch_sizes: Summary,
+    pub engine_us: Summary,
+}
+
+impl ServerMetrics {
+    pub fn throughput_rps(&self, elapsed: Duration) -> f64 {
+        self.completed as f64 / elapsed.as_secs_f64().max(1e-12)
+    }
+}
+
+/// A handle to a running server. The engine is **constructed inside the
+/// worker thread** (PJRT client handles are not `Send`), so `start` takes
+/// a factory closure rather than an engine value.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    worker: Option<JoinHandle<ServerMetrics>>,
+}
+
+impl Server {
+    /// Spawn the serving loop; `make_engine` runs on the worker thread.
+    pub fn start<F>(make_engine: F, policy: BatchPolicy) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::spawn(move || {
+            let engine = match make_engine() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return ServerMetrics::default();
+                }
+            };
+            serve_loop(engine, policy, rx)
+        });
+        ready_rx.recv().context("worker died during engine construction")??;
+        Ok(Server { tx: Some(tx), worker: Some(worker) })
+    }
+
+    /// Submit a request; returns the channel the reply arrives on.
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Reply>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .context("server stopped")?
+            .send(Request { input, submitted: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Reply> {
+        let rx = self.submit(input)?;
+        rx.recv().context("server dropped request")
+    }
+
+    /// Stop the worker and collect metrics.
+    pub fn shutdown(mut self) -> Result<ServerMetrics> {
+        drop(self.tx.take());
+        let worker = self.worker.take().context("already shut down")?;
+        worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(
+    mut engine: Box<dyn Engine>,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Request>,
+) -> ServerMetrics {
+    let mut metrics = ServerMetrics::default();
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        // Fill the batcher: block briefly for the first request, then
+        // drain whatever is already queued.
+        if batcher.is_empty() && open {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => batcher.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(r) => batcher.push(r),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let now = Instant::now();
+        if !batcher.ready(now) && open {
+            if let Some(d) = batcher.next_deadline(now) {
+                // Wait out the batching window (or a new arrival).
+                match rx.recv_timeout(d.min(Duration::from_millis(5))) {
+                    Ok(r) => batcher.push(r),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                }
+                continue;
+            }
+            continue;
+        }
+        let batch = batcher.take_batch();
+        if batch.is_empty() {
+            continue;
+        }
+        let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.input.clone()).collect();
+        let t0 = Instant::now();
+        let outputs = match engine.infer_batch(&inputs) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("engine error, dropping batch: {e:#}");
+                continue;
+            }
+        };
+        let engine_time = t0.elapsed();
+        metrics.engine_us.add(engine_time.as_secs_f64() * 1e6);
+        metrics.batches += 1;
+        metrics.batch_sizes.add(batch.len() as f64);
+        let done = Instant::now();
+        for (pending, output) in batch.into_iter().zip(outputs) {
+            let latency = done.duration_since(pending.payload.submitted);
+            metrics.completed += 1;
+            metrics.latency_us.add(latency.as_secs_f64() * 1e6);
+            let _ = pending.payload.reply.send(Reply { output, latency, batch_size: metrics.batch_sizes.count() as usize });
+        }
+    }
+    drop(engine);
+    metrics
+}
+
+/// Synthetic Poisson arrival generator (the edge workload driver).
+pub struct SyntheticLoad {
+    pub rate_rps: f64,
+    pub rng: Rng,
+}
+
+impl SyntheticLoad {
+    pub fn new(rate_rps: f64, seed: u64) -> SyntheticLoad {
+        SyntheticLoad { rate_rps, rng: Rng::new(seed) }
+    }
+
+    /// Next inter-arrival gap.
+    pub fn next_gap(&mut self) -> Duration {
+        Duration::from_secs_f64(self.rng.exponential(self.rate_rps))
+    }
+
+    /// A random input vector in the INT4-friendly [-1, 1] range.
+    pub fn next_input(&mut self, dim: usize) -> Vec<f32> {
+        (0..dim).map(|_| self.rng.uniform(-1.0, 1.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+    use crate::coordinator::engine::ApuEngine;
+    use crate::sim::{Apu, ApuConfig};
+
+    fn test_engine() -> Box<dyn Engine> {
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, 5).unwrap();
+        let program = compile_packed_layers("t", &layers, 0.2, 4, 4).unwrap();
+        let apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        Box::new(ApuEngine::new(apu, &program).unwrap())
+    }
+
+    #[test]
+    fn serves_requests_and_collects_metrics() {
+        let server = Server::start(
+            || Ok(test_engine()),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let mut load = SyntheticLoad::new(1000.0, 7);
+        let receivers: Vec<_> = (0..20).map(|_| server.submit(load.next_input(16)).unwrap()).collect();
+        for rx in receivers {
+            let reply = rx.recv().unwrap();
+            assert_eq!(reply.output.len(), 12);
+        }
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.completed, 20);
+        assert!(metrics.batches >= 5); // max_batch 4 → at least 5 batches
+        assert!(metrics.latency_us.mean() > 0.0);
+    }
+
+    #[test]
+    fn no_request_lost_under_burst() {
+        let server = Server::start(
+            || Ok(test_engine()),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        )
+        .unwrap();
+        let mut load = SyntheticLoad::new(1e6, 8);
+        let n = 100;
+        let receivers: Vec<_> = (0..n).map(|_| server.submit(load.next_input(16)).unwrap()).collect();
+        let got = receivers.into_iter().filter(|rx| rx.recv().is_ok()).count();
+        assert_eq!(got, n);
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.completed, n as u64);
+    }
+
+    #[test]
+    fn synthetic_load_rates() {
+        let mut l = SyntheticLoad::new(100.0, 3);
+        let mean: f64 = (0..2000).map(|_| l.next_gap().as_secs_f64()).sum::<f64>() / 2000.0;
+        assert!((mean - 0.01).abs() < 0.002, "mean gap {mean}");
+        assert_eq!(l.next_input(5).len(), 5);
+    }
+}

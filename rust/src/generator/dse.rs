@@ -1,0 +1,97 @@
+//! Design-space exploration sweeps (paper §4.4.1–4.4.2, Figs. 10–11).
+
+use anyhow::Result;
+
+use super::instance::{DesignInstance, GeneratorConfig};
+use crate::hwmodel::PeMode;
+
+/// One DSE sample: the generated instance's PE-level area/energy split.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    /// Swept value (block dim or bit width).
+    pub x: usize,
+    pub compute_energy_pj: f64,
+    pub memory_energy_pj: f64,
+    pub compute_area_mm2: f64,
+    pub memory_area_mm2: f64,
+    pub total_energy_pj: f64,
+    pub total_area_mm2: f64,
+}
+
+fn point(x: usize, cfg: GeneratorConfig) -> Result<DsePoint> {
+    let inst = DesignInstance::generate(cfg)?;
+    let (e, a) = inst.pe_report();
+    Ok(DsePoint {
+        x,
+        compute_energy_pj: e.compute(),
+        memory_energy_pj: e.memory(),
+        compute_area_mm2: a.compute(),
+        memory_area_mm2: a.memory(),
+        total_energy_pj: e.total(),
+        total_area_mm2: a.total(),
+    })
+}
+
+/// Fig. 10a/11a: sweep the PE block size (square blocks, fixed 4-bit).
+/// Paper sweeps 200..2048 per dimension.
+pub fn sweep_block_size(sizes: &[usize], bits: u32) -> Result<Vec<DsePoint>> {
+    sizes
+        .iter()
+        .map(|&s| {
+            point(
+                s,
+                GeneratorConfig { block_h: s, block_w: s, bits, mode: PeMode::Spatial, ..Default::default() },
+            )
+        })
+        .collect()
+}
+
+/// Fig. 10b/11b: sweep precision at a fixed 400×400 block.
+pub fn sweep_precision(bits_list: &[u32]) -> Result<Vec<DsePoint>> {
+    bits_list
+        .iter()
+        .map(|&b| {
+            point(
+                b as usize,
+                GeneratorConfig { block_h: 400, block_w: 400, bits: b, mode: PeMode::Spatial, ..Default::default() },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_sweep_shapes() {
+        // Paper: compute scales linearly with block dim, memory quadratically.
+        let pts = sweep_block_size(&[200, 400, 800, 1600], 4).unwrap();
+        let growth = |f: fn(&DsePoint) -> f64| f(&pts[3]) / f(&pts[0]);
+        let cg = growth(|p| p.compute_energy_pj);
+        let mg = growth(|p| p.memory_energy_pj);
+        assert!(cg > 6.0 && cg < 10.0, "compute energy growth {cg} (8× dim)");
+        assert!(mg > cg * 2.0, "memory must outgrow compute: {mg} vs {cg}");
+        let ca = growth(|p| p.compute_area_mm2);
+        let ma = growth(|p| p.memory_area_mm2);
+        assert!((ca - 8.0).abs() < 2.0, "compute area growth {ca}");
+        assert!((ma - 64.0).abs() < 8.0, "memory area growth {ma} (quadratic)");
+    }
+
+    #[test]
+    fn precision_sweep_break_even() {
+        let pts = sweep_precision(&[4, 8, 16]).unwrap();
+        // 4b: memory dominates; 8b: break-even; 16b: compute dominates
+        assert!(pts[0].memory_energy_pj > 1.5 * pts[0].compute_energy_pj);
+        let r8 = pts[1].compute_energy_pj / pts[1].memory_energy_pj;
+        assert!((r8 - 1.0).abs() < 0.25, "8-bit ratio {r8}");
+        assert!(pts[2].compute_energy_pj > 2.0 * pts[2].memory_energy_pj);
+    }
+
+    #[test]
+    fn monotone_totals() {
+        let pts = sweep_block_size(&[256, 512, 1024], 4).unwrap();
+        assert!(pts.windows(2).all(|w| w[1].total_energy_pj > w[0].total_energy_pj));
+        assert!(pts.windows(2).all(|w| w[1].total_area_mm2 > w[0].total_area_mm2));
+    }
+}

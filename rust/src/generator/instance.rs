@@ -1,0 +1,188 @@
+//! Design-instance generation: parameters → structural netlist + metrics.
+
+use anyhow::{bail, Result};
+
+use crate::hwmodel::{chip_metrics, pe_area, pe_energy_per_cycle, ChipMetrics, PeConfig, PeMode, Tech};
+use crate::sim::ApuConfig;
+use crate::util::json::Json;
+
+/// Generator parameters (the Chisel top-level's knobs, §4.1: "the internal
+/// structure of the PE, the number of PEs, and the interconnect
+/// infrastructure are flexible").
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeneratorConfig {
+    pub n_pes: usize,
+    pub block_h: usize,
+    pub block_w: usize,
+    pub bits: u32,
+    pub clock_ghz: f64,
+    pub mode: PeMode,
+}
+
+impl Default for GeneratorConfig {
+    /// The taped-out instance (paper Fig. 9).
+    fn default() -> Self {
+        GeneratorConfig { n_pes: 10, block_h: 400, block_w: 400, bits: 4, clock_ghz: 1.0, mode: PeMode::Spatial }
+    }
+}
+
+impl GeneratorConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_pes == 0 || self.block_h == 0 || self.block_w == 0 {
+            bail!("degenerate generator config");
+        }
+        if ![2, 4, 8, 16].contains(&self.bits) {
+            bail!("unsupported precision {} (2/4/8/16)", self.bits);
+        }
+        if !(0.1..=4.0).contains(&self.clock_ghz) {
+            bail!("clock {} GHz outside signoff range", self.clock_ghz);
+        }
+        Ok(())
+    }
+
+    pub fn pe_config(&self) -> PeConfig {
+        PeConfig { block_h: self.block_h, block_w: self.block_w, bits: self.bits }
+    }
+}
+
+/// A generated design instance: the netlist summary + analytic metrics +
+/// the simulator configuration that executes it.
+#[derive(Debug, Clone)]
+pub struct DesignInstance {
+    pub config: GeneratorConfig,
+    pub metrics: ChipMetrics,
+}
+
+impl DesignInstance {
+    /// Elaborate a design instance (the `rocket-chip` generate step).
+    pub fn generate(config: GeneratorConfig) -> Result<DesignInstance> {
+        config.validate()?;
+        let tech = Tech::tsmc16();
+        let metrics = chip_metrics(&tech, &config.pe_config(), config.n_pes, config.clock_ghz);
+        Ok(DesignInstance { config, metrics })
+    }
+
+    /// The simulator configuration for this instance.
+    pub fn apu_config(&self) -> ApuConfig {
+        ApuConfig {
+            n_pes: self.config.n_pes,
+            pe_sram_bits: self.config.block_h * self.config.block_w * self.config.bits as usize,
+            clock_ghz: self.config.clock_ghz,
+        }
+    }
+
+    /// Structural netlist description: module hierarchy with instance
+    /// counts and memory macros (what the Chisel elaboration would print).
+    pub fn netlist(&self) -> String {
+        let c = &self.config;
+        let pe = c.pe_config();
+        let tree_stages = (c.block_w as f64).log2().ceil() as usize;
+        let mut s = String::new();
+        s.push_str(&format!("module apu_top  // generated instance\n"));
+        s.push_str(&format!("  rocket_core host (rv64imac, 16K I$ + 16K D$)\n"));
+        s.push_str(&format!("  rocc_adapter cmd_queue (2-entry)\n"));
+        s.push_str(&format!("  mux_crossbar xbar (radix {}, {}b lanes)\n", c.n_pes, c.bits));
+        s.push_str(&format!("  pe_array [{}] {{\n", c.n_pes));
+        s.push_str(&format!("    sram weight ({} x {}b rows = {} bits)\n", c.block_h, c.block_w * c.bits as usize, pe.weight_sram_bits()));
+        s.push_str(&format!("    latch input ({} bits)\n", pe.input_latch_bits()));
+        match c.mode {
+            PeMode::Spatial => {
+                s.push_str(&format!("    mult int{} [{}]\n", c.bits, c.block_w));
+                s.push_str(&format!("    adder_tree ({} stages, widths {}..{})\n", tree_stages, c.bits + 1, c.bits as usize + tree_stages));
+            }
+            PeMode::Temporal => {
+                s.push_str(&format!("    mult int{} [{}]\n", c.bits, c.block_h));
+                s.push_str(&format!("    regfile psum ({} x {}b)\n", c.block_h, pe.acc_bits()));
+            }
+        }
+        s.push_str(&format!("    relu_quant unit (acc {}b -> {}b)\n", pe.acc_bits(), c.bits));
+        s.push_str(&format!("    sram output ({} bits)\n", pe.out_sram_bits()));
+        s.push_str(&format!("    sram select ({} bits)\n", pe.select_sram_bits(c.n_pes)));
+        s.push_str("  }\n");
+        s
+    }
+
+    /// The Fig. 9 specification table as JSON (the `apu figures fig9` output).
+    pub fn spec_json(&self) -> Json {
+        let m = &self.metrics;
+        Json::obj(vec![
+            ("technology", Json::str("16 nm TSMC (modeled)")),
+            ("chip_mm2", Json::num((m.area_mm2 * 100.0).round() / 100.0)),
+            ("precision_bits", Json::Int(self.config.bits as i64)),
+            ("onchip_sram_mb", Json::num((m.sram_bits as f64 / 8e6 * 100.0).round() / 100.0)),
+            ("n_pes", Json::Int(self.config.n_pes as i64)),
+            ("clock_ghz", Json::num(self.config.clock_ghz)),
+            ("power_mw", Json::num(m.power_mw.round())),
+            ("tops", Json::num((m.tops * 10.0).round() / 10.0)),
+            ("tops_per_watt", Json::num((m.tops_per_watt * 10.0).round() / 10.0)),
+            ("layer_cycles", Json::Int(m.layer_cycles as i64)),
+        ])
+    }
+
+    /// Per-component PE report for Figs. 3/4b/10/11.
+    pub fn pe_report(&self) -> (crate::hwmodel::PeEnergy, crate::hwmodel::PeArea) {
+        let tech = Tech::tsmc16();
+        (
+            pe_energy_per_cycle(&tech, &self.config.pe_config(), self.config.mode),
+            pe_area(&tech, &self.config.pe_config(), self.config.mode),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_instance_matches_fig9() {
+        let inst = DesignInstance::generate(GeneratorConfig::default()).unwrap();
+        let m = &inst.metrics;
+        assert!((m.tops - 16.0).abs() < 0.1);
+        assert!((m.power_mw - 440.0).abs() < 60.0);
+        assert_eq!(m.layer_cycles, 400);
+    }
+
+    #[test]
+    fn netlist_mentions_all_blocks() {
+        let inst = DesignInstance::generate(GeneratorConfig::default()).unwrap();
+        let n = inst.netlist();
+        for needle in ["rocket_core", "mux_crossbar", "pe_array [10]", "adder_tree (9 stages", "relu_quant"] {
+            assert!(n.contains(needle), "netlist missing {needle}:\n{n}");
+        }
+    }
+
+    #[test]
+    fn temporal_netlist_has_regfile() {
+        let cfg = GeneratorConfig { mode: PeMode::Temporal, ..Default::default() };
+        let n = DesignInstance::generate(cfg).unwrap().netlist();
+        assert!(n.contains("regfile psum"));
+        assert!(!n.contains("adder_tree"));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for cfg in [
+            GeneratorConfig { bits: 5, ..Default::default() },
+            GeneratorConfig { n_pes: 0, ..Default::default() },
+            GeneratorConfig { clock_ghz: 9.0, ..Default::default() },
+        ] {
+            assert!(DesignInstance::generate(cfg).is_err());
+        }
+    }
+
+    #[test]
+    fn spec_json_is_valid() {
+        let inst = DesignInstance::generate(GeneratorConfig::default()).unwrap();
+        let j = inst.spec_json();
+        assert_eq!(j.get("n_pes").and_then(Json::as_i64), Some(10));
+        assert!(Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn apu_config_geometry() {
+        let inst = DesignInstance::generate(GeneratorConfig::default()).unwrap();
+        let ac = inst.apu_config();
+        assert_eq!(ac.pe_sram_bits, 640_000);
+        assert_eq!(ac.n_pes, 10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Hardware design generator (paper §4.1, §4.4): the Chisel/Rocket-Chip
+//! generator's role, reproduced as a parameterized design-instance
+//! generator with a structural netlist description and per-instance
+//! area/energy/performance reports, plus the design-space-exploration
+//! sweeps behind Figs. 10 and 11.
+
+pub mod dse;
+pub mod instance;
+
+pub use dse::{sweep_block_size, sweep_precision, DsePoint};
+pub use instance::{DesignInstance, GeneratorConfig};

@@ -1,0 +1,303 @@
+//! Processing-element area/energy models for both execution modes
+//! (paper §3.1.1, Figs. 3 and 4).
+//!
+//! **Spatial** (the paper's choice): per cycle one output activation is
+//! produced — `block_w` multipliers feed a mixed-precision reduction adder
+//! tree, then ReLU and the quantizer; one weight-SRAM row is read per
+//! cycle; no partial-sum register file exists.
+//!
+//! **Temporal** (the conventional alternative): per cycle one *input*
+//! activation is broadcast — `block_h` multipliers each update a partial
+//! sum held in a register file at full accumulator width; outputs all
+//! complete on the layer's last cycle.
+
+use super::tech::Tech;
+
+/// Geometry + precision of one PE (one dense block of the pruned layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Block rows = output activations per block.
+    pub block_h: usize,
+    /// Block cols = input activations per block = multipliers (spatial).
+    pub block_w: usize,
+    /// Weight/activation precision, bits.
+    pub bits: u32,
+}
+
+impl PeConfig {
+    pub fn weight_sram_bits(&self) -> usize {
+        self.block_h * self.block_w * self.bits as usize
+    }
+
+    /// Output-activation SRAM: holds this block's outputs (they become the
+    /// next layer's permuted inputs — paper Fig. 5).
+    pub fn out_sram_bits(&self) -> usize {
+        self.block_h * self.bits as usize
+    }
+
+    /// Select SRAM: static-schedule mux selects, one per routed cycle.
+    pub fn select_sram_bits(&self, n_pes: usize) -> usize {
+        let sel_width = (n_pes.max(2) as f64).log2().ceil() as usize;
+        self.block_w * sel_width
+    }
+
+    /// Input activation latch, bits.
+    pub fn input_latch_bits(&self) -> usize {
+        self.block_w * self.bits as usize
+    }
+
+    /// Accumulator width for an exact dot product: `2·bits + log2(block_w)`.
+    pub fn acc_bits(&self) -> u32 {
+        2 * self.bits + (self.block_w.max(2) as f64).log2().ceil() as u32
+    }
+}
+
+/// Execution mode of the MAC datapath (paper §3.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeMode {
+    Spatial,
+    Temporal,
+}
+
+/// Total adder-bit count of the reduction tree: stage `s` has
+/// `ceil(w / 2^s)` adders of width `bits + s` (precision grows one bit per
+/// stage — the paper's "adders increasing in precision", §3.1.1).
+pub fn adder_tree_bits(block_w: usize, bits: u32) -> usize {
+    let mut total = 0usize;
+    let mut n = block_w;
+    let mut stage = 1u32;
+    while n > 1 {
+        n = n.div_ceil(2);
+        total += n * (bits + stage) as usize;
+        stage += 1;
+    }
+    total
+}
+
+/// Per-cycle PE energy, split by component (pJ). Fig. 4b's pie chart.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeEnergy {
+    pub weight_sram_pj: f64,
+    pub out_sram_pj: f64,
+    pub select_sram_pj: f64,
+    pub input_latch_pj: f64,
+    pub multipliers_pj: f64,
+    pub adders_pj: f64,
+    pub relu_quant_pj: f64,
+    pub regfile_pj: f64,
+    pub broadcast_pj: f64,
+    pub control_pj: f64,
+}
+
+impl PeEnergy {
+    pub fn memory(&self) -> f64 {
+        self.weight_sram_pj + self.out_sram_pj + self.select_sram_pj
+    }
+
+    pub fn compute(&self) -> f64 {
+        self.multipliers_pj + self.adders_pj + self.relu_quant_pj
+    }
+
+    pub fn other(&self) -> f64 {
+        self.input_latch_pj + self.regfile_pj + self.broadcast_pj + self.control_pj
+    }
+
+    pub fn total(&self) -> f64 {
+        self.memory() + self.compute() + self.other()
+    }
+}
+
+/// Per-cycle PE energy for the given mode.
+pub fn pe_energy_per_cycle(tech: &Tech, cfg: &PeConfig, mode: PeMode) -> PeEnergy {
+    let b = cfg.bits;
+    let wcap = cfg.weight_sram_bits();
+    let (weight_bits_read, mult_count, adders_pj, regfile_pj) = match mode {
+        PeMode::Spatial => {
+            // One weight row, block_w multipliers, the reduction tree.
+            let row = cfg.block_w * b as usize;
+            let tree = adder_tree_bits(cfg.block_w, b);
+            (row, cfg.block_w, tree as f64 * tech.add_pj_per_bit, 0.0)
+        }
+        PeMode::Temporal => {
+            // One weight column, block_h multipliers, block_h full-width
+            // accumulations + partial-sum register file (read + write).
+            let col = cfg.block_h * b as usize;
+            let acc = cfg.acc_bits() as usize;
+            let adds = cfg.block_h * acc;
+            let rf = 2.0 * (cfg.block_h * acc) as f64 * tech.regfile_pj_per_bit;
+            (col, cfg.block_h, adds as f64 * tech.add_pj_per_bit, rf)
+        }
+    };
+
+    let weight_sram_pj = tech.sram_read_pj(weight_bits_read, wcap);
+    // One output activation (spatial) or amortized writeback (temporal).
+    let out_sram_pj = tech.sram_write_pj(b as usize, cfg.out_sram_bits().max(1));
+    let select_sram_pj = tech.sram_read_pj(4, cfg.select_sram_bits(16).max(1));
+    let input_latch_pj = cfg.input_latch_bits() as f64 * tech.latch_pj_per_bit;
+    let multipliers_pj = mult_count as f64 * tech.mult_pj(b);
+    // ReLU compare + quantizer shift/round at accumulator width.
+    let relu_quant_pj = 2.0 * cfg.acc_bits() as f64 * tech.add_pj_per_bit;
+    let broadcast_pj = tech.broadcast_pj;
+
+    let subtotal = weight_sram_pj
+        + out_sram_pj
+        + select_sram_pj
+        + input_latch_pj
+        + multipliers_pj
+        + adders_pj
+        + relu_quant_pj
+        + regfile_pj
+        + broadcast_pj;
+    let control_pj = tech.control_overhead * subtotal;
+
+    PeEnergy {
+        weight_sram_pj,
+        out_sram_pj,
+        select_sram_pj,
+        input_latch_pj,
+        multipliers_pj,
+        adders_pj,
+        relu_quant_pj,
+        regfile_pj,
+        broadcast_pj,
+        control_pj,
+    }
+}
+
+/// Energy to process one full block (all outputs) in the given mode, pJ.
+/// Spatial takes `block_h` cycles; temporal takes `block_w` cycles.
+pub fn pe_energy_per_block(tech: &Tech, cfg: &PeConfig, mode: PeMode) -> f64 {
+    let per_cycle = pe_energy_per_cycle(tech, cfg, mode).total();
+    let cycles = match mode {
+        PeMode::Spatial => cfg.block_h,
+        PeMode::Temporal => cfg.block_w,
+    };
+    per_cycle * cycles as f64
+}
+
+/// PE area by component, mm². Fig. 3 (right) / Fig. 10.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeArea {
+    pub weight_sram_mm2: f64,
+    pub io_sram_mm2: f64,
+    pub multipliers_mm2: f64,
+    pub adders_mm2: f64,
+    pub regfile_mm2: f64,
+    pub overhead_mm2: f64,
+}
+
+impl PeArea {
+    pub fn memory(&self) -> f64 {
+        self.weight_sram_mm2 + self.io_sram_mm2
+    }
+
+    pub fn compute(&self) -> f64 {
+        self.multipliers_mm2 + self.adders_mm2
+    }
+
+    pub fn total(&self) -> f64 {
+        self.memory() + self.compute() + self.regfile_mm2 + self.overhead_mm2
+    }
+}
+
+/// PE area for the given mode.
+pub fn pe_area(tech: &Tech, cfg: &PeConfig, mode: PeMode) -> PeArea {
+    let b = cfg.bits;
+    let weight_sram_mm2 = cfg.weight_sram_bits() as f64 * tech.sram_mm2_per_bit;
+    let io_bits = cfg.out_sram_bits() + cfg.select_sram_bits(16) + cfg.input_latch_bits();
+    let io_sram_mm2 = io_bits as f64 * tech.sram_mm2_per_bit;
+
+    let (mult_count, adder_bits, regfile_bits) = match mode {
+        PeMode::Spatial => (cfg.block_w, adder_tree_bits(cfg.block_w, b), 0),
+        PeMode::Temporal => {
+            let acc = cfg.acc_bits() as usize;
+            (cfg.block_h, cfg.block_h * acc, cfg.block_h * acc)
+        }
+    };
+    let multipliers_mm2 = mult_count as f64 * (b as f64).powi(2) * tech.mult_mm2_per_bit2;
+    let adders_mm2 = adder_bits as f64 * tech.add_mm2_per_bit;
+    let regfile_mm2 = regfile_bits as f64 * tech.regfile_mm2_per_bit;
+    let overhead_mm2 =
+        tech.area_overhead * (weight_sram_mm2 + io_sram_mm2 + multipliers_mm2 + adders_mm2 + regfile_mm2);
+
+    PeArea { weight_sram_mm2, io_sram_mm2, multipliers_mm2, adders_mm2, regfile_mm2, overhead_mm2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PeConfig {
+        PeConfig { block_h: 400, block_w: 400, bits: 4 }
+    }
+
+    #[test]
+    fn adder_tree_has_nine_stages_at_400() {
+        // Paper §3.1.1: 400 multipliers feed a 9-stage adder tree.
+        let mut n = 400usize;
+        let mut stages = 0;
+        while n > 1 {
+            n = n.div_ceil(2);
+            stages += 1;
+        }
+        assert_eq!(stages, 9);
+        let bits = adder_tree_bits(400, 4);
+        // 402 adders, widths 5..13.
+        assert!(bits > 2000 && bits < 2600, "tree bits {bits}");
+    }
+
+    #[test]
+    fn sram_sizes() {
+        let c = cfg();
+        assert_eq!(c.weight_sram_bits(), 640_000);
+        assert_eq!(c.out_sram_bits(), 1600);
+        assert_eq!(c.input_latch_bits(), 1600);
+        assert_eq!(c.select_sram_bits(16), 1600);
+        assert_eq!(c.acc_bits(), 17);
+    }
+
+    #[test]
+    fn fig3_spatial_beats_temporal_on_energy_and_area() {
+        // Paper Fig. 3: same weight+multiplier cost, spatial saves the
+        // adder precision and eliminates the partial-sum register file.
+        let t = Tech::tsmc16();
+        let sp_e = pe_energy_per_block(&t, &cfg(), PeMode::Spatial);
+        let tp_e = pe_energy_per_block(&t, &cfg(), PeMode::Temporal);
+        assert!(sp_e < tp_e, "spatial {sp_e} should beat temporal {tp_e}");
+
+        let sp = pe_energy_per_cycle(&t, &cfg(), PeMode::Spatial);
+        let tp = pe_energy_per_cycle(&t, &cfg(), PeMode::Temporal);
+        // identical components (square block): weight read + multipliers
+        assert!((sp.weight_sram_pj - tp.weight_sram_pj).abs() < 1e-9);
+        assert!((sp.multipliers_pj - tp.multipliers_pj).abs() < 1e-9);
+        // savings live in adders + regfile
+        assert!(sp.adders_pj < tp.adders_pj);
+        assert_eq!(sp.regfile_pj, 0.0);
+        assert!(tp.regfile_pj > 0.0);
+
+        let sp_a = pe_area(&t, &cfg(), PeMode::Spatial);
+        let tp_a = pe_area(&t, &cfg(), PeMode::Temporal);
+        assert!(sp_a.total() < tp_a.total());
+        assert_eq!(sp_a.regfile_mm2, 0.0);
+    }
+
+    #[test]
+    fn block_energy_scales_with_rows() {
+        let t = Tech::tsmc16();
+        let small = PeConfig { block_h: 100, block_w: 400, bits: 4 };
+        let e_small = pe_energy_per_block(&t, &small, PeMode::Spatial);
+        let e_big = pe_energy_per_block(&t, &cfg(), PeMode::Spatial);
+        // 4× the cycles, and each cycle reads a row from a 4× larger macro
+        // (higher per-bit energy), so the ratio lands a little above 4×.
+        assert!(e_big > e_small * 3.5 && e_big < e_small * 6.5);
+    }
+
+    #[test]
+    fn non_square_blocks_supported() {
+        let t = Tech::tsmc16();
+        let c = PeConfig { block_h: 30, block_w: 80, bits: 4 };
+        let e = pe_energy_per_cycle(&t, &c, PeMode::Spatial);
+        assert!(e.total() > 0.0);
+        assert!(pe_area(&t, &c, PeMode::Spatial).total() > 0.0);
+    }
+}

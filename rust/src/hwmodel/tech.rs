@@ -1,0 +1,155 @@
+//! Technology-node constants, calibrated to the paper's 16 nm TSMC numbers.
+//!
+//! Functional forms follow standard scaling (Horowitz ISSCC'14); the
+//! constants below were fit to the paper's anchor points:
+//!
+//! * PE @400×400 INT4 weight-SRAM row read ≈18 pJ so the Fig. 4b memory
+//!   share lands >50% and the Fig. 9 chip at ≈440 mW;
+//! * multiplier energy `∝ bits^2.6` and SRAM per-bit energy
+//!   `∝ capacity^0.42` so the Fig. 11b precision sweep breaks even at
+//!   8 bits with compute >2× memory at 16 bits (paper reads ≈3×; the
+//!   paper's own curve implies a superquadratic multiplier exponent);
+//! * DRAM access = 10× big-SRAM access per bit, and big-SRAM = ≈3× the
+//!   in-PE SRAM (the §4.1 "10×" and "3×" energy-saving steps).
+
+/// Per-node constants. All energies in pJ, areas in mm² unless noted.
+#[derive(Debug, Clone)]
+pub struct Tech {
+    pub name: &'static str,
+    /// SRAM read energy scale: pJ per bit per `capacity_bits^cap_exp`.
+    pub sram_pj_coeff: f64,
+    /// Capacity exponent for SRAM per-bit access energy (bitline scaling).
+    pub sram_cap_exp: f64,
+    /// SRAM write multiplier relative to read.
+    pub sram_write_factor: f64,
+    /// Multiplier energy: pJ per multiplier per `bits^mult_exp`.
+    pub mult_pj_coeff: f64,
+    pub mult_exp: f64,
+    /// Adder energy per adder-bit, pJ.
+    pub add_pj_per_bit: f64,
+    /// Latch/FF read energy per bit, pJ.
+    pub latch_pj_per_bit: f64,
+    /// Register-file access (read or write) per bit, pJ (temporal mode).
+    pub regfile_pj_per_bit: f64,
+    /// Crossbar broadcast driver energy per PE per cycle, pJ.
+    pub broadcast_pj: f64,
+    /// Mux network energy per routed bit, pJ.
+    pub mux_pj_per_bit: f64,
+    /// Control/sequencing overhead as a fraction of PE subtotal.
+    pub control_overhead: f64,
+    /// DRAM access energy per bit, pJ (off-chip; baselines only).
+    pub dram_pj_per_bit: f64,
+    /// Host core (RISC-V + L1) energy per cycle, pJ.
+    pub host_pj_per_cycle: f64,
+    /// Clock-tree energy per PE per cycle, pJ.
+    pub clock_tree_pj_per_pe: f64,
+    /// Host ops (non-MAC: pooling, fold-adds) energy per op, pJ.
+    pub host_pj_per_op: f64,
+
+    /// SRAM area per bit (incl. periphery overhead), mm².
+    pub sram_mm2_per_bit: f64,
+    /// Multiplier area: mm² per `bits²`.
+    pub mult_mm2_per_bit2: f64,
+    /// Adder area per adder-bit, mm².
+    pub add_mm2_per_bit: f64,
+    /// Register-file area per bit, mm².
+    pub regfile_mm2_per_bit: f64,
+    /// PE control/wiring area overhead fraction.
+    pub area_overhead: f64,
+    /// Host core + caches area, mm².
+    pub host_area_mm2: f64,
+    /// Pad ring, clock spine, filler — fixed die overhead, mm².
+    pub padring_area_mm2: f64,
+}
+
+impl Tech {
+    /// The paper's node: 16 nm TSMC at 0.72 V, 1 GHz signoff.
+    pub fn tsmc16() -> Tech {
+        Tech {
+            name: "tsmc16",
+            sram_pj_coeff: 4.095e-5,
+            sram_cap_exp: 0.42,
+            sram_write_factor: 1.8,
+            mult_pj_coeff: 4.926e-4,
+            mult_exp: 2.6,
+            add_pj_per_bit: 0.0011,
+            latch_pj_per_bit: 0.0002,
+            regfile_pj_per_bit: 0.0008,
+            broadcast_pj: 1.0,
+            mux_pj_per_bit: 0.15,
+            control_overhead: 0.10,
+            dram_pj_per_bit: 0.331,
+            host_pj_per_cycle: 90.0,
+            clock_tree_pj_per_pe: 2.5,
+            host_pj_per_op: 1.2,
+
+            sram_mm2_per_bit: 1.1e-7,
+            mult_mm2_per_bit2: 3.125e-6 * 1e-3, // 3.125 µm²/bit² → mm²
+            add_mm2_per_bit: 2.5e-6 * 1e-3,     // 2.5 µm²/bit
+            regfile_mm2_per_bit: 1.5e-6 * 1e-3,
+            area_overhead: 0.15,
+            host_area_mm2: 2.0,
+            padring_area_mm2: 3.1,
+        }
+    }
+
+    /// SRAM read energy per bit for a macro of the given capacity.
+    pub fn sram_pj_per_bit(&self, capacity_bits: usize) -> f64 {
+        self.sram_pj_coeff * (capacity_bits.max(1) as f64).powf(self.sram_cap_exp)
+    }
+
+    /// Energy of reading `bits_read` bits from a macro of `capacity_bits`.
+    pub fn sram_read_pj(&self, bits_read: usize, capacity_bits: usize) -> f64 {
+        bits_read as f64 * self.sram_pj_per_bit(capacity_bits)
+    }
+
+    /// Energy of writing `bits` bits into a macro of `capacity_bits`.
+    pub fn sram_write_pj(&self, bits: usize, capacity_bits: usize) -> f64 {
+        self.sram_write_factor * self.sram_read_pj(bits, capacity_bits)
+    }
+
+    /// One `bits × bits` multiply, pJ.
+    pub fn mult_pj(&self, bits: u32) -> f64 {
+        self.mult_pj_coeff * (bits as f64).powf(self.mult_exp)
+    }
+
+    /// DRAM transfer energy for `bits` bits, pJ.
+    pub fn dram_pj(&self, bits: usize) -> f64 {
+        self.dram_pj_per_bit * bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_energy_grows_with_capacity() {
+        let t = Tech::tsmc16();
+        let small = t.sram_pj_per_bit(64 * 1024);
+        let big = t.sram_pj_per_bit(8 * 1024 * 1024);
+        assert!(big > small * 2.0, "capacity scaling too flat: {small} vs {big}");
+    }
+
+    #[test]
+    fn mult_energy_superquadratic() {
+        let t = Tech::tsmc16();
+        let r = t.mult_pj(16) / t.mult_pj(8);
+        assert!(r > 4.0, "8→16 bit mult growth {r} should exceed quadratic (4×)");
+        assert!(t.mult_pj(4) > 0.0);
+    }
+
+    #[test]
+    fn write_costs_more_than_read() {
+        let t = Tech::tsmc16();
+        assert!(t.sram_write_pj(100, 1 << 16) > t.sram_read_pj(100, 1 << 16));
+    }
+
+    #[test]
+    fn fig4b_weight_row_read_anchor() {
+        // 400×400×4b PE: one 1600-bit row from the 640 kb macro ≈ 18 pJ.
+        let t = Tech::tsmc16();
+        let pj = t.sram_read_pj(1600, 640_000);
+        assert!((pj - 18.0).abs() < 2.0, "row read {pj} pJ");
+    }
+}

@@ -1,0 +1,183 @@
+//! Binary instruction encoding — the 64-bit RoCC custom-instruction word.
+//!
+//! Layout (little-endian fields, LSB first):
+//! ```text
+//!   [7:0]   opcode
+//!   [15:8]  flags / precision / host-op code
+//!   [31:16] field a   (layer, pe, rows, seg …)
+//!   [47:32] field b   (nb, seg …)
+//!   [63:48] field c   (bh or bw packed via two words for ConfigLayer)
+//! ```
+//! `ConfigLayer` needs four 16-bit fields (nb, bh, bw + layer) so it is
+//! encoded as a two-word pair (`OP_CFG`, `OP_CFG_EXT`); every other
+//! instruction is a single word. This mirrors how RoCC splits a command
+//! across `rs1`/`rs2`.
+
+use anyhow::{bail, Result};
+
+use super::program::{HostOpKind, Insn};
+
+const OP_CFG: u8 = 0x01;
+const OP_CFG_EXT: u8 = 0x02;
+const OP_LD_W: u8 = 0x03;
+const OP_LD_B: u8 = 0x04;
+const OP_LD_S: u8 = 0x05;
+const OP_ROUTE: u8 = 0x06;
+const OP_COMPUTE: u8 = 0x07;
+const OP_HOST: u8 = 0x08;
+const OP_SCATTER: u8 = 0x09;
+const OP_HOSTDENSE: u8 = 0x0A;
+const OP_HALT: u8 = 0x0F;
+
+fn word(op: u8, flags: u8, a: u16, b: u16, c: u16) -> u64 {
+    (op as u64) | ((flags as u64) << 8) | ((a as u64) << 16) | ((b as u64) << 32) | ((c as u64) << 48)
+}
+
+fn fields(w: u64) -> (u8, u8, u16, u16, u16) {
+    (w as u8, (w >> 8) as u8, (w >> 16) as u16, (w >> 32) as u16, (w >> 48) as u16)
+}
+
+/// Encode one instruction to one or two 64-bit words.
+pub fn encode_insn(insn: &Insn) -> Vec<u64> {
+    match *insn {
+        Insn::ConfigLayer { layer, nb, bh, bw, bits, relu } => vec![
+            word(OP_CFG, bits | ((relu as u8) << 7), layer, nb, bh),
+            word(OP_CFG_EXT, 0, bw, 0, 0),
+        ],
+        Insn::LoadWeights { pe, seg } => vec![word(OP_LD_W, 0, pe, seg, 0)],
+        Insn::LoadBias { pe, seg } => vec![word(OP_LD_B, 0, pe, seg, 0)],
+        Insn::SetScales { pe, seg } => vec![word(OP_LD_S, 0, pe, seg, 0)],
+        Insn::Route { seg, from_input } => vec![word(OP_ROUTE, from_input as u8, seg, 0, 0)],
+        Insn::Compute { rows } => vec![word(OP_COMPUTE, 0, rows, 0, 0)],
+        Insn::HostOp { op, seg } => vec![word(OP_HOST, op.code(), seg, 0, 0)],
+        Insn::Scatter { seg } => vec![word(OP_SCATTER, 0, seg, 0, 0)],
+        Insn::HostDense { w_seg, b_seg, relu } => vec![word(OP_HOSTDENSE, relu as u8, w_seg, b_seg, 0)],
+        Insn::Halt => vec![word(OP_HALT, 0, 0, 0, 0)],
+    }
+}
+
+/// Decode an instruction starting at `words[i]`; returns the instruction
+/// and the number of words consumed.
+pub fn decode_insn(words: &[u64], i: usize) -> Result<(Insn, usize)> {
+    let w = *words.get(i).ok_or_else(|| anyhow::anyhow!("decode past end"))?;
+    let (op, flags, a, b, c) = fields(w);
+    Ok(match op {
+        OP_CFG => {
+            let w2 = *words.get(i + 1).ok_or_else(|| anyhow::anyhow!("truncated ConfigLayer"))?;
+            let (op2, _, bw, _, _) = fields(w2);
+            if op2 != OP_CFG_EXT {
+                bail!("ConfigLayer not followed by extension word");
+            }
+            (
+                Insn::ConfigLayer {
+                    layer: a,
+                    nb: b,
+                    bh: c,
+                    bw,
+                    bits: flags & 0x7f,
+                    relu: flags & 0x80 != 0,
+                },
+                2,
+            )
+        }
+        OP_CFG_EXT => bail!("orphan ConfigLayer extension word"),
+        OP_LD_W => (Insn::LoadWeights { pe: a, seg: b }, 1),
+        OP_LD_B => (Insn::LoadBias { pe: a, seg: b }, 1),
+        OP_LD_S => (Insn::SetScales { pe: a, seg: b }, 1),
+        OP_ROUTE => (Insn::Route { seg: a, from_input: flags != 0 }, 1),
+        OP_COMPUTE => (Insn::Compute { rows: a }, 1),
+        OP_HOST => (Insn::HostOp { op: HostOpKind::from_code(flags)?, seg: a }, 1),
+        OP_SCATTER => (Insn::Scatter { seg: a }, 1),
+        OP_HOSTDENSE => (Insn::HostDense { w_seg: a, b_seg: b, relu: flags != 0 }, 1),
+        OP_HALT => (Insn::Halt, 1),
+        other => bail!("unknown opcode {other:#x}"),
+    })
+}
+
+/// Encode a whole instruction stream.
+pub fn encode_stream(insns: &[Insn]) -> Vec<u64> {
+    insns.iter().flat_map(encode_insn).collect()
+}
+
+/// Decode a whole instruction stream.
+pub fn decode_stream(words: &[u64]) -> Result<Vec<Insn>> {
+    let mut insns = Vec::new();
+    let mut i = 0;
+    while i < words.len() {
+        let (insn, used) = decode_insn(words, i)?;
+        insns.push(insn);
+        i += used;
+    }
+    Ok(insns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn arbitrary_insn(rng: &mut Rng) -> Insn {
+        match rng.below(10) {
+            0 => Insn::ConfigLayer {
+                layer: rng.below(1 << 16) as u16,
+                nb: rng.below(1 << 16) as u16,
+                bh: rng.below(1 << 16) as u16,
+                bw: rng.below(1 << 16) as u16,
+                bits: [2u8, 4, 8, 16][rng.usize_below(4)],
+                relu: rng.below(2) == 1,
+            },
+            1 => Insn::LoadWeights { pe: rng.below(1 << 16) as u16, seg: rng.below(1 << 16) as u16 },
+            2 => Insn::LoadBias { pe: rng.below(1 << 16) as u16, seg: rng.below(1 << 16) as u16 },
+            3 => Insn::SetScales { pe: rng.below(1 << 16) as u16, seg: rng.below(1 << 16) as u16 },
+            4 => Insn::Route { seg: rng.below(1 << 16) as u16, from_input: rng.below(2) == 1 },
+            5 => Insn::Compute { rows: rng.below(1 << 16) as u16 },
+            6 => Insn::HostOp {
+                op: HostOpKind::from_code(rng.below(5) as u8).unwrap(),
+                seg: rng.below(1 << 16) as u16,
+            },
+            7 => Insn::Scatter { seg: rng.below(1 << 16) as u16 },
+            8 => Insn::HostDense {
+                w_seg: rng.below(1 << 16) as u16,
+                b_seg: rng.below(1 << 16) as u16,
+                relu: rng.below(2) == 1,
+            },
+            _ => Insn::Halt,
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        // 500 random instruction streams survive encode→decode untouched.
+        let mut rng = Rng::new(99);
+        for _ in 0..500 {
+            let n = 1 + rng.usize_below(20);
+            let insns: Vec<Insn> = (0..n).map(|_| arbitrary_insn(&mut rng)).collect();
+            let words = encode_stream(&insns);
+            let back = decode_stream(&words).unwrap();
+            assert_eq!(insns, back);
+        }
+    }
+
+    #[test]
+    fn config_layer_uses_two_words() {
+        let insn = Insn::ConfigLayer { layer: 1, nb: 10, bh: 30, bw: 80, bits: 4, relu: true };
+        assert_eq!(encode_insn(&insn).len(), 2);
+        assert_eq!(encode_insn(&Insn::Halt).len(), 1);
+    }
+
+    #[test]
+    fn rejects_truncated_and_orphan() {
+        let insn = Insn::ConfigLayer { layer: 0, nb: 1, bh: 1, bw: 1, bits: 4, relu: false };
+        let words = encode_insn(&insn);
+        assert!(decode_stream(&words[..1]).is_err()); // truncated
+        assert!(decode_stream(&words[1..]).is_err()); // orphan ext
+        assert!(decode_stream(&[0xFEu64]).is_err()); // unknown opcode
+    }
+
+    #[test]
+    fn max_field_values_roundtrip() {
+        let insn = Insn::ConfigLayer { layer: u16::MAX, nb: u16::MAX, bh: u16::MAX, bw: u16::MAX, bits: 16, relu: true };
+        let back = decode_stream(&encode_insn(&insn)).unwrap();
+        assert_eq!(vec![insn], back);
+    }
+}

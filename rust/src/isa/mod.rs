@@ -1,0 +1,16 @@
+//! APU instruction set — the RoCC-shaped command stream (paper §4.1–4.2).
+//!
+//! The silicon prototype couples the accelerator to a Rocket RISC-V core
+//! through the RoCC interface: custom instructions carry commands and the
+//! core services memory/control requests. Our compiler emits the same
+//! split: an [`Insn`] stream (the custom-instruction trace the core would
+//! issue) plus [`DataSegment`]s (the memory the core DMA-loads into PE
+//! SRAMs). The cycle-accurate simulator executes programs directly; the
+//! assembler/disassembler give the human-readable form used in tests and
+//! the `apu compile --emit-asm` flow.
+
+pub mod encode;
+pub mod program;
+
+pub use encode::{decode_insn, encode_insn};
+pub use program::{DataSegment, HostOpKind, Insn, Program};

@@ -1,0 +1,308 @@
+//! Instruction and program containers.
+
+use anyhow::{bail, Result};
+
+use crate::sched::Assignment;
+
+/// Non-MAC operations executed on the host RISC-V core (paper §4.4.3:
+/// pooling "and other operations that do NOT consist of multiplication
+/// and addition" run on the core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostOpKind {
+    /// Elementwise ReLU over a host buffer.
+    Relu,
+    /// 2D max-pool with square window (encoded in `arg`).
+    MaxPool,
+    /// Elementwise add of two host buffers (partial-sum folding, §4.4.3 II).
+    FoldAdd,
+    /// Quantize a host buffer to the layer grid (scale from segment).
+    Quantize,
+    /// Copy/permute a host buffer (activation reordering at boundaries).
+    Gather,
+}
+
+impl HostOpKind {
+    pub fn code(self) -> u8 {
+        match self {
+            HostOpKind::Relu => 0,
+            HostOpKind::MaxPool => 1,
+            HostOpKind::FoldAdd => 2,
+            HostOpKind::Quantize => 3,
+            HostOpKind::Gather => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<HostOpKind> {
+        Ok(match c {
+            0 => HostOpKind::Relu,
+            1 => HostOpKind::MaxPool,
+            2 => HostOpKind::FoldAdd,
+            3 => HostOpKind::Quantize,
+            4 => HostOpKind::Gather,
+            _ => bail!("bad host-op code {c}"),
+        })
+    }
+}
+
+/// One APU instruction (the RoCC custom-instruction trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insn {
+    /// Configure the active layer geometry: `nb` blocks of `bh × bw` at
+    /// `bits` precision, ReLU on/off.
+    ConfigLayer { layer: u16, nb: u16, bh: u16, bw: u16, bits: u8, relu: bool },
+    /// Point PE `pe`'s weight SRAM at data segment `seg` (i8 codes).
+    LoadWeights { pe: u16, seg: u16 },
+    /// Point PE `pe`'s bias store at data segment `seg` (f32).
+    LoadBias { pe: u16, seg: u16 },
+    /// Per-PE dequant scales: weight scale and output quantizer scale.
+    SetScales { pe: u16, seg: u16 },
+    /// Run the routing phase using the static schedule in segment `seg`
+    /// (sources = `src` kind: 0 input stream, 1 previous layer outputs).
+    Route { seg: u16, from_input: bool },
+    /// Run the MAC phase of the configured layer (`rows` output rows/PE).
+    Compute { rows: u16 },
+    /// Host-core op over host buffer(s); `seg` carries op parameters.
+    HostOp { op: HostOpKind, seg: u16 },
+    /// Small dense (unstructured) FC executed on the host core — the
+    /// paper keeps layers too small/irregular for the PE array on the
+    /// RISC-V (classifier heads). Weights/bias are f32 segments.
+    HostDense { w_seg: u16, b_seg: u16, relu: bool },
+    /// Copy PE output SRAMs to the host output buffer (layer scatter),
+    /// using the row permutation in segment `seg`.
+    Scatter { seg: u16 },
+    /// End of program.
+    Halt,
+}
+
+/// Typed data segments the host loads for the accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataSegment {
+    I8(Vec<i8>),
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    /// A static routing schedule (assignment list).
+    Routes(Vec<Assignment>),
+}
+
+impl DataSegment {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DataSegment::I8(_) => "i8",
+            DataSegment::F32(_) => "f32",
+            DataSegment::U32(_) => "u32",
+            DataSegment::Routes(_) => "routes",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DataSegment::I8(v) => v.len(),
+            DataSegment::F32(v) => v.len(),
+            DataSegment::U32(v) => v.len(),
+            DataSegment::Routes(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            DataSegment::I8(v) => Ok(v),
+            _ => bail!("segment is {} not i8", self.kind()),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            DataSegment::F32(v) => Ok(v),
+            _ => bail!("segment is {} not f32", self.kind()),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            DataSegment::U32(v) => Ok(v),
+            _ => bail!("segment is {} not u32", self.kind()),
+        }
+    }
+
+    pub fn as_routes(&self) -> Result<&[Assignment]> {
+        match self {
+            DataSegment::Routes(v) => Ok(v),
+            _ => bail!("segment is {} not routes", self.kind()),
+        }
+    }
+}
+
+/// A complete APU program: instruction stream + data segments + metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub insns: Vec<Insn>,
+    pub data: Vec<DataSegment>,
+    /// Network input/output dimensions (host buffer sizes).
+    pub din: usize,
+    pub dout: usize,
+    /// Human-readable provenance (model name).
+    pub name: String,
+}
+
+impl Program {
+    pub fn push_data(&mut self, seg: DataSegment) -> u16 {
+        self.data.push(seg);
+        (self.data.len() - 1) as u16
+    }
+
+    pub fn segment(&self, seg: u16) -> Result<&DataSegment> {
+        self.data.get(seg as usize).ok_or_else(|| anyhow::anyhow!("segment {seg} out of range"))
+    }
+
+    /// Static validation: segment references in range and correctly typed,
+    /// Halt-terminated, layer configured before compute.
+    pub fn validate(&self) -> Result<()> {
+        if self.insns.last() != Some(&Insn::Halt) {
+            bail!("program must end with Halt");
+        }
+        let mut configured = false;
+        for (i, insn) in self.insns.iter().enumerate() {
+            let check = |seg: u16, want: &str| -> Result<()> {
+                let s = self.segment(seg)?;
+                if s.kind() != want {
+                    bail!("insn {i}: segment {seg} is {} but {want} required", s.kind());
+                }
+                Ok(())
+            };
+            match insn {
+                Insn::ConfigLayer { nb, bh, bw, bits, .. } => {
+                    if *nb == 0 || *bh == 0 || *bw == 0 {
+                        bail!("insn {i}: degenerate layer config");
+                    }
+                    if ![2, 4, 8, 16].contains(bits) {
+                        bail!("insn {i}: unsupported precision {bits}");
+                    }
+                    configured = true;
+                }
+                Insn::LoadWeights { seg, .. } => check(*seg, "i8")?,
+                Insn::LoadBias { seg, .. } => check(*seg, "f32")?,
+                Insn::SetScales { seg, .. } => check(*seg, "f32")?,
+                Insn::Route { seg, .. } => check(*seg, "routes")?,
+                Insn::Compute { rows } => {
+                    if !configured {
+                        bail!("insn {i}: Compute before ConfigLayer");
+                    }
+                    if *rows == 0 {
+                        bail!("insn {i}: zero-row compute");
+                    }
+                }
+                Insn::HostOp { seg, .. } => check(*seg, "f32")?,
+                Insn::HostDense { w_seg, b_seg, .. } => {
+                    check(*w_seg, "f32")?;
+                    check(*b_seg, "f32")?;
+                }
+                Insn::Scatter { seg } => check(*seg, "u32")?,
+                Insn::Halt => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Assembly text (one insn per line) — `apu compile --emit-asm`.
+    pub fn disassemble(&self) -> String {
+        let mut s = String::new();
+        for insn in &self.insns {
+            s.push_str(&match insn {
+                Insn::ConfigLayer { layer, nb, bh, bw, bits, relu } => {
+                    format!("cfg.layer l={layer} nb={nb} bh={bh} bw={bw} bits={bits} relu={}", *relu as u8)
+                }
+                Insn::LoadWeights { pe, seg } => format!("ld.w pe={pe} seg={seg}"),
+                Insn::LoadBias { pe, seg } => format!("ld.b pe={pe} seg={seg}"),
+                Insn::SetScales { pe, seg } => format!("ld.s pe={pe} seg={seg}"),
+                Insn::Route { seg, from_input } => format!("route seg={seg} in={}", *from_input as u8),
+                Insn::Compute { rows } => format!("compute rows={rows}"),
+                Insn::HostOp { op, seg } => format!("host op={} seg={seg}", op.code()),
+                Insn::HostDense { w_seg, b_seg, relu } => {
+                    format!("host.dense w={w_seg} b={b_seg} relu={}", *relu as u8)
+                }
+                Insn::Scatter { seg } => format!("scatter seg={seg}"),
+                Insn::Halt => "halt".to_string(),
+            });
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Program {
+        let mut p = Program { name: "t".into(), din: 8, dout: 4, ..Default::default() };
+        let w = p.push_data(DataSegment::I8(vec![1, -2, 3, 4]));
+        let b = p.push_data(DataSegment::F32(vec![0.1, 0.2]));
+        let r = p.push_data(DataSegment::Routes(vec![]));
+        let perm = p.push_data(DataSegment::U32(vec![0, 1, 2, 3]));
+        p.insns = vec![
+            Insn::ConfigLayer { layer: 0, nb: 2, bh: 2, bw: 2, bits: 4, relu: true },
+            Insn::LoadWeights { pe: 0, seg: w },
+            Insn::LoadBias { pe: 0, seg: b },
+            Insn::SetScales { pe: 0, seg: b },
+            Insn::Route { seg: r, from_input: true },
+            Insn::Compute { rows: 2 },
+            Insn::Scatter { seg: perm },
+            Insn::Halt,
+        ];
+        p
+    }
+
+    #[test]
+    fn validates_good_program() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_halt() {
+        let mut p = sample();
+        p.insns.pop();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_segment_type() {
+        let mut p = sample();
+        p.insns[1] = Insn::LoadWeights { pe: 0, seg: 1 }; // f32 segment
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_compute_before_config() {
+        let mut p = sample();
+        p.insns.remove(0);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_precision() {
+        let mut p = sample();
+        p.insns[0] = Insn::ConfigLayer { layer: 0, nb: 2, bh: 2, bw: 2, bits: 5, relu: true };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn disassembly_mentions_every_insn() {
+        let asm = sample().disassemble();
+        for needle in ["cfg.layer", "ld.w", "ld.b", "ld.s", "route", "compute", "scatter", "halt"] {
+            assert!(asm.contains(needle), "missing {needle} in:\n{asm}");
+        }
+        assert_eq!(asm.lines().count(), 8);
+    }
+
+    #[test]
+    fn segment_accessors_type_check() {
+        let p = sample();
+        assert!(p.segment(0).unwrap().as_i8().is_ok());
+        assert!(p.segment(0).unwrap().as_f32().is_err());
+        assert!(p.segment(99).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! # APU — Accelerator Processing Unit framework
+//!
+//! Reproduction of *"Tuning Algorithms and Generators for Efficient Edge
+//! Inference"* (Naous et al., 2019) as a three-layer Rust + JAX + Pallas
+//! stack. See DESIGN.md for the system inventory and experiment index,
+//! and README.md for the quickstart.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the co-design framework: structured-pruning
+//!   decomposition, routing scheduler, hardware generator, cycle-accurate
+//!   simulator, network compiler, baselines, and the edge-serving
+//!   coordinator.
+//! * **L2/L1 (python/, build-time only)** — JAX training with mask
+//!   molding + INT4 QAT, and the Pallas block-diagonal FC kernel, AOT
+//!   lowered to HLO text artifacts.
+//! * **runtime** — loads those artifacts via the PJRT CPU client (the
+//!   golden numeric model the simulator is validated against).
+
+pub mod baselines;
+pub mod compiler;
+pub mod coordinator;
+pub mod figures;
+pub mod generator;
+pub mod hwmodel;
+pub mod isa;
+pub mod nn;
+pub mod pruning;
+pub mod routing;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;

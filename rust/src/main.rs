@@ -1,0 +1,276 @@
+//! `apu` — the framework CLI.
+//!
+//! ```text
+//! apu figures <fig3|fig4b|fig6|fig9|fig10|fig11|fig13|fig14|fig15|headline|all>
+//! apu compile   [--pes N] [--emit-asm] [--artifacts DIR]
+//! apu simulate  [--pes N] [--n N] [--artifacts DIR]
+//! apu serve     [--engine sim|golden] [--requests N] [--rate RPS] [--batch B]
+//! apu dse       [--sweep block|precision]
+//! apu netlist   [--pes N] [--block S] [--bits B]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use apu::compiler::{compile_packed_layers, import_bundle};
+use apu::coordinator::{ApuEngine, BatchPolicy, GoldenEngine, Server, SyntheticLoad};
+use apu::figures;
+use apu::generator::{DesignInstance, GeneratorConfig};
+use apu::runtime::Manifest;
+use apu::sim::{Apu, ApuConfig};
+use apu::util::bundle::Bundle;
+use apu::util::cli::{parse, usage, Opt};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = &argv[1.min(argv.len())..];
+    match cmd {
+        "figures" => cmd_figures(rest),
+        "compile" => cmd_compile(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "dse" => cmd_dse(rest),
+        "netlist" => cmd_netlist(rest),
+        _ => {
+            println!(
+                "apu — Tuning Algorithms and Generators for Efficient Edge Inference (reproduction)\n\n\
+                 Commands:\n\
+                 \x20 figures <id|all>   regenerate paper tables/figures\n\
+                 \x20 compile            compile the trained artifact model to an APU program\n\
+                 \x20 simulate           run the cycle-accurate simulator on the test vectors\n\
+                 \x20 serve              run the edge-serving coordinator demo\n\
+                 \x20 dse                design-space exploration sweeps (Figs. 10/11)\n\
+                 \x20 netlist            print a generated design instance's structure\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figures(argv: &[String]) -> Result<()> {
+    let which = argv.first().map(String::as_str).unwrap_or("all");
+    let show = |id: &str| -> Result<()> {
+        println!("== {id} ==");
+        match id {
+            "fig3" => println!("{}", figures::fig3().render()),
+            "fig4b" => println!("{}", figures::fig4b().render()),
+            "fig6" => println!("{}", figures::fig6().render()),
+            "fig9" => println!("{}", figures::fig9()?.0.render()),
+            "fig10" | "fig11" => {
+                println!("-- block-size sweep (Figs. 10a/11a) --\n{}", figures::fig10_11_block()?.render());
+                println!("-- precision sweep (Figs. 10b/11b) --\n{}", figures::fig10_11_precision()?.render());
+            }
+            "fig13" => println!("{}", figures::fig13()?.render()),
+            "fig14" => println!("{}", figures::fig14()?.render()),
+            "fig15" => println!("{}", figures::fig15()?.render()),
+            "headline" => println!("{}", figures::headline_claims()?.render()),
+            other => bail!("unknown figure {other}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in ["fig3", "fig4b", "fig6", "fig9", "fig10", "fig13", "fig14", "fig15", "headline"] {
+            show(id)?;
+        }
+        Ok(())
+    } else {
+        show(which)
+    }
+}
+
+fn artifact_opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (make artifacts)" },
+        Opt { name: "pes", default: Some("10"), help: "number of PEs" },
+        Opt { name: "emit-asm", default: None, help: "print the compiled instruction stream" },
+        Opt { name: "n", default: Some("32"), help: "number of test vectors" },
+    ]
+}
+
+fn load_program(args: &apu::util::cli::Args) -> Result<(apu::isa::Program, String)> {
+    let dir = args.get("artifacts").unwrap();
+    let model = import_bundle(&format!("{dir}/lenet_model.json"))
+        .context("importing model bundle — run `make artifacts` first")?;
+    let n_pes = args.get_usize("pes")?;
+    let program = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, n_pes)?;
+    Ok((program, dir.to_string()))
+}
+
+fn cmd_compile(argv: &[String]) -> Result<()> {
+    let opts = artifact_opts();
+    let args = parse(argv, &opts)?;
+    if args.has_flag("help") {
+        println!("{}", usage("compile", "Compile the trained model to an APU program", &opts));
+    }
+    let (program, _) = load_program(&args)?;
+    println!(
+        "compiled {}: {} instructions, {} data segments, din={} dout={}",
+        program.name,
+        program.insns.len(),
+        program.data.len(),
+        program.din,
+        program.dout
+    );
+    if args.has_flag("emit-asm") {
+        println!("{}", program.disassemble());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let args = parse(argv, &artifact_opts())?;
+    let (program, dir) = load_program(&args)?;
+    let n_pes = args.get_usize("pes")?;
+    let mut apu = Apu::new(ApuConfig { n_pes, ..Default::default() });
+    apu.load(&program)?;
+
+    let tv = Bundle::load(format!("{dir}/testvec.json"))?;
+    let x = tv.tensor("x")?.as_f32()?;
+    let y = tv.tensor("y")?.as_i32()?;
+    let golden = tv.tensor("logits")?.as_f32()?;
+    let din = tv.shape("x")?[1];
+    let dout = tv.shape("logits")?[1];
+    let n = args.get_usize("n")?.min(tv.shape("x")?[0]);
+
+    let mut correct = 0;
+    let mut agree = 0;
+    let mut maxdiff = 0f32;
+    for i in 0..n {
+        let out = apu.run(&x[i * din..(i + 1) * din])?;
+        let pred = argmax(&out);
+        let gold = &golden[i * dout..(i + 1) * dout];
+        if pred == argmax(gold) {
+            agree += 1;
+        }
+        if pred == y[i] as usize {
+            correct += 1;
+        }
+        for (a, b) in out.iter().zip(gold) {
+            maxdiff = maxdiff.max((a - b).abs());
+        }
+    }
+    let st = apu.stats();
+    println!("simulated {n} inferences on {n_pes} PEs:");
+    println!("  accuracy          {:.3}", correct as f64 / n as f64);
+    println!("  golden agreement  {agree}/{n} (max |logit diff| {maxdiff:.2e})");
+    println!(
+        "  cycles/inference  {} (route {}, compute {}, host {})",
+        st.total_cycles() / n as u64,
+        st.route_cycles / n as u64,
+        st.compute_cycles / n as u64,
+        st.host_cycles / n as u64
+    );
+    println!(
+        "  energy/inference  {:.1} nJ  |  effective {:.2} GOPS @1GHz, {:.1} TOPS/W (datapath)",
+        st.total_pj() / n as f64 / 1000.0,
+        st.normalized_ops() / n as f64 / (st.total_cycles() as f64 / n as f64),
+        st.normalized_ops() / st.total_pj()
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let opts = vec![
+        Opt { name: "engine", default: Some("sim"), help: "sim | golden" },
+        Opt { name: "requests", default: Some("64"), help: "request count" },
+        Opt { name: "rate", default: Some("200"), help: "arrival rate, req/s" },
+        Opt { name: "batch", default: Some("8"), help: "max batch size" },
+        Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory" },
+        Opt { name: "pes", default: Some("10"), help: "number of PEs (sim engine)" },
+    ];
+    let args = parse(argv, &opts)?;
+    let engine_kind = args.get("engine").unwrap().to_string();
+    let n = args.get_usize("requests")?;
+    let rate = args.get_f64("rate")?;
+    let batch = args.get_usize("batch")?;
+    let dir = args.get("artifacts").unwrap().to_string();
+    let n_pes = args.get_usize("pes")?;
+
+    let policy = BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_millis(2) };
+    let dir2 = dir.clone();
+    let server = match engine_kind.as_str() {
+        "sim" => Server::start(
+            move || {
+                let model = import_bundle(&format!("{dir2}/lenet_model.json"))?;
+                let program = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, n_pes)?;
+                let apu = Apu::new(ApuConfig { n_pes, ..Default::default() });
+                Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn apu::coordinator::Engine>)
+            },
+            policy,
+        )?,
+        "golden" => Server::start(
+            move || {
+                let manifest = Manifest::load(&dir2)?;
+                Ok(Box::new(GoldenEngine::from_artifacts(&manifest, 800, 10)?) as Box<dyn apu::coordinator::Engine>)
+            },
+            policy,
+        )?,
+        other => bail!("unknown engine {other}"),
+    };
+
+    let mut load = SyntheticLoad::new(rate, 42);
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        std::thread::sleep(load.next_gap());
+        receivers.push(server.submit(load.next_input(800))?);
+    }
+    for rx in receivers {
+        rx.recv()?;
+    }
+    let elapsed = t0.elapsed();
+    let mut metrics = server.shutdown()?;
+    println!("engine={engine_kind} served {} requests in {:.2}s", metrics.completed, elapsed.as_secs_f64());
+    println!("  throughput  {:.1} req/s", metrics.throughput_rps(elapsed));
+    println!(
+        "  latency     p50 {:.0} us | p99 {:.0} us | mean {:.0} us",
+        metrics.latency_us.median(),
+        metrics.latency_us.p99(),
+        metrics.latency_us.mean()
+    );
+    println!("  batches     {} (mean size {:.2})", metrics.batches, metrics.batch_sizes.mean());
+    println!("  engine time mean {:.0} us/batch", metrics.engine_us.mean());
+    Ok(())
+}
+
+fn cmd_dse(argv: &[String]) -> Result<()> {
+    let opts = vec![Opt { name: "sweep", default: Some("block"), help: "block | precision" }];
+    let args = parse(argv, &opts)?;
+    match args.get("sweep").unwrap() {
+        "block" => println!("{}", figures::fig10_11_block()?.render()),
+        "precision" => println!("{}", figures::fig10_11_precision()?.render()),
+        other => bail!("unknown sweep {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_netlist(argv: &[String]) -> Result<()> {
+    let opts = vec![
+        Opt { name: "pes", default: Some("10"), help: "number of PEs" },
+        Opt { name: "block", default: Some("400"), help: "block dim (square)" },
+        Opt { name: "bits", default: Some("4"), help: "precision" },
+    ];
+    let args = parse(argv, &opts)?;
+    let cfg = GeneratorConfig {
+        n_pes: args.get_usize("pes")?,
+        block_h: args.get_usize("block")?,
+        block_w: args.get_usize("block")?,
+        bits: args.get_usize("bits")? as u32,
+        ..Default::default()
+    };
+    let inst = DesignInstance::generate(cfg)?;
+    println!("{}", inst.netlist());
+    println!("{}", inst.spec_json().pretty());
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}

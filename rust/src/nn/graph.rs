@@ -1,0 +1,217 @@
+//! Abstract network graph: the compiler's input IR.
+
+use anyhow::{bail, Result};
+
+/// Spatial activation shape flowing between layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn flat(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// Layer kinds the APU framework maps (paper §4.4.3–4.4.4).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Fully connected `din → dout`.
+    Fc { dout: usize },
+    /// 2D convolution, `groups`-way group conv (`groups == 1` = standard).
+    Conv { cout: usize, kh: usize, kw: usize, stride: usize, groups: usize, padding: usize },
+    /// Square max-pool.
+    MaxPool { window: usize, stride: usize },
+    /// Batch normalization (folded into the preceding conv/FC at compile
+    /// time — paper §4.4.3 "Batch Normalization").
+    BatchNorm,
+    /// Multi-head self-attention (paper §4.4.4): `heads` heads over model
+    /// dim `dmodel`, head dim `dk`, sequence length `seq`.
+    Attention { heads: usize, dmodel: usize, dk: usize, seq: usize },
+}
+
+/// A named layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Whether a ReLU follows (fused into the PE datapath).
+    pub relu: bool,
+}
+
+/// A network: input shape plus a layer list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Propagate shapes; errors on inconsistent geometry.
+    pub fn shapes(&self) -> Result<Vec<Shape>> {
+        let mut shapes = vec![self.input];
+        let mut cur = self.input;
+        for l in &self.layers {
+            cur = match &l.kind {
+                LayerKind::Fc { dout } => Shape { h: 1, w: 1, c: *dout },
+                LayerKind::Conv { cout, kh, kw, stride, groups, padding } => {
+                    if cur.c % groups != 0 || cout % groups != 0 {
+                        bail!("{}: groups {} do not divide channels {}→{}", l.name, groups, cur.c, cout);
+                    }
+                    let oh = (cur.h + 2 * padding).saturating_sub(*kh) / stride + 1;
+                    let ow = (cur.w + 2 * padding).saturating_sub(*kw) / stride + 1;
+                    if oh == 0 || ow == 0 {
+                        bail!("{}: kernel {}x{} larger than input {}x{}", l.name, kh, kw, cur.h, cur.w);
+                    }
+                    Shape { h: oh, w: ow, c: *cout }
+                }
+                LayerKind::MaxPool { window, stride } => {
+                    let oh = cur.h.saturating_sub(*window) / stride + 1;
+                    let ow = cur.w.saturating_sub(*window) / stride + 1;
+                    if oh == 0 || ow == 0 {
+                        bail!("{}: pool window too large", l.name);
+                    }
+                    Shape { h: oh, w: ow, c: cur.c }
+                }
+                LayerKind::BatchNorm => cur,
+                LayerKind::Attention { dmodel, seq, .. } => Shape { h: 1, w: *seq, c: *dmodel },
+            };
+            shapes.push(cur);
+        }
+        Ok(shapes)
+    }
+
+    /// Multiply-accumulate count per layer (inference, batch 1).
+    pub fn macs(&self) -> Result<Vec<u64>> {
+        let shapes = self.shapes()?;
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            let (inp, outp) = (shapes[i], shapes[i + 1]);
+            let m = match &l.kind {
+                LayerKind::Fc { dout } => (inp.flat() * dout) as u64,
+                LayerKind::Conv { cout, kh, kw, groups, .. } => {
+                    (outp.h * outp.w) as u64 * (*cout as u64) * (kh * kw) as u64 * (inp.c / groups) as u64
+                }
+                LayerKind::MaxPool { .. } | LayerKind::BatchNorm => 0,
+                LayerKind::Attention { heads, dmodel, dk, seq } => {
+                    // Q/K/V/O projections + QK^T + AV per head.
+                    let proj = 4 * seq * dmodel * (heads * dk);
+                    let attn = 2 * heads * seq * seq * dk;
+                    (proj + attn) as u64
+                }
+            };
+            out.push(m);
+        }
+        Ok(out)
+    }
+
+    /// Parameter count per layer.
+    pub fn params(&self) -> Result<Vec<u64>> {
+        let shapes = self.shapes()?;
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            let inp = shapes[i];
+            let p = match &l.kind {
+                LayerKind::Fc { dout } => (inp.flat() * dout + dout) as u64,
+                LayerKind::Conv { cout, kh, kw, groups, .. } => {
+                    (cout * kh * kw * (inp.c / groups) + cout) as u64
+                }
+                LayerKind::MaxPool { .. } => 0,
+                LayerKind::BatchNorm => 2 * inp.c as u64,
+                LayerKind::Attention { heads, dmodel, dk, .. } => (4 * dmodel * heads * dk) as u64,
+            };
+            out.push(p);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        Network {
+            name: "tiny".into(),
+            input: Shape { h: 8, w: 8, c: 3 },
+            layers: vec![
+                Layer {
+                    name: "conv1".into(),
+                    kind: LayerKind::Conv { cout: 16, kh: 3, kw: 3, stride: 1, groups: 1, padding: 1 },
+                    relu: true,
+                },
+                Layer { name: "pool1".into(), kind: LayerKind::MaxPool { window: 2, stride: 2 }, relu: false },
+                Layer { name: "bn1".into(), kind: LayerKind::BatchNorm, relu: false },
+                Layer { name: "fc1".into(), kind: LayerKind::Fc { dout: 10 }, relu: false },
+            ],
+        }
+    }
+
+    #[test]
+    fn shape_propagation() {
+        let s = tiny().shapes().unwrap();
+        assert_eq!(s[1], Shape { h: 8, w: 8, c: 16 }); // same-padded conv
+        assert_eq!(s[2], Shape { h: 4, w: 4, c: 16 }); // pooled
+        assert_eq!(s[3], Shape { h: 4, w: 4, c: 16 }); // bn passthrough
+        assert_eq!(s[4], Shape { h: 1, w: 1, c: 10 });
+    }
+
+    #[test]
+    fn mac_counts() {
+        let m = tiny().macs().unwrap();
+        assert_eq!(m[0], 8 * 8 * 16 * 9 * 3);
+        assert_eq!(m[1], 0);
+        assert_eq!(m[3], (4 * 4 * 16 * 10) as u64);
+    }
+
+    #[test]
+    fn group_conv_divides_macs() {
+        let mk = |groups| Network {
+            name: "g".into(),
+            input: Shape { h: 4, w: 4, c: 8 },
+            layers: vec![Layer {
+                name: "c".into(),
+                kind: LayerKind::Conv { cout: 8, kh: 3, kw: 3, stride: 1, groups, padding: 1 },
+                relu: true,
+            }],
+        };
+        let m1 = mk(1).macs().unwrap()[0];
+        let m4 = mk(4).macs().unwrap()[0];
+        assert_eq!(m1, 4 * m4); // group conv cuts MACs by the group count
+    }
+
+    #[test]
+    fn rejects_bad_groups() {
+        let n = Network {
+            name: "bad".into(),
+            input: Shape { h: 4, w: 4, c: 6 },
+            layers: vec![Layer {
+                name: "c".into(),
+                kind: LayerKind::Conv { cout: 8, kh: 3, kw: 3, stride: 1, groups: 4, padding: 1 },
+                relu: true,
+            }],
+        };
+        assert!(n.shapes().is_err());
+    }
+
+    #[test]
+    fn attention_macs_positive() {
+        let n = Network {
+            name: "attn".into(),
+            input: Shape { h: 1, w: 64, c: 512 },
+            layers: vec![Layer {
+                name: "mha".into(),
+                kind: LayerKind::Attention { heads: 8, dmodel: 512, dk: 64, seq: 64 },
+                relu: false,
+            }],
+        };
+        let m = n.macs().unwrap()[0];
+        assert!(m > 0);
+        // projections dominate at short sequence lengths
+        assert!(m as usize > 4 * 64 * 512 * 512);
+    }
+}

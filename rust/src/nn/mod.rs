@@ -1,0 +1,13 @@
+//! Network shape library and graph format (paper §4.2, 4.4.3–4.4.4).
+//!
+//! The compiler consumes an abstract layer graph — either imported from
+//! the python-side JSON bundle (trained weights) or synthesized from the
+//! shape library below (the paper's evaluation networks: the Figs. 13–15
+//! experiments are cycle-count experiments that depend only on layer
+//! geometry and sparsity, not on trained values).
+
+pub mod graph;
+pub mod zoo;
+
+pub use graph::{Layer, LayerKind, Network};
+pub use zoo::{alexnet, lenet_300_100, resnet50, transformer_mha, vgg19};

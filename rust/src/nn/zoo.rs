@@ -1,0 +1,221 @@
+//! The paper's evaluation networks, at shape level.
+//!
+//! Figs. 13–15 are cycle-count/speedup experiments: they need layer
+//! geometry and sparsity structure, not trained weights, so the shape
+//! library here is the faithful substrate (DESIGN.md §2).
+
+use super::graph::{Layer, LayerKind, Network, Shape};
+
+fn conv(name: &str, cout: usize, k: usize, stride: usize, groups: usize) -> Layer {
+    Layer {
+        name: name.into(),
+        kind: LayerKind::Conv { cout, kh: k, kw: k, stride, groups, padding: k / 2 },
+        relu: true,
+    }
+}
+
+fn pool(name: &str) -> Layer {
+    Layer { name: name.into(), kind: LayerKind::MaxPool { window: 2, stride: 2 }, relu: false }
+}
+
+fn fc(name: &str, dout: usize, relu: bool) -> Layer {
+    Layer { name: name.into(), kind: LayerKind::Fc { dout }, relu }
+}
+
+/// LeNet-300-100 (Table 1 row 1; the e2e artifact model, input padded to
+/// 800 so dims divide nb=10 — see python/compile/train.py).
+pub fn lenet_300_100() -> Network {
+    Network {
+        name: "lenet-300-100".into(),
+        input: Shape { h: 1, w: 1, c: 800 },
+        layers: vec![fc("fc1", 300, true), fc("fc2", 100, true), fc("fc3", 10, false)],
+    }
+}
+
+/// AlexNet (paper Table 1 / Fig. 15's FC6-8; conv2/4/5 are the original's
+/// 2-group convolutions — the paper's §4.4.3-III example).
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet".into(),
+        input: Shape { h: 227, w: 227, c: 3 },
+        layers: vec![
+            Layer {
+                name: "conv1".into(),
+                kind: LayerKind::Conv { cout: 96, kh: 11, kw: 11, stride: 4, groups: 1, padding: 0 },
+                relu: true,
+            },
+            pool("pool1"),
+            conv("conv2", 256, 5, 1, 2),
+            pool("pool2"),
+            conv("conv3", 384, 3, 1, 1),
+            conv("conv4", 384, 3, 1, 2),
+            conv("conv5", 256, 3, 1, 2),
+            pool("pool5"),
+            fc("fc6", 4096, true),
+            fc("fc7", 4096, true),
+            fc("fc8", 1000, false),
+        ],
+    }
+}
+
+/// Group degree that makes one group's unrolled kernel fit a 513-wide PE
+/// (paper §4.4.3-III: "fitting even the largest of convolutions ... onto
+/// just 9 513x513 PEs"): the smallest power of two `g` dividing both
+/// channel counts with `k²·cin/g ≤ 513`.
+fn fit_groups(k: usize, cin: usize, cout: usize) -> usize {
+    let mut g = 1;
+    while k * k * cin / g > 513 && g < cin && g < cout && cin % (g * 2) == 0 && cout % (g * 2) == 0 {
+        g *= 2;
+    }
+    g
+}
+
+/// VGG-19 (Fig. 13): 16 convolutions in 5 stages + 3 FC layers.
+/// `group_conv=true` replaces each conv with the structured-sparse group
+/// convolution the accelerator executes (§4.4.3-III, Fig. 12).
+pub fn vgg19(group_conv: bool) -> Network {
+    let g = |cin: usize| if group_conv { fit_groups(3, cin, cin.max(64)) } else { 1 };
+    let mut layers = Vec::new();
+    let stages: &[(usize, usize)] = &[(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)];
+    let mut cin = 3;
+    for (si, &(n, cout)) in stages.iter().enumerate() {
+        for li in 0..n {
+            // first conv of stage 1 has cin=3: never grouped
+            let groups = if cin <= 3 { 1 } else { g(cin) };
+            layers.push(conv(&format!("conv{}_{}", si + 1, li + 1), cout, 3, 1, groups));
+            cin = cout;
+        }
+        layers.push(pool(&format!("pool{}", si + 1)));
+    }
+    layers.push(fc("fc6", 4096, true));
+    layers.push(fc("fc7", 4096, true));
+    layers.push(fc("fc8", 1000, false));
+    Network { name: if group_conv { "vgg19-group".into() } else { "vgg19".into() }, input: Shape { h: 224, w: 224, c: 3 }, layers }
+}
+
+/// ResNet-50 (Fig. 14): bottleneck stages as conv shapes (projection
+/// shortcuts included; batch-norms folded at compile time so omitted).
+pub fn resnet50(group_conv: bool) -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer {
+        name: "conv1".into(),
+        kind: LayerKind::Conv { cout: 64, kh: 7, kw: 7, stride: 2, groups: 1, padding: 3 },
+        relu: true,
+    });
+    layers.push(Layer { name: "pool1".into(), kind: LayerKind::MaxPool { window: 3, stride: 2 }, relu: false });
+    // (blocks, mid, out, first-stride)
+    let stages: &[(usize, usize, usize, usize)] =
+        &[(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2), (3, 512, 2048, 2)];
+    let g = |c: usize| if group_conv { fit_groups(3, c, c) } else { 1 };
+    for (si, &(blocks, mid, cout, stride0)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let p = format!("res{}_{}", si + 2, b + 1);
+            layers.push(conv(&format!("{p}_1x1a"), mid, 1, stride, g(mid)));
+            layers.push(conv(&format!("{p}_3x3"), mid, 3, 1, g(mid)));
+            layers.push(conv(&format!("{p}_1x1b"), cout, 1, 1, g(mid)));
+        }
+    }
+    layers.push(fc("fc", 1000, false));
+    Network {
+        name: if group_conv { "resnet50-group".into() } else { "resnet50".into() },
+        input: Shape { h: 224, w: 224, c: 3 },
+        layers,
+    }
+}
+
+/// One Transformer multi-head-attention layer (paper §4.4.4): each head's
+/// projections map onto one PE.
+pub fn transformer_mha(heads: usize, dmodel: usize, seq: usize) -> Network {
+    Network {
+        name: format!("mha-{heads}h-{dmodel}d"),
+        input: Shape { h: 1, w: seq, c: dmodel },
+        layers: vec![Layer {
+            name: "mha".into(),
+            kind: LayerKind::Attention { heads, dmodel, dk: dmodel / heads, seq },
+            relu: false,
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_geometry() {
+        let n = vgg19(false);
+        let convs = n.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv { .. })).count();
+        let fcs = n.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count();
+        assert_eq!(convs, 16);
+        assert_eq!(fcs, 3);
+        let shapes = n.shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().flat(), 1000);
+        // VGG-19 ≈ 19.6 GMACs, ~143.6M params (the canonical numbers)
+        let gmacs = n.macs().unwrap().iter().sum::<u64>() as f64 / 1e9;
+        assert!((gmacs - 19.6).abs() < 1.0, "gmacs {gmacs}");
+        let mparams = n.params().unwrap().iter().sum::<u64>() as f64 / 1e6;
+        assert!((mparams - 143.6).abs() < 3.0, "params {mparams}M");
+    }
+
+    #[test]
+    fn vgg19_fc6_is_the_monster() {
+        // Fig. 15's VGGFC6: 25088 → 4096 ≈ 102.8M params.
+        let n = vgg19(false);
+        let shapes = n.shapes().unwrap();
+        let fc6_idx = n.layers.iter().position(|l| l.name == "fc6").unwrap();
+        assert_eq!(shapes[fc6_idx].flat(), 25088);
+        let p = n.params().unwrap()[fc6_idx];
+        assert!((p as f64 / 1e6 - 102.8).abs() < 0.5, "fc6 params {p}");
+    }
+
+    #[test]
+    fn resnet50_geometry() {
+        let n = resnet50(false);
+        let shapes = n.shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().flat(), 1000);
+        // ResNet-50 ≈ 3.8-4.1 GMACs (without BN/shortcut adds)
+        let gmacs = n.macs().unwrap().iter().sum::<u64>() as f64 / 1e9;
+        assert!(gmacs > 3.0 && gmacs < 4.6, "gmacs {gmacs}");
+    }
+
+    #[test]
+    fn group_conv_reduces_macs() {
+        let dense: u64 = vgg19(false).macs().unwrap().iter().sum();
+        let grouped: u64 = vgg19(true).macs().unwrap().iter().sum();
+        // early 64-channel stages stay lightly grouped, so the whole-network
+        // reduction is ~2.8× (per-layer reductions reach 8×).
+        assert!(grouped < dense / 2, "grouping should slash MACs: {grouped} vs {dense}");
+        // shapes unchanged
+        assert_eq!(vgg19(true).shapes().unwrap(), vgg19(false).shapes().unwrap());
+    }
+
+    #[test]
+    fn alexnet_fc_params_dominate() {
+        // The §5 argument: FC layers own most parameters (~94% in AlexNet).
+        let n = alexnet();
+        let params = n.params().unwrap();
+        let total: u64 = params.iter().sum();
+        let fc: u64 = n
+            .layers
+            .iter()
+            .zip(&params)
+            .filter(|(l, _)| matches!(l.kind, LayerKind::Fc { .. }))
+            .map(|(_, &p)| p)
+            .sum();
+        assert!(fc as f64 / total as f64 > 0.9);
+    }
+
+    #[test]
+    fn lenet_dims() {
+        let n = lenet_300_100();
+        let p: u64 = n.params().unwrap().iter().sum();
+        assert_eq!(p, (800 * 300 + 300 + 300 * 100 + 100 + 100 * 10 + 10) as u64);
+    }
+
+    #[test]
+    fn mha_maps_heads() {
+        let n = transformer_mha(8, 512, 64);
+        assert!(n.macs().unwrap()[0] > 0);
+    }
+}

@@ -1,0 +1,338 @@
+//! Block-diagonal decomposition of structured-pruned layers (paper §2.1).
+//!
+//! [`BlockStructure`] partitions a layer's rows (outputs) and columns
+//! (inputs) into `nb` balanced groups; weight `(r, c)` survives pruning iff
+//! `group(r) == group(c)`. [`PackedLayer`] carries the per-block dense
+//! sub-matrices as INT-k codes plus scales — exactly what each PE holds in
+//! its local weight SRAM.
+
+use anyhow::{bail, Result};
+
+use super::quant::Quantizer;
+use crate::util::rng::Rng;
+
+/// Balanced random row/column partition inducing the block-diagonal mask.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockStructure {
+    pub dout: usize,
+    pub din: usize,
+    pub nb: usize,
+    /// `row_groups[g]` = sorted original row indices owned by block `g`.
+    pub row_groups: Vec<Vec<u32>>,
+    /// `col_groups[g]` = sorted original column indices owned by block `g`.
+    pub col_groups: Vec<Vec<u32>>,
+}
+
+impl BlockStructure {
+    /// Randomly partition `dout × din` into `nb` balanced groups
+    /// (mirror of `python/compile/masks.py::make_structure`).
+    pub fn random(dout: usize, din: usize, nb: usize, rng: &mut Rng) -> Result<BlockStructure> {
+        if nb == 0 || dout % nb != 0 || din % nb != 0 {
+            bail!("dims ({dout},{din}) not divisible by nb={nb}");
+        }
+        let rp = rng.permutation(dout);
+        let cp = rng.permutation(din);
+        let bh = dout / nb;
+        let bw = din / nb;
+        let mut row_groups: Vec<Vec<u32>> = rp.chunks(bh).map(|c| c.to_vec()).collect();
+        let mut col_groups: Vec<Vec<u32>> = cp.chunks(bw).map(|c| c.to_vec()).collect();
+        for g in &mut row_groups {
+            g.sort_unstable();
+        }
+        for g in &mut col_groups {
+            g.sort_unstable();
+        }
+        Ok(BlockStructure { dout, din, nb, row_groups, col_groups })
+    }
+
+    /// Rebuild a structure from flat permutations (as exported by the
+    /// python bundle: `col_perm`/`row_perm` are group-major).
+    pub fn from_flat_perms(dout: usize, din: usize, nb: usize, row_perm: &[u32], col_perm: &[u32]) -> Result<BlockStructure> {
+        if row_perm.len() != dout || col_perm.len() != din {
+            bail!("permutation lengths ({}, {}) mismatch dims ({dout}, {din})", row_perm.len(), col_perm.len());
+        }
+        if nb == 0 || dout % nb != 0 || din % nb != 0 {
+            bail!("dims ({dout},{din}) not divisible by nb={nb}");
+        }
+        let check_bijection = |p: &[u32], n: usize| -> Result<()> {
+            let mut seen = vec![false; n];
+            for &i in p {
+                let i = i as usize;
+                if i >= n || seen[i] {
+                    bail!("not a permutation of 0..{n}");
+                }
+                seen[i] = true;
+            }
+            Ok(())
+        };
+        check_bijection(row_perm, dout)?;
+        check_bijection(col_perm, din)?;
+        let row_groups = row_perm.chunks(dout / nb).map(|c| c.to_vec()).collect();
+        let col_groups = col_perm.chunks(din / nb).map(|c| c.to_vec()).collect();
+        Ok(BlockStructure { dout, din, nb, row_groups, col_groups })
+    }
+
+    pub fn bh(&self) -> usize {
+        self.dout / self.nb
+    }
+
+    pub fn bw(&self) -> usize {
+        self.din / self.nb
+    }
+
+    /// Density of the induced mask = 1/nb.
+    pub fn density(&self) -> f64 {
+        1.0 / self.nb as f64
+    }
+
+    /// Flat input permutation (group-major): `a_packed[i] = a[col_perm[i]]`.
+    pub fn col_perm(&self) -> Vec<u32> {
+        self.col_groups.iter().flatten().copied().collect()
+    }
+
+    /// Flat output permutation: `o_full[row_perm[i]] = o_packed[i]`.
+    pub fn row_perm(&self) -> Vec<u32> {
+        self.row_groups.iter().flatten().copied().collect()
+    }
+
+    /// The Eq. (1) binary mask, row-major `dout × din`.
+    pub fn mask(&self) -> Vec<u8> {
+        let mut m = vec![0u8; self.dout * self.din];
+        for g in 0..self.nb {
+            for &r in &self.row_groups[g] {
+                let base = r as usize * self.din;
+                for &c in &self.col_groups[g] {
+                    m[base + c as usize] = 1;
+                }
+            }
+        }
+        m
+    }
+
+    /// Extract the dense per-block sub-matrices from a full matrix
+    /// (row-major `dout × din`) — the Fig. 1 packing.
+    pub fn pack(&self, w_full: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if w_full.len() != self.dout * self.din {
+            bail!("weight len {} != {}x{}", w_full.len(), self.dout, self.din);
+        }
+        let mut blocks = Vec::with_capacity(self.nb);
+        for g in 0..self.nb {
+            let mut b = Vec::with_capacity(self.bh() * self.bw());
+            for &r in &self.row_groups[g] {
+                let base = r as usize * self.din;
+                for &c in &self.col_groups[g] {
+                    b.push(w_full[base + c as usize]);
+                }
+            }
+            blocks.push(b);
+        }
+        Ok(blocks)
+    }
+
+    /// Scatter packed blocks back to a full (masked) matrix.
+    pub fn unpack(&self, blocks: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if blocks.len() != self.nb {
+            bail!("expected {} blocks, got {}", self.nb, blocks.len());
+        }
+        let mut w = vec![0f32; self.dout * self.din];
+        for g in 0..self.nb {
+            if blocks[g].len() != self.bh() * self.bw() {
+                bail!("block {g} has wrong size");
+            }
+            for (i, &r) in self.row_groups[g].iter().enumerate() {
+                let base = r as usize * self.din;
+                for (j, &c) in self.col_groups[g].iter().enumerate() {
+                    w[base + c as usize] = blocks[g][i * self.bw() + j];
+                }
+            }
+        }
+        Ok(w)
+    }
+}
+
+/// A structured-pruned layer frozen for the accelerator: INT-k weight
+/// codes per block, per-block weight scales, float biases (applied at the
+/// end of the adder tree), and the per-block output quantizer scales.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub structure: BlockStructure,
+    pub bits: u32,
+    /// `codes[g]` — row-major `bh × bw` INT-k weight codes of block `g`.
+    pub codes: Vec<Vec<i8>>,
+    /// Per-block weight scale (dequant: `w = code * w_scale[g]`).
+    pub w_scale: Vec<f32>,
+    /// Per-block bias, `bh` entries each (packed row order).
+    pub bias: Vec<Vec<f32>>,
+    /// Per-block output quantizer scale (end of adder tree); `0.0`
+    /// bypasses the quantizer (logit heads keep full precision).
+    pub out_scale: Vec<f32>,
+    pub relu: bool,
+}
+
+impl PackedLayer {
+    /// Quantize a full dense float matrix into a packed layer using the
+    /// given structure (compiler path for imported dense models).
+    pub fn quantize_from(
+        structure: BlockStructure,
+        bits: u32,
+        w_full: &[f32],
+        bias_full: &[f32],
+        out_scale: Vec<f32>,
+        relu: bool,
+    ) -> Result<PackedLayer> {
+        if bias_full.len() != structure.dout {
+            bail!("bias len {} != dout {}", bias_full.len(), structure.dout);
+        }
+        if out_scale.len() != structure.nb {
+            bail!("out_scale len {} != nb {}", out_scale.len(), structure.nb);
+        }
+        let blocks = structure.pack(w_full)?;
+        let mut codes = Vec::with_capacity(structure.nb);
+        let mut w_scale = Vec::with_capacity(structure.nb);
+        let mut bias = Vec::with_capacity(structure.nb);
+        for (g, blk) in blocks.iter().enumerate() {
+            let q = Quantizer::calibrate(bits, blk);
+            codes.push(blk.iter().map(|&w| q.quantize(w) as i8).collect());
+            w_scale.push(q.scale);
+            bias.push(structure.row_groups[g].iter().map(|&r| bias_full[r as usize]).collect());
+        }
+        Ok(PackedLayer { structure, bits, codes, w_scale, bias, out_scale, relu })
+    }
+
+    /// Reference forward for one input vector (already in original input
+    /// order): gather → per-block integer mat-vec → bias/ReLU/quant →
+    /// scatter. This is the *functional* model; the cycle-accurate
+    /// simulator must produce exactly these numbers.
+    pub fn forward(&self, a: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.structure;
+        if a.len() != s.din {
+            bail!("input len {} != din {}", a.len(), s.din);
+        }
+        let (bh, bw) = (s.bh(), s.bw());
+        let mut out = vec![0f32; s.dout];
+        for g in 0..s.nb {
+            let oq = (self.out_scale[g] > 0.0).then(|| Quantizer::new(self.bits, self.out_scale[g]));
+            for i in 0..bh {
+                let mut acc = 0f64;
+                let row = &self.codes[g][i * bw..(i + 1) * bw];
+                for (j, &c) in row.iter().enumerate() {
+                    acc += c as f64 * a[s.col_groups[g][j] as usize] as f64;
+                }
+                let mut o = (acc as f32) * self.w_scale[g] + self.bias[g][i];
+                if self.relu {
+                    o = o.max(0.0);
+                }
+                out[s.row_groups[g][i] as usize] = match &oq {
+                    Some(q) => q.fake(o),
+                    None => o,
+                };
+            }
+        }
+        Ok(out)
+    }
+
+    /// Weight memory footprint of one PE's block, bits.
+    pub fn weight_bits_per_block(&self) -> usize {
+        self.structure.bh() * self.structure.bw() * self.bits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn structure(dout: usize, din: usize, nb: usize, seed: u64) -> BlockStructure {
+        BlockStructure::random(dout, din, nb, &mut Rng::new(seed)).unwrap()
+    }
+
+    #[test]
+    fn groups_partition_indices() {
+        let s = structure(24, 36, 6, 1);
+        let mut rows: Vec<u32> = s.row_groups.iter().flatten().copied().collect();
+        rows.sort_unstable();
+        assert_eq!(rows, (0..24).collect::<Vec<u32>>());
+        let mut cols: Vec<u32> = s.col_groups.iter().flatten().copied().collect();
+        cols.sort_unstable();
+        assert_eq!(cols, (0..36).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn mask_density_is_one_over_nb() {
+        let s = structure(20, 30, 5, 2);
+        let ones: usize = s.mask().iter().map(|&b| b as usize).sum();
+        assert_eq!(ones, 20 * 30 / 5);
+        assert!((s.density() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = structure(12, 20, 4, 3);
+        let mut rng = Rng::new(9);
+        let mask = s.mask();
+        let w: Vec<f32> = mask.iter().map(|&m| if m == 1 { rng.normal() } else { 0.0 }).collect();
+        let blocks = s.pack(&w).unwrap();
+        let back = s.unpack(&blocks).unwrap();
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn from_flat_perms_roundtrip() {
+        let s = structure(15, 25, 5, 4);
+        let s2 = BlockStructure::from_flat_perms(15, 25, 5, &s.row_perm(), &s.col_perm()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn from_flat_perms_rejects_non_bijection() {
+        assert!(BlockStructure::from_flat_perms(4, 4, 2, &[0, 0, 1, 2], &[0, 1, 2, 3]).is_err());
+        assert!(BlockStructure::from_flat_perms(4, 4, 2, &[0, 1, 2, 9], &[0, 1, 2, 3]).is_err());
+        assert!(BlockStructure::from_flat_perms(4, 4, 3, &[0, 1, 2, 3], &[0, 1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn random_rejects_indivisible() {
+        assert!(BlockStructure::random(10, 12, 3, &mut Rng::new(0)).is_err());
+        assert!(BlockStructure::random(10, 12, 0, &mut Rng::new(0)).is_err());
+    }
+
+    #[test]
+    fn packed_forward_matches_masked_dense() {
+        // Fig. 1 equivalence at the rust level: packed integer forward ==
+        // masked dense float forward when weights sit on the INT grid.
+        let s = structure(12, 18, 3, 5);
+        let mut rng = Rng::new(6);
+        // weights already on an INT4 grid so quantization is exact
+        let scale = 0.25f32;
+        let mask = s.mask();
+        let w: Vec<f32> = mask
+            .iter()
+            .map(|&m| if m == 1 { (rng.below(15) as i32 - 7) as f32 * scale } else { 0.0 })
+            .collect();
+        let bias: Vec<f32> = (0..12).map(|_| rng.normal() * 0.1).collect();
+        let a: Vec<f32> = (0..18).map(|_| rng.normal()).collect();
+        let out_scale = vec![0.5f32; 3];
+
+        let packed = PackedLayer::quantize_from(s.clone(), 4, &w, &bias, out_scale.clone(), true).unwrap();
+        let got = packed.forward(&a).unwrap();
+
+        // masked dense reference
+        for r in 0..12 {
+            let mut acc = 0f64;
+            for c in 0..18 {
+                acc += (w[r * 18 + c] * mask[r * 18 + c] as f32) as f64 * a[c] as f64;
+            }
+            let pre = (acc as f32 + bias[r]).max(0.0);
+            let g = (0..3).find(|&g| s.row_groups[g].contains(&(r as u32))).unwrap();
+            let want = Quantizer::new(4, out_scale[g]).fake(pre);
+            assert!((got[r] - want).abs() < 1e-4, "row {r}: {} vs {}", got[r], want);
+        }
+    }
+
+    #[test]
+    fn forward_rejects_wrong_input_len() {
+        let s = structure(4, 6, 2, 7);
+        let packed =
+            PackedLayer::quantize_from(s, 4, &vec![0.0; 24], &vec![0.0; 4], vec![1.0; 2], true).unwrap();
+        assert!(packed.forward(&[0.0; 5]).is_err());
+    }
+}

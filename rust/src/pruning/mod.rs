@@ -1,0 +1,15 @@
+//! Structured pruning: permuted-identity masks, block decomposition, and
+//! the INT-k quantizer (paper §2, Eq. (1), Fig. 1).
+//!
+//! This is the rust mirror of `python/compile/masks.py` + `quant.py`: the
+//! compiler uses it to decompose *dense* imported layers (and to generate
+//! synthetic workloads for the figure benches), and the simulator uses the
+//! quantizer as its integer datapath reference. The python and rust sides
+//! are kept behaviourally identical; `rust/tests/integration_golden.rs`
+//! pins the cross-language agreement through the artifact bundle.
+
+pub mod blocks;
+pub mod quant;
+
+pub use blocks::{BlockStructure, PackedLayer};
+pub use quant::Quantizer;

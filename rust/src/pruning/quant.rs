@@ -1,0 +1,141 @@
+//! Symmetric INT-k quantizer — the simulator's integer datapath reference
+//! (paper §2.2). Mirrors `python/compile/kernels/quant.py` exactly:
+//! round-half-to-even, saturate at ±(2^(k-1)-1).
+
+/// Symmetric signed quantizer with a fixed scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub scale: f32,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, scale: f32) -> Quantizer {
+        assert!(bits >= 2, "quantization needs >=2 bits");
+        assert!(scale > 0.0, "scale must be positive");
+        Quantizer { bits, scale }
+    }
+
+    /// Largest positive code: 4 bits → 7 (sign-magnitude-friendly grid).
+    pub fn qmax(bits: u32) -> i32 {
+        (1 << (bits - 1)) - 1
+    }
+
+    /// Fit a per-tensor scale so max|x| hits the top code.
+    pub fn calibrate(bits: u32, xs: &[f32]) -> Quantizer {
+        let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let amax = if amax == 0.0 { 1.0 } else { amax };
+        Quantizer::new(bits, amax / Self::qmax(bits) as f32)
+    }
+
+    /// Float → integer code (round-half-even, saturating).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = Self::qmax(self.bits);
+        let r = round_half_even(x / self.scale);
+        r.clamp(-q, q)
+    }
+
+    /// Integer code → float grid point.
+    #[inline]
+    pub fn dequantize(&self, code: i32) -> f32 {
+        code as f32 * self.scale
+    }
+
+    /// Quantize-dequantize: snap to the INT-k grid.
+    #[inline]
+    pub fn fake(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Round half to even, matching `jnp.round` / numpy semantics so the rust
+/// integer datapath agrees with the python-exported codes bit-for-bit.
+#[inline]
+fn round_half_even(x: f32) -> i32 {
+    let floor = x.floor();
+    let diff = x - floor;
+    let f = floor as i32;
+    if diff > 0.5 {
+        f + 1
+    } else if diff < 0.5 {
+        f
+    } else if f % 2 == 0 {
+        f
+    } else {
+        f + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(Quantizer::qmax(4), 7);
+        assert_eq!(Quantizer::qmax(8), 127);
+        assert_eq!(Quantizer::qmax(16), 32767);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        // numpy: round(0.5)=0, round(1.5)=2, round(2.5)=2, round(-0.5)=0, round(-1.5)=-2
+        assert_eq!(round_half_even(0.5), 0);
+        assert_eq!(round_half_even(1.5), 2);
+        assert_eq!(round_half_even(2.5), 2);
+        assert_eq!(round_half_even(-0.5), 0);
+        assert_eq!(round_half_even(-1.5), -2);
+        assert_eq!(round_half_even(0.49), 0);
+        assert_eq!(round_half_even(0.51), 1);
+        assert_eq!(round_half_even(-2.5), -2);
+    }
+
+    #[test]
+    fn saturates_at_qmax() {
+        let q = Quantizer::new(4, 0.1);
+        assert_eq!(q.quantize(100.0), 7);
+        assert_eq!(q.quantize(-100.0), -7);
+    }
+
+    #[test]
+    fn calibrated_error_within_half_lsb() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f32> = (0..256).map(|_| rng.normal() * 3.0).collect();
+        let q = Quantizer::calibrate(4, &xs);
+        for &x in &xs {
+            assert!((q.fake(x) - x).abs() <= q.scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn idempotent_on_grid() {
+        let mut rng = Rng::new(12);
+        let q = Quantizer::new(4, 0.37);
+        for _ in 0..200 {
+            let x = rng.uniform(-3.0, 3.0);
+            let y = q.fake(x);
+            assert_eq!(q.fake(y), y);
+        }
+    }
+
+    #[test]
+    fn all_zero_calibration_is_safe() {
+        let q = Quantizer::calibrate(4, &[0.0; 8]);
+        assert_eq!(q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn monotone() {
+        let q = Quantizer::new(4, 0.5);
+        let mut prev = i32::MIN;
+        let mut x = -5.0f32;
+        while x < 5.0 {
+            let c = q.quantize(x);
+            assert!(c >= prev);
+            prev = c;
+            x += 0.01;
+        }
+    }
+}

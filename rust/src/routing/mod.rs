@@ -1,0 +1,111 @@
+//! Interconnect design alternatives for the activation shuffle
+//! (paper §3.1.2, Figs. 5 and 6).
+//!
+//! Three implementations of an `N`-activation permutation network are
+//! modeled and, for the mux design, functionally implemented:
+//!
+//! * **Full crossbar** — every input wired to every output; maximally
+//!   flexible, but configuration memory grows as `N²` (one-hot crosspoint
+//!   state per output).
+//! * **Clos multistage** — 3-stage network of `√N`-radix switches; cheaper
+//!   crosspoints but needs per-stage routing tables (`≈ 3·N·log₂N` bits)
+//!   and a non-blocking route computation.
+//! * **Output-multiplexed crossbar (the paper's design)** — each PE
+//!   broadcasts on its own wire; each PE's input is one `P:1` mux driven
+//!   by a select SRAM written at compile time. Config memory is
+//!   `N·log₂P` bits — one to two orders of magnitude below the
+//!   alternatives (Fig. 6).
+
+pub mod mux;
+
+pub use mux::MuxCrossbar;
+
+/// Routing-network design points compared in Fig. 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingDesign {
+    Crossbar,
+    Clos,
+    /// Output-multiplexed crossbar with `P` PEs (the paper's design).
+    Mux { n_pes: usize },
+}
+
+impl RoutingDesign {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingDesign::Crossbar => "crossbar",
+            RoutingDesign::Clos => "clos",
+            RoutingDesign::Mux { .. } => "mux",
+        }
+    }
+
+    /// Configuration/schedule memory (bits) needed to route `n` activation
+    /// values through the network for one layer (Fig. 6's y-axis).
+    pub fn config_bits(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        match self {
+            // One-hot crosspoint state per output column.
+            RoutingDesign::Crossbar => nf * nf,
+            // 3 stages of √N-radix switches, each switch storing its
+            // input→output mapping: 3 · N · log2(N) bits of routing table.
+            RoutingDesign::Clos => 3.0 * nf * nf.log2().max(1.0),
+            // One select per routed value: log2(P) bits, N values.
+            RoutingDesign::Mux { n_pes } => nf * (*n_pes as f64).log2().max(1.0).ceil(),
+        }
+    }
+
+    /// Crosspoint/switch-hardware cost in minimum-width mux-equivalents
+    /// (area proxy used alongside config memory in the DSE).
+    pub fn switch_cost(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        match self {
+            RoutingDesign::Crossbar => nf * nf,
+            RoutingDesign::Clos => {
+                let r = nf.sqrt().ceil();
+                3.0 * r * r * r // 3 stages × r switches × r² crosspoints
+            }
+            RoutingDesign::Mux { n_pes } => {
+                let p = *n_pes as f64;
+                p * p // P muxes of radix P
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_mux_saves_one_to_two_orders_of_magnitude() {
+        // Paper Fig. 6: mux vs multistage and crossbar across data sizes.
+        for &n in &[256usize, 1024, 4096] {
+            let mux = RoutingDesign::Mux { n_pes: 10 }.config_bits(n);
+            let clos = RoutingDesign::Clos.config_bits(n);
+            let xbar = RoutingDesign::Crossbar.config_bits(n);
+            assert!(clos / mux > 5.0, "n={n}: clos/mux {}", clos / mux);
+            assert!(xbar / mux > 60.0, "n={n}: xbar/mux {}", xbar / mux);
+            assert!(xbar > clos, "crossbar must be the most expensive");
+        }
+        // and the gap grows with N (the figure's diverging curves)
+        let gap_small = RoutingDesign::Crossbar.config_bits(128) / RoutingDesign::Mux { n_pes: 10 }.config_bits(128);
+        let gap_big = RoutingDesign::Crossbar.config_bits(4096) / RoutingDesign::Mux { n_pes: 10 }.config_bits(4096);
+        assert!(gap_big > gap_small * 10.0);
+    }
+
+    #[test]
+    fn switch_cost_ordering() {
+        for &n in &[100usize, 1000] {
+            let mux = RoutingDesign::Mux { n_pes: 10 }.switch_cost(n);
+            let clos = RoutingDesign::Clos.switch_cost(n);
+            let xbar = RoutingDesign::Crossbar.switch_cost(n);
+            assert!(mux < clos && clos < xbar, "n={n}: {mux} {clos} {xbar}");
+        }
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(RoutingDesign::Crossbar.name(), "crossbar");
+        assert_eq!(RoutingDesign::Clos.name(), "clos");
+        assert_eq!(RoutingDesign::Mux { n_pes: 4 }.name(), "mux");
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! This is the **golden numeric model**: the exact computation the L2 JAX
+//! graph (with the L1 Pallas kernel inlined, interpret-mode) performs.
+//! The cycle-accurate simulator must agree with it; the coordinator can
+//! serve from either engine. HLO *text* is the interchange format — see
+//! DESIGN.md (jax ≥0.5 serialized protos are rejected by xla_extension
+//! 0.5.1).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// The PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl Executable {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow::anyhow!("reshape to {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let buf = result
+            .first()
+            .and_then(|d| d.first())
+            .context("executable returned no buffers")?;
+        let mut lit = buf.to_literal_sync().map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // return_tuple=True wraps outputs in a tuple
+        let elems = lit.decompose_tuple().map_err(|e| anyhow::anyhow!("decompose: {e:?}"))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().map_err(|er| anyhow::anyhow!("to_vec: {er:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// The artifact manifest written by `make artifacts`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub json: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let json = Json::parse(&text)?;
+        Ok(Manifest { dir, json })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let files = self.json.get("hlo").and_then(Json::as_arr).context("manifest missing hlo")?;
+        let found = files.iter().filter_map(Json::as_str).find(|f| f.contains(name));
+        match found {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!("no HLO artifact matching {name}"),
+        }
+    }
+
+    pub fn model_bundle_path(&self) -> PathBuf {
+        self.dir.join("lenet_model.json")
+    }
+
+    pub fn testvec_path(&self) -> PathBuf {
+        self.dir.join("testvec.json")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Manifest> {
+        Manifest::load(Manifest::default_dir()).ok()
+    }
+
+    #[test]
+    fn golden_model_runs_testvec() {
+        let Some(m) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(m.hlo_path("lenet_b1").unwrap()).unwrap();
+        let tv = crate::util::bundle::Bundle::load(m.testvec_path()).unwrap();
+        let x = tv.tensor("x").unwrap().as_f32().unwrap().to_vec();
+        let want = tv.tensor("logits").unwrap().as_f32().unwrap().to_vec();
+        let din = tv.shape("x").unwrap()[1];
+        // run the first sample through the batch-1 artifact
+        let out = exe.run_f32(&[(&x[..din], &[1, din as i64])]).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = &out[0];
+        assert_eq!(logits.len(), 10);
+        for (i, (&g, &w)) in logits.iter().zip(&want[..10]).enumerate() {
+            assert!((g - w).abs() < 1e-3, "logit {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn manifest_errors_without_artifacts() {
+        assert!(Manifest::load("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Static routing schedule for the activation shuffle (paper §3.1.2).
+//!
+//! Between two structured-pruned layers, the activations produced by layer
+//! `L`'s blocks (each living in one PE's output SRAM) must be delivered to
+//! the PEs computing layer `L+1`, permuted per the mask's column groups.
+//! The permutations are known at compile time, so the routes are a static
+//! schedule: every cycle each source PE broadcasts one activation on the
+//! output-multiplexed crossbar and each destination PE latches at most one
+//! — a 1-to-1 mapping per cycle, verified deadlock- and conflict-free.
+//!
+//! The algorithm is the paper's: sort blocks by pending count, give the
+//! heaviest block priority to claim a destination (round-robin tie
+//! rotation), emit up to `N` routes per cycle.
+
+pub mod routes;
+
+pub use routes::{build_demand, schedule_routes, Assignment, DemandMatrix, RouteSchedule};

@@ -1,0 +1,325 @@
+//! The routing-schedule algorithm and its verification.
+
+use anyhow::{bail, Result};
+
+/// One routed transfer: at `cycle`, source block `src` broadcasts global
+/// activation `act` and destination PE `dst` latches it into input-latch
+/// slot `dst_slot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub cycle: u32,
+    pub src: u16,
+    pub dst: u16,
+    /// Global activation index (position in the producing layer's output).
+    pub act: u32,
+    /// Destination input-latch slot (= position in the consumer block's
+    /// column group — the select-SRAM entry).
+    pub dst_slot: u32,
+}
+
+/// Per (source, destination) demand: which global activation indices the
+/// destination block needs from each source block, with their slots.
+#[derive(Debug, Clone)]
+pub struct DemandMatrix {
+    pub n_src: usize,
+    pub n_dst: usize,
+    /// `items[s][d]` = (act, dst_slot) pairs to deliver from `s` to `d`.
+    pub items: Vec<Vec<Vec<(u32, u32)>>>,
+}
+
+impl DemandMatrix {
+    pub fn total(&self) -> usize {
+        self.items.iter().flatten().map(Vec::len).sum()
+    }
+
+    /// Lower bound on schedule length: the busiest source must send all
+    /// its items one per cycle; the busiest destination must receive all
+    /// its items one per cycle.
+    pub fn lower_bound(&self) -> usize {
+        let src_max = (0..self.n_src)
+            .map(|s| self.items[s].iter().map(Vec::len).sum::<usize>())
+            .max()
+            .unwrap_or(0);
+        let dst_max = (0..self.n_dst)
+            .map(|d| (0..self.n_src).map(|s| self.items[s][d].len()).sum::<usize>())
+            .max()
+            .unwrap_or(0);
+        src_max.max(dst_max)
+    }
+}
+
+/// Build the demand matrix between a producer layer and a consumer layer.
+///
+/// `producer_groups[s]` lists the global activation indices block `s`
+/// produces (the previous layer's `row_groups`, or a chunked split of the
+/// network input for the first layer). `consumer_groups[d]` lists the
+/// activation indices PE `d` needs, in latch-slot order (the next layer's
+/// `col_groups`).
+pub fn build_demand(producer_groups: &[Vec<u32>], consumer_groups: &[Vec<u32>]) -> Result<DemandMatrix> {
+    let n_src = producer_groups.len();
+    let n_dst = consumer_groups.len();
+    // owner[act] = source block producing it
+    let total: usize = producer_groups.iter().map(Vec::len).sum();
+    let mut owner = vec![u16::MAX; total];
+    for (s, g) in producer_groups.iter().enumerate() {
+        for &a in g {
+            let a = a as usize;
+            if a >= total {
+                bail!("producer activation {a} out of range {total}");
+            }
+            if owner[a] != u16::MAX {
+                bail!("activation {a} produced by two blocks");
+            }
+            owner[a] = s as u16;
+        }
+    }
+    let mut items = vec![vec![Vec::new(); n_dst]; n_src];
+    for (d, g) in consumer_groups.iter().enumerate() {
+        for (slot, &a) in g.iter().enumerate() {
+            let s = *owner
+                .get(a as usize)
+                .filter(|&&o| o != u16::MAX)
+                .ok_or_else(|| anyhow::anyhow!("consumer needs unproduced activation {a}"))?;
+            items[s as usize][d].push((a, slot as u32));
+        }
+    }
+    Ok(DemandMatrix { n_src, n_dst, items })
+}
+
+/// The emitted static schedule.
+#[derive(Debug, Clone)]
+pub struct RouteSchedule {
+    pub n_src: usize,
+    pub n_dst: usize,
+    pub assignments: Vec<Assignment>,
+    pub n_cycles: u32,
+    /// The demand's lower bound, for congestion accounting.
+    pub lower_bound: u32,
+}
+
+impl RouteSchedule {
+    /// Congestion overhead: 1.0 = perfectly packed schedule.
+    pub fn efficiency(&self) -> f64 {
+        if self.n_cycles == 0 {
+            1.0
+        } else {
+            self.lower_bound as f64 / self.n_cycles as f64
+        }
+    }
+
+    /// Verify the paper's invariants: per-cycle 1-to-1 mapping (each source
+    /// broadcasts ≤1, each destination latches ≤1) and exactly-once
+    /// delivery of every demanded item.
+    pub fn verify(&self, demand: &DemandMatrix) -> Result<()> {
+        let mut per_cycle_src = vec![vec![false; self.n_src]; self.n_cycles as usize];
+        let mut per_cycle_dst = vec![vec![false; self.n_dst]; self.n_cycles as usize];
+        let mut delivered: Vec<Vec<Vec<(u32, u32)>>> = vec![vec![Vec::new(); self.n_dst]; self.n_src];
+        for a in &self.assignments {
+            let (c, s, d) = (a.cycle as usize, a.src as usize, a.dst as usize);
+            if c >= self.n_cycles as usize || s >= self.n_src || d >= self.n_dst {
+                bail!("assignment out of range: {a:?}");
+            }
+            if per_cycle_src[c][s] {
+                bail!("source {s} broadcasts twice in cycle {c}");
+            }
+            if per_cycle_dst[c][d] {
+                bail!("destination {d} latches twice in cycle {c}");
+            }
+            per_cycle_src[c][s] = true;
+            per_cycle_dst[c][d] = true;
+            delivered[s][d].push((a.act, a.dst_slot));
+        }
+        for s in 0..self.n_src {
+            for d in 0..self.n_dst {
+                let mut want = demand.items[s][d].clone();
+                let mut got = delivered[s][d].clone();
+                want.sort_unstable();
+                got.sort_unstable();
+                if want != got {
+                    bail!("delivery mismatch for src {s} → dst {d}: want {} items, got {}", want.len(), got.len());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paper's greedy priority scheduler.
+///
+/// Every cycle: sort source blocks by remaining pending count (heaviest
+/// first — "the block with the highest number is given the priority"),
+/// rotate ties round-robin, and let each source claim the still-unclaimed
+/// destination for which it holds the most pending items. Guarantees
+/// forward progress (any source with pending items and a free matching
+/// destination routes), hence deadlock-freedom; the verification pass
+/// re-checks every invariant on the emitted schedule.
+pub fn schedule_routes(demand: &DemandMatrix) -> Result<RouteSchedule> {
+    let n_src = demand.n_src;
+    let n_dst = demand.n_dst;
+    // Per-pair FIFO queues (consume in slot order for SRAM-friendly reads).
+    let mut queues: Vec<Vec<std::collections::VecDeque<(u32, u32)>>> = demand
+        .items
+        .iter()
+        .map(|row| row.iter().map(|v| v.iter().copied().collect()).collect())
+        .collect();
+    let mut remaining: Vec<usize> = (0..n_src).map(|s| queues[s].iter().map(|q| q.len()).sum()).collect();
+    let mut pending_total: usize = remaining.iter().sum();
+
+    let mut assignments = Vec::with_capacity(pending_total);
+    let mut cycle: u32 = 0;
+    let mut rr_offset: usize = 0; // round-robin rotation of priority ties
+    let mut dst_used = vec![u32::MAX; n_dst]; // cycle tag, avoids re-alloc
+
+    while pending_total > 0 {
+        // Priority order: heaviest remaining first; ties rotate by rr_offset.
+        let mut order: Vec<usize> = (0..n_src).filter(|&s| remaining[s] > 0).collect();
+        order.sort_by_key(|&s| (std::cmp::Reverse(remaining[s]), (s + n_src - rr_offset % n_src) % n_src));
+
+        let mut progressed = false;
+        for &s in &order {
+            // Claim the free destination with the largest pending count.
+            let mut best: Option<(usize, usize)> = None; // (count, dst)
+            for d in 0..n_dst {
+                if dst_used[d] == cycle {
+                    continue;
+                }
+                let c = queues[s][d].len();
+                if c > 0 && best.map_or(true, |(bc, _)| c > bc) {
+                    best = Some((c, d));
+                }
+            }
+            if let Some((_, d)) = best {
+                let (act, dst_slot) = queues[s][d].pop_front().unwrap();
+                dst_used[d] = cycle;
+                remaining[s] -= 1;
+                pending_total -= 1;
+                assignments.push(Assignment { cycle, src: s as u16, dst: d as u16, act, dst_slot });
+                progressed = true;
+            }
+        }
+        if !progressed {
+            bail!("routing deadlock at cycle {cycle}: {pending_total} items stuck");
+        }
+        cycle += 1;
+        rr_offset += 1;
+    }
+
+    Ok(RouteSchedule {
+        n_src,
+        n_dst,
+        assignments,
+        n_cycles: cycle,
+        lower_bound: demand.lower_bound() as u32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::BlockStructure;
+    use crate::util::rng::Rng;
+
+    fn chunked(n: usize, k: usize) -> Vec<Vec<u32>> {
+        (0..k).map(|g| ((g * n / k) as u32..((g + 1) * n / k) as u32).collect()).collect()
+    }
+
+    #[test]
+    fn uniform_all_to_all_hits_lower_bound() {
+        // k blocks each needing k items, one from every source: a perfect
+        // round-robin exists, so the greedy schedule must be optimal.
+        let k = 8;
+        let producers = chunked(k * k, k);
+        // consumer d needs item (s*k + d) from each source s
+        let consumers: Vec<Vec<u32>> =
+            (0..k).map(|d| (0..k).map(|s| (s * k + d) as u32).collect()).collect();
+        let demand = build_demand(&producers, &consumers).unwrap();
+        let sched = schedule_routes(&demand).unwrap();
+        sched.verify(&demand).unwrap();
+        assert_eq!(sched.n_cycles as usize, demand.lower_bound());
+        assert_eq!(sched.n_cycles, k as u32);
+    }
+
+    #[test]
+    fn layer_to_layer_structured_schedule() {
+        // Real shape: layer L (nb=5 over 40 outs) feeding layer L+1
+        // (nb=5 over 40 ins).
+        let mut rng = Rng::new(3);
+        let l0 = BlockStructure::random(40, 30, 5, &mut rng).unwrap();
+        let l1 = BlockStructure::random(20, 40, 5, &mut rng).unwrap();
+        let demand = build_demand(&l0.row_groups, &l1.col_groups).unwrap();
+        assert_eq!(demand.total(), 40); // every activation routed once
+        let sched = schedule_routes(&demand).unwrap();
+        sched.verify(&demand).unwrap();
+        assert!(sched.efficiency() > 0.5, "efficiency {}", sched.efficiency());
+    }
+
+    #[test]
+    fn skewed_demand_still_schedules() {
+        // One destination needs everything from one source: length = n.
+        let producers = chunked(16, 4);
+        let consumers = vec![(0..16).map(|i| i as u32).collect::<Vec<u32>>()];
+        let demand = build_demand(&producers, &consumers).unwrap();
+        let sched = schedule_routes(&demand).unwrap();
+        sched.verify(&demand).unwrap();
+        assert_eq!(sched.n_cycles, 16); // dst bottleneck: one latch per cycle
+        assert_eq!(sched.lower_bound, 16);
+    }
+
+    #[test]
+    fn detects_unproduced_activation() {
+        let producers = chunked(8, 2);
+        let consumers = vec![vec![0, 99]];
+        assert!(build_demand(&producers, &consumers).is_err());
+    }
+
+    #[test]
+    fn detects_double_production() {
+        let producers = vec![vec![0, 1], vec![1, 2]];
+        let consumers = vec![vec![0]];
+        assert!(build_demand(&producers, &consumers).is_err());
+    }
+
+    #[test]
+    fn verify_catches_conflicts() {
+        let producers = chunked(4, 2);
+        let consumers = chunked(4, 2);
+        let demand = build_demand(&producers, &consumers).unwrap();
+        let mut sched = schedule_routes(&demand).unwrap();
+        sched.verify(&demand).unwrap();
+        // corrupt: move every assignment to cycle 0 → dst conflicts
+        for a in &mut sched.assignments {
+            a.cycle = 0;
+        }
+        assert!(sched.verify(&demand).is_err());
+    }
+
+    #[test]
+    fn empty_demand_is_trivial() {
+        let demand = DemandMatrix { n_src: 3, n_dst: 3, items: vec![vec![Vec::new(); 3]; 3] };
+        let sched = schedule_routes(&demand).unwrap();
+        assert_eq!(sched.n_cycles, 0);
+        sched.verify(&demand).unwrap();
+    }
+
+    #[test]
+    fn random_structures_schedule_near_optimally() {
+        // Property-style sweep: random producer/consumer partitions must
+        // verify and stay within 1.6× of the lower bound.
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let nb = 2 + rng.usize_below(6);
+            let n = nb * (2 + rng.usize_below(10));
+            let prod = BlockStructure::random(n, n, nb, &mut rng).unwrap();
+            let cons = BlockStructure::random(n, n, nb, &mut rng).unwrap();
+            let demand = build_demand(&prod.row_groups, &cons.col_groups).unwrap();
+            let sched = schedule_routes(&demand).unwrap();
+            sched.verify(&demand).unwrap();
+            assert!(
+                (sched.n_cycles as usize) <= demand.lower_bound() * 8 / 5 + 2,
+                "seed {seed}: {} cycles vs lb {}",
+                sched.n_cycles,
+                demand.lower_bound()
+            );
+        }
+    }
+}

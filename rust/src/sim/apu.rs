@@ -1,0 +1,638 @@
+//! The APU machine: PE array + crossbar + host core executing programs.
+//!
+//! ## Folding (paper §4.4.3-II, Fig. 15's VGGFC6)
+//!
+//! A layer with more blocks than PEs is compiled into *waves*: several
+//! `ConfigLayer` groups sharing one `layer` id. Wave scatters accumulate
+//! into a pending buffer that commits to the visible activation stream
+//! when the next layer id appears (or at program end). Layers whose total
+//! weight footprint exceeds the PE SRAM residency are *streamed*: their
+//! weight DMA is charged on every inference instead of once at load —
+//! exactly the effect that makes the paper's VGGFC6 speedup dip.
+
+use anyhow::{bail, Context, Result};
+
+use super::pe::PeUnit;
+use crate::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
+use crate::isa::{DataSegment, HostOpKind, Insn, Program};
+use crate::pruning::Quantizer;
+use crate::routing::MuxCrossbar;
+
+/// Machine parameters (one generated design instance).
+#[derive(Debug, Clone)]
+pub struct ApuConfig {
+    pub n_pes: usize,
+    /// Weight SRAM capacity per PE, bits.
+    pub pe_sram_bits: usize,
+    pub clock_ghz: f64,
+}
+
+impl Default for ApuConfig {
+    /// The paper's silicon instance: 10 PEs, 640 kb weight SRAM each
+    /// (400×400 INT4), 1 GHz.
+    fn default() -> Self {
+        ApuConfig { n_pes: 10, pe_sram_bits: 640_000, clock_ghz: 1.0 }
+    }
+}
+
+/// Cycle and energy accounting, accumulated across `run` calls.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimStats {
+    pub route_cycles: u64,
+    pub compute_cycles: u64,
+    pub host_cycles: u64,
+    pub route_pj: f64,
+    pub compute_pj: f64,
+    pub host_pj: f64,
+    /// One-time weight/program DMA energy (charged at `load`).
+    pub load_pj: f64,
+    /// Per-run weight streaming DMA (folded layers that don't fit).
+    pub stream_pj: f64,
+    /// Cycles stalled on weight streaming (64-bit DMA bus).
+    pub stream_cycles: u64,
+    pub macs: u64,
+    pub inferences: u64,
+}
+
+impl SimStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.route_cycles + self.compute_cycles + self.host_cycles + self.stream_cycles
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.route_pj + self.compute_pj + self.host_pj + self.stream_pj
+    }
+
+    /// Wall-clock seconds at the configured clock.
+    pub fn seconds(&self, clock_ghz: f64) -> f64 {
+        self.total_cycles() as f64 / (clock_ghz * 1e9)
+    }
+
+    /// Paper-normalized ops (§4.3): 4 ops per MAC slot (multiply + the
+    /// mixed-precision tree + quantize, re-expressed at base precision).
+    pub fn normalized_ops(&self) -> f64 {
+        4.0 * self.macs as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Plan {
+    program: Program,
+    /// Total resident weight bits (one-time DMA).
+    weight_bits: u64,
+    /// True if weights exceed residency: stream per run.
+    streamed: bool,
+}
+
+/// The simulated machine.
+#[derive(Debug)]
+pub struct Apu {
+    pub cfg: ApuConfig,
+    tech: Tech,
+    pes: Vec<PeUnit>,
+    crossbar: MuxCrossbar,
+    plan: Option<Plan>,
+    stats: SimStats,
+    /// Committed activations (the routing phase's source stream).
+    acts: Vec<f32>,
+    act_owner: Vec<u16>,
+    /// Pending layer accumulation (wave scatters land here).
+    pending: Vec<f32>,
+    pending_owner: Vec<u16>,
+    cur: Option<LayerCtx>,
+}
+
+#[derive(Debug, Clone)]
+struct LayerCtx {
+    layer_id: u16,
+    nb: usize,
+    bh: usize,
+    bw: usize,
+    bits: u32,
+    scales_loaded: usize,
+}
+
+impl Apu {
+    pub fn new(cfg: ApuConfig) -> Apu {
+        let pes = (0..cfg.n_pes).map(|_| PeUnit::new(cfg.pe_sram_bits)).collect();
+        let crossbar = MuxCrossbar::new(cfg.n_pes);
+        Apu {
+            cfg,
+            tech: Tech::tsmc16(),
+            pes,
+            crossbar,
+            plan: None,
+            stats: SimStats::default(),
+            acts: Vec::new(),
+            act_owner: Vec::new(),
+            pending: Vec::new(),
+            pending_owner: Vec::new(),
+            cur: None,
+        }
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = SimStats::default();
+    }
+
+    /// Validate and load a program; charges the one-time weight DMA when
+    /// the network fits residency, else marks it streamed.
+    pub fn load(&mut self, program: &Program) -> Result<()> {
+        program.validate()?;
+        let mut per_pe_bits = vec![0u64; self.cfg.n_pes];
+        let mut weight_bits = 0u64;
+        let mut cur_bits = 4u32;
+        for insn in &program.insns {
+            match insn {
+                Insn::ConfigLayer { nb, bits, .. } => {
+                    if *nb as usize > self.cfg.n_pes {
+                        bail!("wave has {nb} blocks but machine has {} PEs (compiler must fold)", self.cfg.n_pes);
+                    }
+                    cur_bits = *bits as u32;
+                }
+                Insn::LoadWeights { pe, seg } => {
+                    if *pe as usize >= self.cfg.n_pes {
+                        bail!("LoadWeights pe {pe} out of range");
+                    }
+                    let n = program.segment(*seg)?.as_i8()?.len() as u64;
+                    let bits = n * cur_bits as u64;
+                    per_pe_bits[*pe as usize] += bits;
+                    weight_bits += bits;
+                }
+                _ => {}
+            }
+        }
+        let streamed = per_pe_bits.iter().any(|&b| b > self.cfg.pe_sram_bits as u64);
+        if !streamed {
+            self.stats.load_pj += self.tech.dram_pj(weight_bits as usize)
+                + self.tech.sram_write_pj(weight_bits as usize, self.cfg.pe_sram_bits);
+        }
+        self.plan = Some(Plan { program: program.clone(), weight_bits, streamed });
+        Ok(())
+    }
+
+    /// Execute one inference over the loaded program.
+    pub fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let plan = self.plan.take().context("no program loaded")?;
+        let result = self.run_inner(&plan, input);
+        self.plan = Some(plan);
+        result
+    }
+
+    fn run_inner(&mut self, plan: &Plan, input: &[f32]) -> Result<Vec<f32>> {
+        let p = &plan.program;
+        if input.len() != p.din {
+            bail!("input len {} != program din {}", input.len(), p.din);
+        }
+        self.acts = input.to_vec();
+        self.act_owner = vec![u16::MAX; input.len()];
+        self.pending.clear();
+        self.pending_owner.clear();
+        self.cur = None;
+
+        for insn in &p.insns {
+            match insn {
+                Insn::ConfigLayer { layer, nb, bh, bw, bits, relu } => {
+                    // New layer id commits the previous layer's waves.
+                    if self.cur.as_ref().map(|c| c.layer_id) != Some(*layer) {
+                        self.commit_pending();
+                    }
+                    let (nb, bh, bw) = (*nb as usize, *bh as usize, *bw as usize);
+                    for pe in self.pes.iter_mut().take(nb) {
+                        pe.configure(bh, bw, *bits as u32, *relu)?;
+                    }
+                    self.cur = Some(LayerCtx { layer_id: *layer, nb, bh, bw, bits: *bits as u32, scales_loaded: 0 });
+                }
+                Insn::LoadWeights { pe, seg } => {
+                    let codes = p.segment(*seg)?.as_i8()?;
+                    if plan.streamed {
+                        // weights streamed from DRAM each run (folding dip)
+                        let ctx = self.cur.as_ref().context("LoadWeights before ConfigLayer")?;
+                        let bits = codes.len() * ctx.bits as usize;
+                        self.stats.stream_pj += self.tech.dram_pj(bits)
+                            + self.tech.sram_write_pj(bits, self.cfg.pe_sram_bits);
+                        self.stats.stream_cycles += (bits as u64).div_ceil(64); // 64-bit DMA bus
+                    }
+                    let n = self.pes.len();
+                    self.pes
+                        .get_mut(*pe as usize)
+                        .with_context(|| format!("PE {pe} out of range {n}"))?
+                        .load_weights(codes)?;
+                }
+                Insn::LoadBias { pe, seg } => {
+                    let b = p.segment(*seg)?.as_f32()?;
+                    let n = self.pes.len();
+                    self.pes
+                        .get_mut(*pe as usize)
+                        .with_context(|| format!("PE {pe} out of range {n}"))?
+                        .load_bias(b)?;
+                }
+                Insn::SetScales { pe, seg } => {
+                    let s = p.segment(*seg)?.as_f32()?;
+                    if s.len() != 2 {
+                        bail!("scales segment must be [w_scale, out_scale]");
+                    }
+                    let n = self.pes.len();
+                    self.pes
+                        .get_mut(*pe as usize)
+                        .with_context(|| format!("PE {pe} out of range {n}"))?
+                        .set_scales(s[0], s[1])?;
+                    if let Some(c) = self.cur.as_mut() {
+                        c.scales_loaded += 1;
+                    }
+                }
+                Insn::Route { seg, from_input } => {
+                    let routes = p.segment(*seg)?.as_routes()?;
+                    self.route_phase(routes, *from_input)?;
+                }
+                Insn::Compute { rows } => self.compute_phase(*rows as usize)?,
+                Insn::Scatter { seg } => {
+                    let perm = p.segment(*seg)?.as_u32()?;
+                    self.scatter_phase(perm)?;
+                }
+                Insn::HostOp { op, seg } => {
+                    self.commit_pending();
+                    let params = p.segment(*seg)?.as_f32()?;
+                    self.host_op(*op, params)?;
+                }
+                Insn::HostDense { w_seg, b_seg, relu } => {
+                    self.commit_pending();
+                    let w = p.segment(*w_seg)?.as_f32()?;
+                    let b = p.segment(*b_seg)?.as_f32()?;
+                    self.host_dense(w, b, *relu)?;
+                }
+                Insn::Halt => break,
+            }
+        }
+        self.commit_pending();
+        self.stats.inferences += 1;
+        if self.acts.len() != p.dout {
+            bail!("program produced {} outputs, expected {}", self.acts.len(), p.dout);
+        }
+        Ok(self.acts.clone())
+    }
+
+    /// Commit accumulated wave scatters into the visible stream.
+    fn commit_pending(&mut self) {
+        if !self.pending.is_empty() {
+            self.acts = std::mem::take(&mut self.pending);
+            self.act_owner = std::mem::take(&mut self.pending_owner);
+        }
+    }
+
+    /// Routing phase: drive the crossbar cycle by cycle from the static
+    /// schedule. Sources are either the input stream (chunk blocks) or the
+    /// previous layer's PE output SRAMs.
+    fn route_phase(&mut self, routes: &[crate::sched::Assignment], from_input: bool) -> Result<()> {
+        let ctx = self.cur.clone().context("Route before ConfigLayer")?;
+        let bits = ctx.bits as usize;
+        if ctx.scales_loaded < ctx.nb {
+            bail!("Route before all {} PE scales loaded ({} done)", ctx.nb, ctx.scales_loaded);
+        }
+        for pe in self.pes.iter_mut().take(ctx.nb) {
+            pe.clear_latch();
+        }
+        // Per-assignment energy is identical within a phase: hoist it.
+        let src_read = if from_input {
+            self.tech.dram_pj(bits)
+        } else {
+            self.tech.sram_read_pj(bits, (ctx.bh * bits).max(1))
+        };
+        let pj_per_route =
+            src_read + self.tech.mux_pj_per_bit * bits as f64 + bits as f64 * self.tech.latch_pj_per_bit;
+        let mut n_cycles = 0u32;
+        let mut i = 0usize;
+        // dst → slot scratch, tagged by cycle to avoid clearing (n_pes is small).
+        let mut slot_of = vec![(u32::MAX, 0u32); self.cfg.n_pes];
+        while i < routes.len() {
+            let cycle = routes[i].cycle;
+            self.crossbar.begin_cycle();
+            let mut j = i;
+            while j < routes.len() && routes[j].cycle == cycle {
+                let a = routes[j];
+                let act = a.act as usize;
+                if act >= self.acts.len() {
+                    bail!("route references activation {act} beyond buffer {}", self.acts.len());
+                }
+                if !from_input {
+                    let owner = self.act_owner[act];
+                    if owner != u16::MAX && owner != a.src % self.cfg.n_pes as u16 {
+                        bail!("schedule says PE {} broadcasts act {act} but PE {owner} owns it", a.src);
+                    }
+                }
+                let wire = a.src as usize % self.cfg.n_pes;
+                self.crossbar.broadcast(wire, self.acts[act])?;
+                self.crossbar.select(a.dst as usize, wire)?;
+                slot_of[a.dst as usize] = (cycle, a.dst_slot);
+                j += 1;
+            }
+            self.stats.route_pj += pj_per_route * (j - i) as f64;
+            for (dst, value) in self.crossbar.end_cycle()? {
+                let (tag, slot) = slot_of[dst];
+                if tag != cycle {
+                    bail!("latched PE {dst} missing slot");
+                }
+                self.pes[dst].latch_input(slot as usize, value)?;
+            }
+            n_cycles += 1;
+            i = j;
+        }
+        self.stats.route_cycles += n_cycles as u64;
+        Ok(())
+    }
+
+    /// MAC phase: all nb PEs compute one output row per cycle in parallel.
+    fn compute_phase(&mut self, rows: usize) -> Result<()> {
+        let ctx = self.cur.clone().context("Compute before ConfigLayer")?;
+        if rows != ctx.bh {
+            bail!("Compute rows {rows} != configured bh {}", ctx.bh);
+        }
+        let pe_cfg = PeConfig { block_h: ctx.bh, block_w: ctx.bw, bits: ctx.bits };
+        let per_cycle = pe_energy_per_cycle(&self.tech, &pe_cfg, PeMode::Spatial).total();
+        for row in 0..rows {
+            for pe in self.pes.iter_mut().take(ctx.nb) {
+                pe.compute_row(row)?;
+            }
+        }
+        self.stats.compute_cycles += rows as u64;
+        self.stats.compute_pj += per_cycle * rows as f64 * ctx.nb as f64;
+        self.stats.macs += (ctx.nb * ctx.bh * ctx.bw) as u64;
+        Ok(())
+    }
+
+    /// Publish PE outputs into the pending layer buffer. Segment layout:
+    /// `[dout, perm...]` — `perm[g*bh + i]` is the global index of PE g's
+    /// row-i output. Zero extra cycles: outputs physically stay in the PE
+    /// output SRAMs (Fig. 5); this is compile-time knowledge.
+    fn scatter_phase(&mut self, seg: &[u32]) -> Result<()> {
+        let ctx = self.cur.clone().context("Scatter before ConfigLayer")?;
+        let (dout, perm) = seg.split_first().context("empty scatter segment")?;
+        let dout = *dout as usize;
+        if perm.len() != ctx.nb * ctx.bh {
+            bail!("scatter perm len {} != {}x{}", perm.len(), ctx.nb, ctx.bh);
+        }
+        if self.pending.is_empty() {
+            self.pending = vec![0f32; dout];
+            self.pending_owner = vec![u16::MAX; dout];
+        } else if self.pending.len() != dout {
+            bail!("wave scatter dout {dout} != pending {}", self.pending.len());
+        }
+        for g in 0..ctx.nb {
+            for i in 0..ctx.bh {
+                let global = perm[g * ctx.bh + i] as usize;
+                if global >= dout {
+                    bail!("scatter index {global} out of range {dout}");
+                }
+                if self.pending_owner[global] != u16::MAX {
+                    bail!("scatter writes activation {global} twice");
+                }
+                self.pending[global] = self.pes[g].output(i).context("missing PE output")?;
+                self.pending_owner[global] = g as u16;
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-MAC host-core ops (paper §4.4.3): charged per element.
+    fn host_op(&mut self, op: HostOpKind, params: &[f32]) -> Result<()> {
+        match op {
+            HostOpKind::Relu => {
+                for v in &mut self.acts {
+                    *v = v.max(0.0);
+                }
+                self.charge_host(self.acts.len());
+            }
+            HostOpKind::Quantize => {
+                let scale = *params.first().context("Quantize needs [scale]")?;
+                let bits = params.get(1).map(|&b| b as u32).unwrap_or(4);
+                let q = Quantizer::new(bits, scale);
+                for v in &mut self.acts {
+                    *v = q.fake(*v);
+                }
+                self.act_owner = vec![u16::MAX; self.acts.len()];
+                self.charge_host(self.acts.len());
+            }
+            HostOpKind::MaxPool => {
+                let [h, w, c, win, stride] = params else {
+                    bail!("MaxPool needs [h, w, c, window, stride]");
+                };
+                let (h, w, c, win, stride) =
+                    (*h as usize, *w as usize, *c as usize, *win as usize, *stride as usize);
+                if h * w * c != self.acts.len() {
+                    bail!("MaxPool shape {h}x{w}x{c} != buffer {}", self.acts.len());
+                }
+                let oh = (h - win) / stride + 1;
+                let ow = (w - win) / stride + 1;
+                let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for ch in 0..c {
+                            let mut m = f32::NEG_INFINITY;
+                            for ky in 0..win {
+                                for kx in 0..win {
+                                    let v = self.acts[((oy * stride + ky) * w + (ox * stride + kx)) * c + ch];
+                                    m = m.max(v);
+                                }
+                            }
+                            out[(oy * ow + ox) * c + ch] = m;
+                        }
+                    }
+                }
+                self.charge_host(out.len() * win * win);
+                self.acts = out;
+                self.act_owner = vec![u16::MAX; self.acts.len()];
+            }
+            HostOpKind::FoldAdd => {
+                if params.len() != self.acts.len() {
+                    bail!("FoldAdd len {} != buffer {}", params.len(), self.acts.len());
+                }
+                for (v, p) in self.acts.iter_mut().zip(params) {
+                    *v += p;
+                }
+                self.charge_host(params.len());
+            }
+            HostOpKind::Gather => {
+                let mut out = Vec::with_capacity(params.len());
+                for &idx in params {
+                    let i = idx as usize;
+                    if i >= self.acts.len() {
+                        bail!("Gather index {i} out of range");
+                    }
+                    out.push(self.acts[i]);
+                }
+                self.charge_host(params.len());
+                self.acts = out;
+                self.act_owner = vec![u16::MAX; self.acts.len()];
+            }
+        }
+        Ok(())
+    }
+
+    /// Small dense FC on the host core (1 MAC/cycle).
+    fn host_dense(&mut self, w: &[f32], b: &[f32], relu: bool) -> Result<()> {
+        let din = self.acts.len();
+        let dout = b.len();
+        if w.len() != dout * din {
+            bail!("host dense: weight len {} != {dout}x{din}", w.len());
+        }
+        let mut out = vec![0f32; dout];
+        for (r, o) in out.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            let row = &w[r * din..(r + 1) * din];
+            for (x, wv) in self.acts.iter().zip(row) {
+                acc += x * wv;
+            }
+            *o = if relu { (acc + b[r]).max(0.0) } else { acc + b[r] };
+        }
+        self.stats.host_cycles += (dout * din) as u64;
+        self.stats.host_pj += (dout * din) as f64 * self.tech.host_pj_per_op;
+        self.stats.macs += (dout * din) as u64;
+        self.acts = out;
+        self.act_owner = vec![u16::MAX; self.acts.len()];
+        Ok(())
+    }
+
+    fn charge_host(&mut self, ops: usize) {
+        self.stats.host_cycles += ops as u64;
+        self.stats.host_pj += ops as f64 * self.tech.host_pj_per_op;
+    }
+
+    /// Resident weight footprint of the loaded program, bits.
+    pub fn resident_weight_bits(&self) -> u64 {
+        self.plan.as_ref().map(|p| p.weight_bits).unwrap_or(0)
+    }
+
+    /// Whether the loaded program streams weights per run.
+    pub fn is_streamed(&self) -> bool {
+        self.plan.as_ref().map(|p| p.streamed).unwrap_or(false)
+    }
+}
+
+// Silence unused-import warning when DataSegment only appears in tests.
+#[allow(unused_imports)]
+use DataSegment as _DataSegmentUsed;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::emit::compile_packed_layers;
+    use crate::pruning::{BlockStructure, PackedLayer};
+    use crate::util::rng::Rng;
+
+    /// Build a 2-layer packed network and an input.
+    fn two_layer_fixture(seed: u64) -> (Vec<PackedLayer>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let s1 = BlockStructure::random(20, 16, 4, &mut rng).unwrap();
+        let s2 = BlockStructure::random(12, 20, 4, &mut rng).unwrap();
+        let mk = |s: &BlockStructure, rng: &mut Rng| {
+            let w: Vec<f32> = (0..s.dout * s.din).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..s.dout).map(|_| rng.normal() * 0.1).collect();
+            let os: Vec<f32> = (0..s.nb).map(|_| 0.2 + rng.f64() as f32 * 0.3).collect();
+            PackedLayer::quantize_from(s.clone(), 4, &w, &b, os, true).unwrap()
+        };
+        let l1 = mk(&s1, &mut rng);
+        let l2 = mk(&s2, &mut rng);
+        let input: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        (vec![l1, l2], input)
+    }
+
+    fn reference_forward(layers: &[PackedLayer], input: &[f32], in_scale: f32) -> Vec<f32> {
+        let inq = Quantizer::new(4, in_scale);
+        let mut h: Vec<f32> = input.iter().map(|&x| inq.fake(x)).collect();
+        for l in layers {
+            h = l.forward(&h).unwrap();
+        }
+        h
+    }
+
+    #[test]
+    fn simulated_network_matches_functional_reference() {
+        let (layers, input) = two_layer_fixture(31);
+        let in_scale = Quantizer::calibrate(4, &input).scale;
+        let want = reference_forward(&layers, &input, in_scale);
+
+        let program = compile_packed_layers("fixture", &layers, in_scale, 4, 4).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        let got = apu.run(&input).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-5, "output {i}: {g} vs {w}");
+        }
+        let st = apu.stats();
+        assert!(st.route_cycles > 0 && st.compute_cycles > 0);
+        assert_eq!(st.macs, (20 * 16 / 4 + 12 * 20 / 4) as u64); // density 1/4
+        assert_eq!(st.inferences, 1);
+        assert!(!apu.is_streamed());
+    }
+
+    #[test]
+    fn folded_layer_matches_reference_on_fewer_pes() {
+        // 4-block layers on a 2-PE machine: the compiler folds into waves.
+        let (layers, input) = two_layer_fixture(35);
+        let in_scale = Quantizer::calibrate(4, &input).scale;
+        let want = reference_forward(&layers, &input, in_scale);
+
+        let program = compile_packed_layers("fixture", &layers, in_scale, 4, 2).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes: 2, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        let got = apu.run(&input).unwrap();
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-5, "output {i}: {g} vs {w}");
+        }
+        // folding serializes waves: more compute cycles than the 4-PE run
+        let mut apu4 = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        let p4 = compile_packed_layers("fixture", &layers, in_scale, 4, 4).unwrap();
+        apu4.load(&p4).unwrap();
+        apu4.run(&input).unwrap();
+        assert!(apu.stats().compute_cycles > apu4.stats().compute_cycles);
+    }
+
+    #[test]
+    fn repeated_runs_accumulate_stats() {
+        let (layers, input) = two_layer_fixture(32);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 4).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        let a = apu.run(&input).unwrap();
+        let cycles_one = apu.stats().total_cycles();
+        let b = apu.run(&input).unwrap();
+        assert_eq!(a, b); // deterministic
+        assert_eq!(apu.stats().total_cycles(), 2 * cycles_one);
+        assert_eq!(apu.stats().inferences, 2);
+    }
+
+    #[test]
+    fn streamed_mode_charges_per_run() {
+        let (layers, input) = two_layer_fixture(36);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 2).unwrap();
+        // PE SRAM big enough for one wave's block but not the whole net
+        let mut apu = Apu::new(ApuConfig { n_pes: 2, pe_sram_bits: 100, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        assert!(apu.is_streamed());
+        apu.run(&input).unwrap();
+        let s1 = apu.stats().stream_pj;
+        assert!(s1 > 0.0);
+        apu.run(&input).unwrap();
+        assert!((apu.stats().stream_pj - 2.0 * s1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_wrong_input_len() {
+        let (layers, _) = two_layer_fixture(34);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 4).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        assert!(apu.run(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn run_without_load_fails() {
+        let mut apu = Apu::new(ApuConfig::default());
+        assert!(apu.run(&[0.0; 8]).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-accurate APU simulator (the paper's C++ RTL simulator substitute,
+//! §4.2 Fig. 8).
+//!
+//! Executes [`crate::isa::Program`]s over a parameterized machine: an
+//! array of spatial PEs (Fig. 4a datapath), the output-multiplexed
+//! crossbar (Fig. 5), and a host-core model servicing the RoCC command
+//! stream (non-MAC ops, DMA, folding adds). Every cycle is accounted —
+//! routing, compute, and host phases — and every access is charged energy
+//! through [`crate::hwmodel`], so a simulation yields both the numerics
+//! (validated against the PJRT golden model) and the performance/energy
+//! numbers the paper reports.
+
+pub mod apu;
+pub mod pe;
+
+pub use apu::{Apu, ApuConfig, SimStats};
+pub use pe::PeUnit;

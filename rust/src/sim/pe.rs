@@ -1,0 +1,270 @@
+//! One processing element: the Fig. 4a datapath as a functional unit.
+//!
+//! State mirrors the silicon: weight SRAM (INT-k codes), input activation
+//! latch, output SRAM, dequant scales, and the layer geometry. The
+//! `compute_row` step is the spatial datapath — `bw` multipliers, the
+//! mixed-precision adder tree (a single pass here; order-insensitive
+//! integer sum), bias add, ReLU, and the end-of-tree quantizer. The
+//! integer accumulation is exact (i32 codes × f32 grid inputs carried in
+//! f32 products summed in f64 ≡ the tree's widening adders), so the PE
+//! reproduces `pruning::PackedLayer::forward` bit-for-bit.
+
+use anyhow::{bail, Result};
+
+use crate::pruning::Quantizer;
+
+/// Runtime state of one PE.
+#[derive(Debug, Clone)]
+pub struct PeUnit {
+    /// Weight SRAM capacity, bits (generator parameter).
+    pub sram_capacity_bits: usize,
+    // -- per-layer configuration --
+    bh: usize,
+    bw: usize,
+    bits: u32,
+    relu: bool,
+    /// INT-k weight codes, row-major `bh × bw`.
+    codes: Vec<i8>,
+    /// Dequant scale for this block's weights.
+    w_scale: f32,
+    /// Output quantizer scale (end of adder tree).
+    out_scale: f32,
+    bias: Vec<f32>,
+    /// Input activation latch (one value per column slot).
+    latch: Vec<f32>,
+    latch_filled: Vec<bool>,
+    /// Output SRAM: one activation per computed row.
+    out: Vec<f32>,
+}
+
+impl PeUnit {
+    pub fn new(sram_capacity_bits: usize) -> PeUnit {
+        PeUnit {
+            sram_capacity_bits,
+            bh: 0,
+            bw: 0,
+            bits: 4,
+            relu: true,
+            codes: Vec::new(),
+            w_scale: 1.0,
+            out_scale: 1.0,
+            bias: Vec::new(),
+            latch: Vec::new(),
+            latch_filled: Vec::new(),
+            out: Vec::new(),
+        }
+    }
+
+    /// Configure layer geometry (ConfigLayer), clearing transient state.
+    pub fn configure(&mut self, bh: usize, bw: usize, bits: u32, relu: bool) -> Result<()> {
+        let need = bh * bw * bits as usize;
+        if need > self.sram_capacity_bits {
+            bail!("block {bh}x{bw}x{bits}b needs {need} bits > PE SRAM {}", self.sram_capacity_bits);
+        }
+        self.bh = bh;
+        self.bw = bw;
+        self.bits = bits;
+        self.relu = relu;
+        self.codes.clear();
+        self.bias.clear();
+        self.latch = vec![0.0; bw];
+        self.latch_filled = vec![false; bw];
+        self.out = vec![0.0; bh];
+        Ok(())
+    }
+
+    pub fn load_weights(&mut self, codes: &[i8]) -> Result<()> {
+        if codes.len() != self.bh * self.bw {
+            bail!("weight segment {} != {}x{}", codes.len(), self.bh, self.bw);
+        }
+        let q = Quantizer::qmax(self.bits) as i32;
+        if let Some(&c) = codes.iter().find(|&&c| (c as i32).abs() > q) {
+            bail!("weight code {c} exceeds INT{} range", self.bits);
+        }
+        self.codes = codes.to_vec();
+        Ok(())
+    }
+
+    pub fn load_bias(&mut self, bias: &[f32]) -> Result<()> {
+        if bias.len() != self.bh {
+            bail!("bias segment {} != bh {}", bias.len(), self.bh);
+        }
+        self.bias = bias.to_vec();
+        Ok(())
+    }
+
+    /// Set dequant scales. `out_scale == 0.0` bypasses the output
+    /// quantizer (full-precision logit heads).
+    pub fn set_scales(&mut self, w_scale: f32, out_scale: f32) -> Result<()> {
+        if w_scale <= 0.0 || out_scale < 0.0 {
+            bail!("bad scales: w={w_scale} out={out_scale}");
+        }
+        self.w_scale = w_scale;
+        self.out_scale = out_scale;
+        Ok(())
+    }
+
+    /// Latch one routed activation into slot `slot` (routing phase).
+    pub fn latch_input(&mut self, slot: usize, value: f32) -> Result<()> {
+        if slot >= self.bw {
+            bail!("latch slot {slot} out of range {}", self.bw);
+        }
+        if self.latch_filled[slot] {
+            bail!("latch slot {slot} written twice this layer");
+        }
+        self.latch[slot] = value;
+        self.latch_filled[slot] = true;
+        Ok(())
+    }
+
+    /// All input slots latched? (the spatial mode's precondition: "all the
+    /// input activations related to a particular output value need to be
+    /// available prior to the computation").
+    pub fn inputs_ready(&self) -> bool {
+        self.latch_filled.iter().all(|&f| f)
+    }
+
+    /// One spatial cycle: read weight row `row`, multiply-reduce against
+    /// the latch, bias + ReLU + quantize, write the output SRAM.
+    pub fn compute_row(&mut self, row: usize) -> Result<f32> {
+        if row >= self.bh {
+            bail!("row {row} out of range {}", self.bh);
+        }
+        if self.codes.is_empty() {
+            bail!("compute before weights loaded");
+        }
+        if !self.inputs_ready() {
+            bail!("compute with {} unfilled latch slots", self.latch_filled.iter().filter(|&&f| !f).count());
+        }
+        let base = row * self.bw;
+        // Multiplier array + adder tree: integer codes × grid activations.
+        // f64 accumulation models the widening tree exactly (no rounding);
+        // the zip form drops per-element bounds checks (§Perf iter 2).
+        let acc: f64 = self.codes[base..base + self.bw]
+            .iter()
+            .zip(&self.latch)
+            .map(|(&c, &a)| c as f64 * a as f64)
+            .sum();
+        let mut o = acc as f32 * self.w_scale + self.bias.get(row).copied().unwrap_or(0.0);
+        if self.relu {
+            o = o.max(0.0);
+        }
+        if self.out_scale > 0.0 {
+            o = Quantizer::new(self.bits, self.out_scale).fake(o);
+        }
+        self.out[row] = o;
+        Ok(o)
+    }
+
+    /// Reset latch-filled flags for the next layer (outputs persist — they
+    /// are the next routing phase's sources).
+    pub fn clear_latch(&mut self) {
+        self.latch_filled.fill(false);
+    }
+
+    pub fn output(&self, row: usize) -> Option<f32> {
+        self.out.get(row).copied()
+    }
+
+    pub fn outputs(&self) -> &[f32] {
+        &self.out
+    }
+
+    pub fn geometry(&self) -> (usize, usize, u32, bool) {
+        (self.bh, self.bw, self.bits, self.relu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ready_pe() -> PeUnit {
+        let mut pe = PeUnit::new(1 << 20);
+        pe.configure(2, 3, 4, true).unwrap();
+        pe.load_weights(&[1, -2, 3, 0, 7, -7]).unwrap();
+        pe.load_bias(&[0.5, -0.25]).unwrap();
+        pe.set_scales(0.5, 0.25).unwrap();
+        for (slot, v) in [(0usize, 1.0f32), (1, -1.0), (2, 0.5)] {
+            pe.latch_input(slot, v).unwrap();
+        }
+        pe
+    }
+
+    #[test]
+    fn computes_expected_values() {
+        let mut pe = ready_pe();
+        // row 0: (1*1 + -2*-1 + 3*0.5) * 0.5 + 0.5 = 4.5*0.5+0.5 = 2.75
+        // quant(2.75 / 0.25 = 11 -> clamp 7) = 1.75
+        assert_eq!(pe.compute_row(0).unwrap(), 1.75);
+        // row 1: (0 + 7*-1 + -7*0.5)*0.5 - 0.25 = -10.5*0.5-0.25 = -5.5 -> relu 0
+        assert_eq!(pe.compute_row(1).unwrap(), 0.0);
+        assert_eq!(pe.outputs(), &[1.75, 0.0]);
+    }
+
+    #[test]
+    fn matches_packed_layer_reference() {
+        use crate::pruning::{BlockStructure, PackedLayer};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        let s = BlockStructure::random(12, 18, 3, &mut rng).unwrap();
+        let w: Vec<f32> = (0..12 * 18).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..12).map(|_| rng.normal() * 0.1).collect();
+        let out_scale: Vec<f32> = (0..3).map(|_| 0.1 + rng.f64() as f32).collect();
+        let packed = PackedLayer::quantize_from(s.clone(), 4, &w, &bias, out_scale.clone(), true).unwrap();
+        let a: Vec<f32> = (0..18).map(|_| rng.normal()).collect();
+        let want = packed.forward(&a).unwrap();
+
+        for g in 0..3 {
+            let mut pe = PeUnit::new(1 << 20);
+            pe.configure(s.bh(), s.bw(), 4, true).unwrap();
+            pe.load_weights(&packed.codes[g]).unwrap();
+            pe.load_bias(&packed.bias[g]).unwrap();
+            pe.set_scales(packed.w_scale[g], out_scale[g]).unwrap();
+            for (slot, &c) in s.col_groups[g].iter().enumerate() {
+                pe.latch_input(slot, a[c as usize]).unwrap();
+            }
+            for (i, &r) in s.row_groups[g].iter().enumerate() {
+                let got = pe.compute_row(i).unwrap();
+                assert_eq!(got, want[r as usize], "block {g} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn enforces_capacity() {
+        let mut pe = PeUnit::new(100);
+        assert!(pe.configure(10, 10, 4, true).is_err());
+        assert!(pe.configure(5, 5, 4, true).is_ok());
+    }
+
+    #[test]
+    fn rejects_out_of_range_codes() {
+        let mut pe = PeUnit::new(1 << 10);
+        pe.configure(1, 2, 4, false).unwrap();
+        assert!(pe.load_weights(&[8, 0]).is_err());
+        assert!(pe.load_weights(&[7, -7]).is_ok());
+    }
+
+    #[test]
+    fn requires_full_latch() {
+        let mut pe = PeUnit::new(1 << 10);
+        pe.configure(1, 2, 4, false).unwrap();
+        pe.load_weights(&[1, 1]).unwrap();
+        pe.load_bias(&[0.0]).unwrap();
+        pe.latch_input(0, 1.0).unwrap();
+        assert!(pe.compute_row(0).is_err()); // slot 1 missing
+        pe.latch_input(1, 1.0).unwrap();
+        assert!(pe.compute_row(0).is_ok());
+    }
+
+    #[test]
+    fn double_latch_rejected_until_cleared() {
+        let mut pe = PeUnit::new(1 << 10);
+        pe.configure(1, 1, 4, false).unwrap();
+        pe.latch_input(0, 1.0).unwrap();
+        assert!(pe.latch_input(0, 2.0).is_err());
+        pe.clear_latch();
+        assert!(pe.latch_input(0, 2.0).is_ok());
+    }
+}

@@ -1,0 +1,83 @@
+//! Micro-benchmark harness (criterion is unavailable offline; this is the
+//! substrate substitute — warmup, fixed-duration sampling, summary stats).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark.
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.0} ns/iter (median {:>10.0}, min {:>10.0}, sd {:>8.0}, n={})",
+            self.name, self.mean_ns, self.median_ns, self.min_ns, self.stddev_ns, self.iters
+        )
+    }
+
+    /// Throughput helper: items per second given items processed per iter.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Time `f` for ~`budget` after a short warmup. `f` returns a value that
+/// is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup
+    let warm_until = Instant::now() + budget / 10;
+    while Instant::now() < warm_until {
+        std::hint::black_box(f());
+    }
+    let mut s = Summary::new();
+    let until = Instant::now() + budget;
+    let mut iters = 0u64;
+    while Instant::now() < until {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        s.add(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        median_ns: s.median(),
+        stddev_ns: s.stddev(),
+        min_ns: s.min(),
+    }
+}
+
+/// Standard per-bench budget (override with APU_BENCH_MS).
+pub fn budget() -> Duration {
+    let ms = std::env::var("APU_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(300u64);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_trivial_closure() {
+        let r = bench("noop", Duration::from_millis(20), || 1 + 1);
+        assert!(r.iters > 100);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn per_second_math() {
+        let r = BenchResult { name: "x".into(), iters: 1, mean_ns: 1e9, median_ns: 1e9, stddev_ns: 0.0, min_ns: 1e9 };
+        assert!((r.per_second(100.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! Reader for the python compile path's tensor bundles.
+//!
+//! A bundle is a JSON manifest (`{"tensors": {name: {dtype, shape, offset,
+//! bytes}}, ...}`) plus a raw little-endian binary blob, written by
+//! `python/compile/aot.py::BundleWriter`. This is the only channel through
+//! which trained weights, permutations, and golden test vectors cross the
+//! python→rust boundary.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// A typed tensor view decoded from a bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I8(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+            Tensor::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            Tensor::I8(v) => Ok(v),
+            _ => bail!("tensor is not i8"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Tensor::U32(v) => Ok(v),
+            _ => bail!("tensor is not u32"),
+        }
+    }
+}
+
+/// A loaded bundle: tensors by name, shapes, and the manifest for
+/// free-form metadata access.
+#[derive(Debug)]
+pub struct Bundle {
+    pub tensors: BTreeMap<String, (Vec<usize>, Tensor)>,
+    pub manifest: Json,
+}
+
+impl Bundle {
+    /// Load `<stem>.json` + the blob it names (relative to the manifest).
+    pub fn load(manifest_path: impl AsRef<Path>) -> Result<Bundle> {
+        let manifest_path = manifest_path.as_ref();
+        let text = std::fs::read_to_string(manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).with_context(|| format!("parsing {}", manifest_path.display()))?;
+        let bin_name = manifest
+            .get("bin")
+            .and_then(Json::as_str)
+            .context("manifest missing 'bin'")?;
+        let bin_path = manifest_path.parent().unwrap_or(Path::new(".")).join(bin_name);
+        let blob = std::fs::read(&bin_path).with_context(|| format!("reading {}", bin_path.display()))?;
+
+        let mut tensors = BTreeMap::new();
+        let tmap = manifest
+            .get("tensors")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'tensors'")?;
+        for (name, meta) in tmap {
+            let dtype = meta.get("dtype").and_then(Json::as_str).context("tensor missing dtype")?;
+            let shape: Vec<usize> = meta
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor missing shape")?
+                .iter()
+                .map(|j| j.as_usize().context("bad shape entry"))
+                .collect::<Result<_>>()?;
+            let offset = meta.get("offset").and_then(Json::as_usize).context("tensor missing offset")?;
+            let nbytes = meta.get("bytes").and_then(Json::as_usize).context("tensor missing bytes")?;
+            if offset + nbytes > blob.len() {
+                bail!("tensor {name} [{offset}..{}] exceeds blob ({} bytes)", offset + nbytes, blob.len());
+            }
+            let raw = &blob[offset..offset + nbytes];
+            let numel: usize = shape.iter().product();
+            let t = match dtype {
+                "f32" => {
+                    ensure_size(name, raw.len(), numel, 4)?;
+                    Tensor::F32(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+                }
+                "i8" => {
+                    ensure_size(name, raw.len(), numel, 1)?;
+                    Tensor::I8(raw.iter().map(|&b| b as i8).collect())
+                }
+                "i32" => {
+                    ensure_size(name, raw.len(), numel, 4)?;
+                    Tensor::I32(raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+                }
+                "u32" => {
+                    ensure_size(name, raw.len(), numel, 4)?;
+                    Tensor::U32(raw.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+                }
+                other => bail!("unsupported dtype {other} for tensor {name}"),
+            };
+            tensors.insert(name.clone(), (shape, t));
+        }
+        Ok(Bundle { tensors, manifest })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .map(|(_, t)| t)
+            .with_context(|| format!("bundle missing tensor {name}"))
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        self.tensors
+            .get(name)
+            .map(|(s, _)| s.as_slice())
+            .with_context(|| format!("bundle missing tensor {name}"))
+    }
+}
+
+fn ensure_size(name: &str, raw: usize, numel: usize, elem: usize) -> Result<()> {
+    if raw != numel * elem {
+        bail!("tensor {name}: {raw} bytes but shape implies {}", numel * elem);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_bundle(dir: &Path) -> std::path::PathBuf {
+        let f32s: Vec<f32> = vec![1.5, -2.0, 3.25];
+        let i8s: Vec<i8> = vec![-7, 0, 7, 3];
+        let mut blob: Vec<u8> = Vec::new();
+        for v in &f32s {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        let i8_off = blob.len();
+        blob.extend(i8s.iter().map(|&v| v as u8));
+        let manifest = format!(
+            r#"{{"bin": "t.bin", "tensors": {{
+              "a": {{"dtype": "f32", "shape": [3], "offset": 0, "bytes": 12}},
+              "b": {{"dtype": "i8", "shape": [2, 2], "offset": {i8_off}, "bytes": 4}}
+            }}, "bits": 4}}"#
+        );
+        std::fs::File::create(dir.join("t.bin")).unwrap().write_all(&blob).unwrap();
+        let mp = dir.join("t.json");
+        std::fs::File::create(&mp).unwrap().write_all(manifest.as_bytes()).unwrap();
+        mp
+    }
+
+    #[test]
+    fn loads_and_types() {
+        let dir = std::env::temp_dir().join(format!("apu_bundle_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mp = write_bundle(&dir);
+        let b = Bundle::load(&mp).unwrap();
+        assert_eq!(b.tensor("a").unwrap().as_f32().unwrap(), &[1.5, -2.0, 3.25]);
+        assert_eq!(b.tensor("b").unwrap().as_i8().unwrap(), &[-7, 0, 7, 3]);
+        assert_eq!(b.shape("b").unwrap(), &[2, 2]);
+        assert_eq!(b.manifest.get("bits").and_then(Json::as_i64), Some(4));
+        assert!(b.tensor("missing").is_err());
+        assert!(b.tensor("a").unwrap().as_i8().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny declarative CLI flag parser for the `apu` binary (no clap offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates usage text from the declared options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declared option: name, default (None = boolean flag), help line.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.values.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.values.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse `argv` against the declared options, filling defaults.
+pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
+    let mut args = Args::default();
+    for o in opts {
+        if let Some(d) = o.default {
+            args.values.insert(o.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let decl = opts.iter().find(|o| o.name == name);
+            match decl {
+                Some(o) if o.default.is_some() => {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), v);
+                }
+                Some(_) => args.flags.push(name.to_string()),
+                None => bail!("unknown option --{name}"),
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render a usage block from the declared options.
+pub fn usage(cmd: &str, summary: &str, opts: &[Opt]) -> String {
+    let mut s = format!("{summary}\n\nUsage: apu {cmd} [options]\n\nOptions:\n");
+    for o in opts {
+        let left = match o.default {
+            Some(d) => format!("  --{} <v> (default {})", o.name, d),
+            None => format!("  --{}", o.name),
+        };
+        s.push_str(&format!("{left:<38} {}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Vec<Opt> {
+        vec![
+            Opt { name: "pes", default: Some("10"), help: "number of PEs" },
+            Opt { name: "verbose", default: None, help: "chatty" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_override() {
+        let a = parse(&sv(&[]), &opts()).unwrap();
+        assert_eq!(a.get_usize("pes").unwrap(), 10);
+        let a = parse(&sv(&["--pes", "4"]), &opts()).unwrap();
+        assert_eq!(a.get_usize("pes").unwrap(), 4);
+        let a = parse(&sv(&["--pes=7"]), &opts()).unwrap();
+        assert_eq!(a.get_usize("pes").unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&sv(&["run", "--verbose", "x.json"]), &opts()).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "x.json"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(parse(&sv(&["--nope"]), &opts()).is_err());
+        assert!(parse(&sv(&["--pes"]), &opts()).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("sim", "Run the simulator", &opts());
+        assert!(u.contains("--pes") && u.contains("number of PEs"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Infrastructure substrates built from scratch for the offline environment.
+//!
+//! The vendored crate set only covers the `xla` closure, so the framework
+//! carries its own implementations of the utilities a production system
+//! would normally pull from crates.io (documented in DESIGN.md §2):
+//!
+//! * [`json`] — a small, strict JSON parser/serializer (model graphs,
+//!   artifact manifests, figure reports).
+//! * [`rng`] — deterministic SplitMix64/xoshiro256** PRNG (mask generation,
+//!   workload synthesis, property tests).
+//! * [`bundle`] — reader for the python-side tensor bundles
+//!   (`*.json` manifest + raw little-endian `*.bin` blob).
+//! * [`stats`] — streaming summary statistics for benches and the
+//!   coordinator's latency accounting.
+//! * [`cli`] — a tiny declarative flag parser for the `apu` binary.
+//! * [`table`] — aligned console tables for figure/benchmark output.
+
+pub mod bench;
+pub mod bundle;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,111 @@
+//! Cross-layer golden test: python-trained artifacts → rust compiler →
+//! cycle-accurate simulator ↔ PJRT golden model (the lowered JAX/Pallas
+//! graph). This is the repo's strongest correctness signal: three
+//! independent implementations of the packed INT4 network must agree.
+//!
+//! Requires `make artifacts`; tests skip (with a note) when absent.
+
+use apu::compiler::{compile_packed_layers, import_bundle};
+use apu::runtime::{Manifest, Runtime};
+use apu::sim::{Apu, ApuConfig};
+use apu::util::bundle::Bundle;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping golden tests: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+}
+
+#[test]
+fn simulator_matches_python_golden_on_all_testvecs() {
+    let Some(m) = manifest() else { return };
+    let model = import_bundle(m.model_bundle_path().to_str().unwrap()).unwrap();
+    let program = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, 10).unwrap();
+    let mut apu = Apu::new(ApuConfig::default());
+    apu.load(&program).unwrap();
+
+    let tv = Bundle::load(m.testvec_path()).unwrap();
+    let x = tv.tensor("x").unwrap().as_f32().unwrap();
+    let golden = tv.tensor("logits").unwrap().as_f32().unwrap();
+    let (n, din) = (tv.shape("x").unwrap()[0], tv.shape("x").unwrap()[1]);
+    for i in 0..n {
+        let out = apu.run(&x[i * din..(i + 1) * din]).unwrap();
+        let want = &golden[i * 10..(i + 1) * 10];
+        for k in 0..10 {
+            assert!(
+                (out[k] - want[k]).abs() < 1e-3,
+                "sample {i} logit {k}: sim {} vs python {}",
+                out[k],
+                want[k]
+            );
+        }
+        assert_eq!(argmax(&out), argmax(want), "sample {i} argmax");
+    }
+}
+
+#[test]
+fn pjrt_golden_matches_python_golden() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(m.hlo_path("lenet_b1").unwrap()).unwrap();
+    let tv = Bundle::load(m.testvec_path()).unwrap();
+    let x = tv.tensor("x").unwrap().as_f32().unwrap();
+    let golden = tv.tensor("logits").unwrap().as_f32().unwrap();
+    let din = tv.shape("x").unwrap()[1];
+    for i in 0..8 {
+        let out = &exe.run_f32(&[(&x[i * din..(i + 1) * din], &[1, din as i64])]).unwrap()[0];
+        for k in 0..10 {
+            assert!((out[k] - golden[i * 10 + k]).abs() < 1e-4, "sample {i} logit {k}");
+        }
+    }
+}
+
+#[test]
+fn batch8_artifact_matches_batch1() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let e1 = rt.load_hlo_text(m.hlo_path("lenet_b1").unwrap()).unwrap();
+    let e8 = rt.load_hlo_text(m.hlo_path("lenet_b8").unwrap()).unwrap();
+    let tv = Bundle::load(m.testvec_path()).unwrap();
+    let x = tv.tensor("x").unwrap().as_f32().unwrap();
+    let din = tv.shape("x").unwrap()[1];
+    let batch = &x[..8 * din];
+    let out8 = &e8.run_f32(&[(batch, &[8, din as i64])]).unwrap()[0];
+    for i in 0..8 {
+        let out1 = &e1.run_f32(&[(&x[i * din..(i + 1) * din], &[1, din as i64])]).unwrap()[0];
+        for k in 0..10 {
+            assert!((out1[k] - out8[i * 10 + k]).abs() < 1e-5, "sample {i} logit {k}");
+        }
+    }
+}
+
+#[test]
+fn fewer_pes_fold_but_agree() {
+    // The same model folded onto 4 PEs must produce identical numerics.
+    let Some(m) = manifest() else { return };
+    let model = import_bundle(m.model_bundle_path().to_str().unwrap()).unwrap();
+    let p10 = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, 10).unwrap();
+    let p4 = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, 4).unwrap();
+    let mut a10 = Apu::new(ApuConfig::default());
+    let mut a4 = Apu::new(ApuConfig { n_pes: 4, ..Default::default() });
+    a10.load(&p10).unwrap();
+    a4.load(&p4).unwrap();
+    let tv = Bundle::load(m.testvec_path()).unwrap();
+    let x = tv.tensor("x").unwrap().as_f32().unwrap();
+    let din = tv.shape("x").unwrap()[1];
+    for i in 0..8 {
+        let o10 = a10.run(&x[i * din..(i + 1) * din]).unwrap();
+        let o4 = a4.run(&x[i * din..(i + 1) * din]).unwrap();
+        assert_eq!(o10, o4, "sample {i}");
+    }
+    // folding serializes: 4-PE machine burns more compute cycles
+    assert!(a4.stats().compute_cycles > a10.stats().compute_cycles);
+}

@@ -1,0 +1,95 @@
+//! End-to-end serving: coordinator + batcher + APU-sim engine under load.
+
+use std::time::Duration;
+
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::coordinator::{ApuEngine, BatchPolicy, Engine, Server, SyntheticLoad};
+use apu::sim::{Apu, ApuConfig};
+
+fn make_engine() -> anyhow::Result<Box<dyn Engine>> {
+    let layers = synthetic_packed_network(&[64, 40, 12], 4, 4, 99)?;
+    let program = compile_packed_layers("srv", &layers, 0.15, 4, 4)?;
+    let apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    Ok(Box::new(ApuEngine::new(apu, &program)?))
+}
+
+#[test]
+fn sustained_load_completes_every_request() {
+    let server = Server::start(
+        make_engine,
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let mut load = SyntheticLoad::new(5000.0, 4);
+    let n = 200;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(load.next_input(64)).unwrap()).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.output.len(), 12);
+        ok += 1;
+    }
+    assert_eq!(ok, n);
+    let mut metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.completed, n as u64);
+    assert!(metrics.batch_sizes.mean() > 1.0, "bursty load should batch");
+    assert!(metrics.latency_us.p99() >= metrics.latency_us.median());
+}
+
+#[test]
+fn deterministic_outputs_regardless_of_batching() {
+    // The same input must produce the same output whether it rides a
+    // batch of 1 or a burst (no cross-request state leaks).
+    let solo = Server::start(
+        make_engine,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let input: Vec<f32> = (0..64).map(|i| ((i * 7 % 15) as f32 - 7.0) * 0.1).collect();
+    let want = solo.infer(input.clone()).unwrap().output;
+    solo.shutdown().unwrap();
+
+    let batched = Server::start(
+        make_engine,
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+    )
+    .unwrap();
+    let mut load = SyntheticLoad::new(1e9, 5);
+    let mut rxs = Vec::new();
+    for i in 0..16 {
+        let x = if i == 7 { input.clone() } else { load.next_input(64) };
+        rxs.push((i, batched.submit(x).unwrap()));
+    }
+    for (i, rx) in rxs {
+        let reply = rx.recv().unwrap();
+        if i == 7 {
+            assert_eq!(reply.output, want);
+        }
+    }
+    batched.shutdown().unwrap();
+}
+
+#[test]
+fn failed_engine_construction_surfaces() {
+    let r = Server::start(
+        || anyhow::bail!("boom"),
+        BatchPolicy::default(),
+    );
+    assert!(r.is_err());
+}
+
+#[test]
+fn server_drains_queue_on_shutdown() {
+    let server = Server::start(
+        make_engine,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+    )
+    .unwrap();
+    let mut load = SyntheticLoad::new(1e9, 6);
+    let rxs: Vec<_> = (0..10).map(|_| server.submit(load.next_input(64)).unwrap()).collect();
+    let metrics = server.shutdown().unwrap(); // must flush pending work
+    assert_eq!(metrics.completed, 10);
+    for rx in rxs {
+        assert!(rx.recv().is_ok());
+    }
+}

@@ -1,0 +1,168 @@
+//! Simulator ↔ cost-model ↔ functional-reference agreement, plus
+//! randomized property sweeps over the whole compile-simulate pipeline
+//! (the proptest role — deterministic seeds, shrink-by-rerun).
+
+use apu::compiler::cost::{cost_network, CostModel, MappingCase};
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::nn::graph::{Layer, LayerKind, Network, Shape};
+use apu::pruning::Quantizer;
+use apu::sim::{Apu, ApuConfig};
+use apu::util::rng::Rng;
+
+/// Functional reference: quantize then fold through PackedLayer::forward.
+fn reference(layers: &[apu::pruning::PackedLayer], input: &[f32], in_scale: f32) -> Vec<f32> {
+    let q = Quantizer::new(4, in_scale);
+    let mut h: Vec<f32> = input.iter().map(|&x| q.fake(x)).collect();
+    for l in layers {
+        h = l.forward(&h).unwrap();
+    }
+    h
+}
+
+#[test]
+fn random_networks_simulate_exactly() {
+    // 20 random network shapes × machine geometries: sim == reference.
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let nb = 2 + rng.usize_below(5);
+        let depth = 1 + rng.usize_below(3);
+        let mut dims = vec![nb * (2 + rng.usize_below(8))];
+        for _ in 0..depth {
+            dims.push(nb * (1 + rng.usize_below(8)));
+        }
+        let n_pes = 1 + rng.usize_below(nb + 2);
+        let layers = synthetic_packed_network(&dims, nb, 4, seed * 7 + 1).unwrap();
+        let program = compile_packed_layers("prop", &layers, 0.11, 4, n_pes).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes, pe_sram_bits: 1 << 22, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        let input: Vec<f32> = (0..dims[0]).map(|_| rng.normal()).collect();
+        let got = apu.run(&input).unwrap();
+        let want = reference(&layers, &input, 0.11);
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-4,
+                "seed {seed} (dims {dims:?}, nb {nb}, pes {n_pes}) output {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cost_model_matches_simulator_cycle_counts() {
+    // The analytic model must reproduce the functional simulator's
+    // compute-cycle accounting for unfolded structured FC stacks.
+    for seed in [3u64, 9, 21] {
+        let nb = 5;
+        let dims = [40usize, 30, 20];
+        let layers = synthetic_packed_network(&dims, nb, 4, seed).unwrap();
+        let program = compile_packed_layers("cc", &layers, 0.1, 4, nb).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes: nb, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        let input: Vec<f32> = (0..40).map(|i| (i as f32 * 0.1).sin()).collect();
+        apu.run(&input).unwrap();
+
+        let net = Network {
+            name: "cc".into(),
+            input: Shape { h: 1, w: 1, c: 40 },
+            layers: vec![
+                Layer { name: "fc1".into(), kind: LayerKind::Fc { dout: 30 }, relu: true },
+                Layer { name: "fc2".into(), kind: LayerKind::Fc { dout: 20 }, relu: true },
+            ],
+        };
+        let model = CostModel {
+            n_pes: nb,
+            pe_h: 1 << 10,
+            pe_w: 1 << 10,
+            bits: 4,
+            clock_ghz: 1.0,
+            fc_blocks: Some(nb),
+            group_conv: true,
+            dma_bits_per_cycle: 64,
+        };
+        let cost = cost_network(&model, &net).unwrap();
+        assert_eq!(cost.layers[0].case, MappingCase::FcStructured);
+        let model_compute: u64 = cost.layers.iter().map(|l| l.compute_cycles).sum();
+        assert_eq!(
+            apu.stats().compute_cycles,
+            model_compute,
+            "seed {seed}: sim {} vs model {model_compute}",
+            apu.stats().compute_cycles
+        );
+    }
+}
+
+#[test]
+fn energy_conservation_across_batches() {
+    // Energy and cycles scale exactly linearly with inference count.
+    let layers = synthetic_packed_network(&[24, 18, 12], 3, 4, 5).unwrap();
+    let program = compile_packed_layers("e", &layers, 0.1, 4, 3).unwrap();
+    let mut apu = Apu::new(ApuConfig { n_pes: 3, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    apu.load(&program).unwrap();
+    let input = vec![0.25f32; 24];
+    apu.run(&input).unwrap();
+    let (c1, e1) = (apu.stats().total_cycles(), apu.stats().total_pj());
+    for _ in 0..4 {
+        apu.run(&input).unwrap();
+    }
+    assert_eq!(apu.stats().total_cycles(), 5 * c1);
+    assert!((apu.stats().total_pj() - 5.0 * e1).abs() < 1e-6);
+}
+
+#[test]
+fn program_encode_decode_executes_identically() {
+    // ISA round-trip: decode(encode(insns)) drives the sim to the same result.
+    use apu::isa::encode::{decode_stream, encode_stream};
+    let layers = synthetic_packed_network(&[20, 15, 10], 5, 4, 11).unwrap();
+    let program = compile_packed_layers("rt", &layers, 0.1, 4, 5).unwrap();
+    let words = encode_stream(&program.insns);
+    let decoded = decode_stream(&words).unwrap();
+    let mut program2 = program.clone();
+    program2.insns = decoded;
+
+    let input: Vec<f32> = (0..20).map(|i| (i as f32 * 0.3).cos()).collect();
+    let mut a1 = Apu::new(ApuConfig { n_pes: 5, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    let mut a2 = Apu::new(ApuConfig { n_pes: 5, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    a1.load(&program).unwrap();
+    a2.load(&program2).unwrap();
+    assert_eq!(a1.run(&input).unwrap(), a2.run(&input).unwrap());
+}
+
+#[test]
+fn corrupted_program_is_rejected_not_miscomputed() {
+    // Failure injection: breaking a segment reference must error, never
+    // silently produce numbers.
+    let layers = synthetic_packed_network(&[12, 8], 2, 4, 13).unwrap();
+    let mut program = compile_packed_layers("bad", &layers, 0.1, 4, 2).unwrap();
+    // point a LoadWeights at a f32 segment
+    for insn in &mut program.insns {
+        if let apu::isa::Insn::LoadWeights { seg, .. } = insn {
+            *seg = 0; // segment 0 is the quantize params (f32)
+            break;
+        }
+    }
+    let mut apu = Apu::new(ApuConfig { n_pes: 2, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    assert!(apu.load(&program).is_err());
+}
+
+#[test]
+fn weight_code_overflow_rejected_at_run() {
+    use apu::isa::{DataSegment, Insn};
+    let layers = synthetic_packed_network(&[12, 8], 2, 4, 14).unwrap();
+    let mut program = compile_packed_layers("ovf", &layers, 0.1, 4, 2).unwrap();
+    // corrupt a weight code beyond INT4
+    for (i, seg) in program.data.iter_mut().enumerate() {
+        if let DataSegment::I8(codes) = seg {
+            codes[0] = 100;
+            let _ = i;
+            break;
+        }
+    }
+    let mut apu = Apu::new(ApuConfig { n_pes: 2, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    apu.load(&program).unwrap();
+    let err = apu.run(&vec![0.1; 12]);
+    assert!(err.is_err(), "overflowing code must be caught");
+    // and the error is the PE's range check, not a panic
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("INT"), "unexpected error: {msg}");
+    let _ = Insn::Halt;
+}
