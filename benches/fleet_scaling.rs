@@ -1,0 +1,107 @@
+//! Bench: fleet scaling + dispatch-policy comparison (the ROADMAP's
+//! scale-out story). Two experiments, both self-contained (synthetic
+//! packed networks — no `make artifacts` needed):
+//!
+//! 1. Throughput scaling 1 → 8 shards under a saturating burst
+//!    (unbounded queues, join-shortest-queue): aggregate req/s should
+//!    grow monotonically 1 → 4 on any multi-core host.
+//! 2. Dispatch-policy comparison at 4 shards under a paced Poisson
+//!    arrival process with bounded queues: per-policy p50/p95/p99,
+//!    rejection rate, and queue depth.
+
+use std::time::{Duration, Instant};
+
+use apu::compiler::{compile_packed_layers, synthetic_packed_network};
+use apu::coordinator::{
+    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, SloReport, SubmitError,
+    SyntheticLoad,
+};
+use apu::sim::{Apu, ApuConfig};
+use apu::util::table::Table;
+
+const DIMS: [usize; 3] = [128, 96, 10];
+const DIN: usize = 128;
+const N_PES: usize = 4;
+
+fn make_engine(shard: usize) -> anyhow::Result<Box<dyn Engine>> {
+    let layers = synthetic_packed_network(&DIMS, N_PES, 4, 1000 + shard as u64)?;
+    let program = compile_packed_layers("fleet-bench", &layers, 0.15, 4, N_PES)?;
+    let apu = Apu::new(ApuConfig { n_pes: N_PES, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn Engine>)
+}
+
+/// Burst `n` requests into a fleet and drain; returns aggregate req/s.
+fn saturated_throughput(shards: usize, n: usize) -> f64 {
+    let fleet = Fleet::start(
+        FleetConfig {
+            shards,
+            policy: DispatchPolicy::JoinShortestQueue,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            queue_cap: usize::MAX, // scaling run: measure service, not admission
+        },
+        make_engine,
+    )
+    .unwrap();
+    let mut load = SyntheticLoad::new(1e9, 42);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n).map(|_| fleet.submit(load.next_input(DIN)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let rps = n as f64 / t0.elapsed().as_secs_f64();
+    fleet.shutdown().unwrap();
+    rps
+}
+
+fn main() {
+    let n = 512;
+    println!("== fleet scaling (saturating burst, {n} requests, jsq) ==");
+    let mut t = Table::new(&["shards", "req/s", "speedup"]);
+    let mut base = 0.0;
+    for shards in [1usize, 2, 4, 8] {
+        let rps = saturated_throughput(shards, n);
+        if shards == 1 {
+            base = rps;
+        }
+        t.row(&[shards.to_string(), format!("{rps:.0}"), format!("{:.2}x", rps / base)]);
+    }
+    println!("{}", t.render());
+
+    // Policy comparison: paced Poisson arrivals at ~1.3x the measured
+    // 4-shard capacity, bounded queues so admission control engages.
+    let shards = 4;
+    let capacity = saturated_throughput(shards, n);
+    let rate = 1.3 * capacity;
+    println!(
+        "== dispatch policies ({shards} shards, rate {rate:.0} req/s ~ 1.3x capacity, queue cap 32) =="
+    );
+    for policy in DispatchPolicy::ALL {
+        let fleet = Fleet::start(
+            FleetConfig {
+                shards,
+                policy,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+                queue_cap: 32,
+            },
+            make_engine,
+        )
+        .unwrap();
+        let mut load = SyntheticLoad::new(rate, 7);
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            std::thread::sleep(load.next_gap());
+            match fleet.submit(load.next_input(DIN)) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Rejected { .. }) => {} // counted in shard state
+                Err(e) => panic!("{e}"),
+            }
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let metrics = fleet.shutdown().unwrap();
+        println!("{}", SloReport::from_metrics(&metrics, elapsed).render());
+    }
+}

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify + lint for the rust crate. Run from the repo root.
+set -euo pipefail
+
+cargo build --release
+cargo test -q
+cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,219 @@
+//! Pluggable request dispatch for the serving fleet.
+//!
+//! The dispatcher is deliberately decoupled from the shard workers: it
+//! sees only a per-shard [`ShardLoad`] snapshot (queued depth, in-flight
+//! count, liveness) and returns the index of the shard a request should
+//! join. That keeps every policy a pure function over the snapshot —
+//! trivially unit-testable without spinning up engines — while the
+//! [`Fleet`](super::fleet::Fleet) keeps the snapshots fresh via atomics.
+//!
+//! Policies (SoftNeuro-style routing choices; see ROADMAP "Fleet serving"):
+//! * `RoundRobin` — cyclic, load-blind; the baseline.
+//! * `LeastOutstanding` — fewest in-flight requests (queued + executing);
+//!   tracks actual shard busyness, the classic least-connections policy.
+//! * `JoinShortestQueue` — fewest requests still waiting to be batched;
+//!   ignores the batch currently executing, so it reacts faster to a
+//!   shard that has just drained its queue into the engine.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One shard's load as seen by the dispatcher at selection time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLoad {
+    /// Requests admitted but not yet taken into an executing batch.
+    pub queued: usize,
+    /// Requests admitted but not yet replied to (queued + executing).
+    pub outstanding: usize,
+    /// False once the shard's engine factory failed or its worker exited.
+    pub alive: bool,
+}
+
+/// Dispatch policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    LeastOutstanding,
+    JoinShortestQueue,
+}
+
+impl DispatchPolicy {
+    /// Parse a CLI spelling (`rr | lo | jsq` or the long names).
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Some(DispatchPolicy::RoundRobin),
+            "lo" | "least-outstanding" | "leastoutstanding" => Some(DispatchPolicy::LeastOutstanding),
+            "jsq" | "join-shortest-queue" | "joinshortestqueue" => Some(DispatchPolicy::JoinShortestQueue),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastOutstanding => "least-outstanding",
+            DispatchPolicy::JoinShortestQueue => "join-shortest-queue",
+        }
+    }
+
+    pub const ALL: [DispatchPolicy; 3] =
+        [DispatchPolicy::RoundRobin, DispatchPolicy::LeastOutstanding, DispatchPolicy::JoinShortestQueue];
+}
+
+/// Stateful dispatcher: the policy plus the round-robin cursor. `select`
+/// takes `&self` so concurrent submitters need no lock.
+#[derive(Debug)]
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    cursor: AtomicUsize,
+}
+
+impl Dispatcher {
+    pub fn new(policy: DispatchPolicy) -> Dispatcher {
+        Dispatcher { policy, cursor: AtomicUsize::new(0) }
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Pick the shard a new request should join, or `None` when no shard
+    /// is alive. Load-aware policies break ties by lowest index, so
+    /// selection is deterministic for a given snapshot.
+    pub fn select(&self, loads: &[ShardLoad]) -> Option<usize> {
+        if !loads.iter().any(|l| l.alive) {
+            return None;
+        }
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                // Cycle over the *live* shards only, so a dead shard's
+                // traffic spreads evenly instead of doubling up on its
+                // successor; the fetch_add makes concurrent submitters
+                // interleave instead of colliding.
+                let alive: Vec<usize> =
+                    loads.iter().enumerate().filter(|(_, l)| l.alive).map(|(i, _)| i).collect();
+                let k = self.cursor.fetch_add(1, Ordering::Relaxed) % alive.len();
+                Some(alive[k])
+            }
+            DispatchPolicy::LeastOutstanding => {
+                argmin_alive(loads, |l| l.outstanding)
+            }
+            DispatchPolicy::JoinShortestQueue => {
+                argmin_alive(loads, |l| l.queued)
+            }
+        }
+    }
+}
+
+fn argmin_alive(loads: &[ShardLoad], key: impl Fn(&ShardLoad) -> usize) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.alive)
+        .min_by_key(|(i, l)| (key(l), *i))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(n: usize) -> Vec<ShardLoad> {
+        vec![ShardLoad { queued: 0, outstanding: 0, alive: true }; n]
+    }
+
+    #[test]
+    fn round_robin_distributes_evenly() {
+        let d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let loads = idle(4);
+        let mut counts = [0usize; 4];
+        for _ in 0..400 {
+            counts[d.select(&loads).unwrap()] += 1;
+        }
+        assert_eq!(counts, [100, 100, 100, 100]);
+    }
+
+    #[test]
+    fn round_robin_skips_dead_shards() {
+        let d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let mut loads = idle(4);
+        loads[1].alive = false;
+        let mut counts = [0usize; 4];
+        for _ in 0..300 {
+            counts[d.select(&loads).unwrap()] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts.iter().sum::<usize>(), 300);
+        // remaining shards still share the load evenly
+        assert_eq!(counts[0], 100);
+        assert_eq!(counts[2], 100);
+        assert_eq!(counts[3], 100);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_shard_under_skew() {
+        let d = Dispatcher::new(DispatchPolicy::LeastOutstanding);
+        let loads = vec![
+            ShardLoad { queued: 0, outstanding: 9, alive: true },
+            ShardLoad { queued: 0, outstanding: 3, alive: true },
+            ShardLoad { queued: 0, outstanding: 0, alive: true }, // idle
+            ShardLoad { queued: 0, outstanding: 7, alive: true },
+        ];
+        for _ in 0..10 {
+            assert_eq!(d.select(&loads), Some(2));
+        }
+    }
+
+    #[test]
+    fn join_shortest_queue_prefers_short_queue_not_low_outstanding() {
+        // First snapshot: shard 1 is better on both signals, so JSQ and
+        // LeastOutstanding agree on it. The second snapshot splits them:
+        // shard 1 has the shorter queue but more in flight, so JSQ keeps
+        // picking 1 while LeastOutstanding switches to 0.
+        let loads = vec![
+            ShardLoad { queued: 8, outstanding: 8, alive: true },
+            ShardLoad { queued: 0, outstanding: 4, alive: true },
+        ];
+        assert_eq!(Dispatcher::new(DispatchPolicy::JoinShortestQueue).select(&loads), Some(1));
+        assert_eq!(
+            Dispatcher::new(DispatchPolicy::LeastOutstanding).select(&loads),
+            Some(1),
+        );
+        let loads2 = vec![
+            ShardLoad { queued: 8, outstanding: 8, alive: true },
+            ShardLoad { queued: 2, outstanding: 12, alive: true },
+        ];
+        assert_eq!(Dispatcher::new(DispatchPolicy::JoinShortestQueue).select(&loads2), Some(1));
+        assert_eq!(Dispatcher::new(DispatchPolicy::LeastOutstanding).select(&loads2), Some(0));
+    }
+
+    #[test]
+    fn load_aware_ties_break_deterministically() {
+        let d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+        let loads = idle(3);
+        for _ in 0..5 {
+            assert_eq!(d.select(&loads), Some(0));
+        }
+    }
+
+    #[test]
+    fn all_dead_yields_none() {
+        for p in DispatchPolicy::ALL {
+            let d = Dispatcher::new(p);
+            let mut loads = idle(2);
+            loads[0].alive = false;
+            loads[1].alive = false;
+            assert_eq!(d.select(&loads), None);
+        }
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in DispatchPolicy::ALL {
+            assert_eq!(DispatchPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("rr"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(DispatchPolicy::parse("lo"), Some(DispatchPolicy::LeastOutstanding));
+        assert_eq!(DispatchPolicy::parse("jsq"), Some(DispatchPolicy::JoinShortestQueue));
+        assert_eq!(DispatchPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,646 @@
+//! Sharded multi-engine serving fleet.
+//!
+//! Scaling *out* across engine replicas, not just batching into one: a
+//! [`Fleet`] spawns N shard workers, each owning its own [`Engine`]
+//! (constructed **inside** the worker thread via a factory closure —
+//! PJRT client handles are not `Send`) and its own deadline-aware
+//! [`Batcher`]. A pluggable [`Dispatcher`] routes each request to a
+//! shard; bounded per-shard queues give explicit admission control
+//! (reject-with-error instead of unbounded buffering), and shutdown
+//! folds per-shard metrics into a [`FleetMetrics`] the SLO reporter
+//! (`coordinator::slo`) turns into p50/p95/p99 / rejection-rate tables.
+//!
+//! The single-engine [`Server`](super::server::Server) is the 1-shard
+//! special case of this module: it shares `serve_loop` and the shard
+//! worker code path, with an effectively unbounded queue.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
+use super::engine::Engine;
+use super::server::{Reply, ServeError, ServerMetrics};
+use crate::util::stats::Summary;
+
+/// One inference request riding through a shard worker.
+pub(super) struct Request {
+    pub(super) input: Vec<f32>,
+    pub(super) submitted: Instant,
+    pub(super) reply: mpsc::Sender<Reply>,
+}
+
+/// Fleet sizing and policy knobs.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of shard workers (each with its own engine + batcher).
+    pub shards: usize,
+    /// How requests are routed to shards.
+    pub policy: DispatchPolicy,
+    /// Per-shard batching policy.
+    pub batch: BatchPolicy,
+    /// Per-shard bound on admitted-but-unbatched requests; a submit that
+    /// lands on a shard at this depth is rejected, not buffered.
+    pub queue_cap: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards: 4,
+            policy: DispatchPolicy::JoinShortestQueue,
+            batch: BatchPolicy::default(),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Shared shard state the dispatcher and admission control read.
+#[derive(Debug, Default)]
+pub(super) struct ShardState {
+    /// Admitted but not yet taken into an executing batch.
+    queued: AtomicUsize,
+    /// Admitted but not yet replied to (queued + executing).
+    outstanding: AtomicUsize,
+    /// Cleared when the engine factory fails or the worker exits.
+    alive: AtomicBool,
+    /// Requests refused by admission control at this shard.
+    rejected: AtomicU64,
+}
+
+impl ShardState {
+    fn new() -> ShardState {
+        ShardState { alive: AtomicBool::new(true), ..Default::default() }
+    }
+
+    fn load(&self) -> ShardLoad {
+        ShardLoad {
+            queued: self.queued.load(Ordering::Relaxed),
+            outstanding: self.outstanding.load(Ordering::Relaxed),
+            alive: self.alive.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct Shard {
+    tx: Option<mpsc::Sender<Request>>,
+    state: Arc<ShardState>,
+    worker: Option<JoinHandle<ServerMetrics>>,
+}
+
+/// Why a submit was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control: the selected shard's queue is at its bound.
+    /// Load-blind policies (round-robin) can reject while other shards
+    /// have room — that cost is exactly what the SLO tables surface.
+    Rejected { shard: usize, depth: usize, cap: usize },
+    /// No live shard to dispatch to (all engines failed or fleet stopped).
+    Unavailable,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected { shard, depth, cap } => {
+                write!(f, "admission control rejected request: shard {shard} queue {depth}/{cap}")
+            }
+            SubmitError::Unavailable => write!(f, "no live shard available"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Aggregated metrics for a whole fleet run.
+#[derive(Debug)]
+pub struct FleetMetrics {
+    /// Per-shard serving metrics, indexed by shard id. Shards whose
+    /// engine factory failed contribute an empty entry.
+    pub shards: Vec<ServerMetrics>,
+    /// `(shard id, error)` for shards whose engine factory failed.
+    pub dead: Vec<(usize, String)>,
+    /// The dispatch policy the run used.
+    pub policy: DispatchPolicy,
+}
+
+impl FleetMetrics {
+    pub fn completed(&self) -> u64 {
+        self.shards.iter().map(|s| s.completed).sum()
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.shards.iter().map(|s| s.failed).sum()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.shards.iter().map(|s| s.rejected).sum()
+    }
+
+    /// Fraction of arrivals (admitted + rejected) that were rejected.
+    pub fn rejection_rate(&self) -> f64 {
+        let arrivals = self.completed() + self.failed() + self.rejected();
+        if arrivals == 0 {
+            0.0
+        } else {
+            self.rejected() as f64 / arrivals as f64
+        }
+    }
+
+    pub fn throughput_rps(&self, elapsed: Duration) -> f64 {
+        self.completed() as f64 / elapsed.as_secs_f64().max(1e-12)
+    }
+
+    /// Fleet-wide latency distribution: the per-shard streams merged, so
+    /// percentiles are exact rather than averaged across shards.
+    pub fn fleet_latency_us(&self) -> Summary {
+        let mut s = Summary::new();
+        for sh in &self.shards {
+            s.merge(&sh.latency_us);
+        }
+        s
+    }
+}
+
+/// A handle to a running fleet of shard workers.
+pub struct Fleet {
+    shards: Vec<Shard>,
+    dispatcher: Dispatcher,
+    config: FleetConfig,
+    dead: Vec<(usize, String)>,
+}
+
+impl Fleet {
+    /// Spawn `config.shards` workers; `make_engine(shard_id)` runs on each
+    /// worker thread (engines are built in-thread — PJRT handles are not
+    /// `Send`). Shards whose factory fails are marked dead and skipped by
+    /// the dispatcher; `start` errors only if *every* factory fails.
+    pub fn start<F>(config: FleetConfig, make_engine: F) -> Result<Fleet>
+    where
+        F: Fn(usize) -> Result<Box<dyn Engine>> + Send + Sync + 'static,
+    {
+        if config.shards == 0 {
+            bail!("fleet needs at least one shard");
+        }
+        if config.queue_cap == 0 {
+            bail!("queue_cap must be at least 1 (0 admits nothing)");
+        }
+        let factory = Arc::new(make_engine);
+        let mut shards = Vec::with_capacity(config.shards);
+        let mut ready = Vec::with_capacity(config.shards);
+        for id in 0..config.shards {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let state = Arc::new(ShardState::new());
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let factory = Arc::clone(&factory);
+            let batch = config.batch.clone();
+            let worker_state = Arc::clone(&state);
+            let worker = std::thread::Builder::new()
+                .name(format!("apu-shard-{id}"))
+                .spawn(move || {
+                    let engine = match factory(id) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            worker_state.alive.store(false, Ordering::Relaxed);
+                            let _ = ready_tx.send(Err(e));
+                            return ServerMetrics::default();
+                        }
+                    };
+                    let metrics = serve_loop(id, engine, batch, rx, &worker_state);
+                    worker_state.alive.store(false, Ordering::Relaxed);
+                    metrics
+                })
+                .with_context(|| format!("spawning shard {id}"))?;
+            shards.push(Shard { tx: Some(tx), state, worker: Some(worker) });
+            ready.push(ready_rx);
+        }
+        let mut dead = Vec::new();
+        for (id, rx) in ready.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => dead.push((id, format!("{e:#}"))),
+                Err(_) => dead.push((id, "worker died during engine construction".into())),
+            }
+        }
+        if dead.len() == config.shards {
+            let (id, err) = &dead[0];
+            bail!("every shard engine failed to construct (shard {id}: {err})");
+        }
+        Ok(Fleet { shards, dispatcher: Dispatcher::new(config.policy), config, dead })
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.config
+    }
+
+    /// Shards that failed engine construction, as `(shard id, error)`.
+    pub fn dead_shards(&self) -> &[(usize, String)] {
+        &self.dead
+    }
+
+    pub fn alive_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.state.load().alive).count()
+    }
+
+    /// Current per-shard load snapshot (what the dispatcher sees).
+    pub fn shard_loads(&self) -> Vec<ShardLoad> {
+        self.shards.iter().map(|s| s.state.load()).collect()
+    }
+
+    /// Route a request to a shard. Admission control: if the selected
+    /// shard's queue is at `queue_cap`, the request is rejected with an
+    /// explicit error — it is never buffered beyond the bound.
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Reply>, SubmitError> {
+        let loads = self.shard_loads();
+        let i = self.dispatcher.select(&loads).ok_or(SubmitError::Unavailable)?;
+        let state = &self.shards[i].state;
+        // Reserve a queue slot (CAS so concurrent submitters cannot
+        // overshoot the bound), or reject.
+        let cap = self.config.queue_cap;
+        let mut depth = state.queued.load(Ordering::Relaxed);
+        loop {
+            if depth >= cap {
+                state.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Rejected { shard: i, depth, cap });
+            }
+            match state.queued.compare_exchange_weak(
+                depth,
+                depth + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(observed) => depth = observed,
+            }
+        }
+        state.outstanding.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { input, submitted: Instant::now(), reply: rtx };
+        let sent = match self.shards[i].tx.as_ref() {
+            Some(tx) => tx.send(req).is_ok(),
+            None => false,
+        };
+        if !sent {
+            // Worker exited underneath us: roll the reservation back and
+            // surface unavailability instead of hanging the caller.
+            state.queued.fetch_sub(1, Ordering::Relaxed);
+            state.outstanding.fetch_sub(1, Ordering::Relaxed);
+            state.alive.store(false, Ordering::Relaxed);
+            return Err(SubmitError::Unavailable);
+        }
+        Ok(rrx)
+    }
+
+    /// Blocking convenience: submit and wait for the reply.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Reply> {
+        let rx = self.submit(input).map_err(anyhow::Error::from)?;
+        rx.recv().context("fleet dropped request")
+    }
+
+    /// Stop all workers (draining their queues) and collect metrics.
+    pub fn shutdown(mut self) -> Result<FleetMetrics> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for shard in &mut self.shards {
+            drop(shard.tx.take());
+        }
+        for shard in &mut self.shards {
+            let worker = shard.worker.take().context("fleet already shut down")?;
+            let mut m = worker.join().map_err(|_| anyhow::anyhow!("shard worker panicked"))?;
+            m.rejected = shard.state.rejected.load(Ordering::Relaxed);
+            out.push(m);
+        }
+        Ok(FleetMetrics { shards: out, dead: std::mem::take(&mut self.dead), policy: self.config.policy })
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for shard in &mut self.shards {
+            drop(shard.tx.take());
+        }
+        for shard in &mut self.shards {
+            if let Some(w) = shard.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+/// The shard worker: drain the channel into the batcher, release batches
+/// by the batching policy, run the engine, reply per request. Shared by
+/// the fleet shards and the single-engine `Server` (its 1-shard case).
+pub(super) fn serve_loop(
+    shard: usize,
+    mut engine: Box<dyn Engine>,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Request>,
+    state: &ShardState,
+) -> ServerMetrics {
+    let mut metrics = ServerMetrics::default();
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        // Fill the batcher: block briefly for the first request, then
+        // drain whatever is already queued.
+        if batcher.is_empty() && open {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => batcher.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(r) => batcher.push(r),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let now = Instant::now();
+        if !batcher.ready(now) && open {
+            if let Some(d) = batcher.next_deadline(now) {
+                // Wait out the batching window (or a new arrival).
+                match rx.recv_timeout(d.min(Duration::from_millis(5))) {
+                    Ok(r) => batcher.push(r),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                }
+                continue;
+            }
+            continue;
+        }
+        let batch = batcher.take_batch();
+        if batch.is_empty() {
+            continue;
+        }
+        // Depth at release time (the batch members are still counted —
+        // the decrement below is what frees their admission slots).
+        metrics.queue_depth.add(state.queued.load(Ordering::Relaxed) as f64);
+        state.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+        let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.input.clone()).collect();
+        let t0 = Instant::now();
+        let result = engine.infer_batch(&inputs);
+        let engine_time = t0.elapsed();
+        metrics.engine_us.add(engine_time.as_secs_f64() * 1e6);
+        metrics.batches += 1;
+        metrics.batch_sizes.add(batch.len() as f64);
+        let batch_size = batch.len();
+        let done = Instant::now();
+        match result {
+            Ok(outputs) => {
+                for (pending, output) in batch.into_iter().zip(outputs) {
+                    let latency = done.duration_since(pending.payload.submitted);
+                    metrics.completed += 1;
+                    metrics.latency_us.add(latency.as_secs_f64() * 1e6);
+                    state.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    let _ = pending.payload.reply.send(Reply {
+                        output: Ok(output),
+                        latency,
+                        batch_size,
+                        shard,
+                    });
+                }
+            }
+            Err(e) => {
+                // A failed batch must not strand its callers: every
+                // request gets an explicit error reply, and the failure
+                // is counted instead of silently dropped.
+                let msg = format!("{e:#}");
+                metrics.failed += batch_size as u64;
+                for pending in batch {
+                    let latency = done.duration_since(pending.payload.submitted);
+                    state.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    let _ = pending.payload.reply.send(Reply {
+                        output: Err(ServeError::Engine(msg.clone())),
+                        latency,
+                        batch_size,
+                        shard,
+                    });
+                }
+            }
+        }
+    }
+    drop(engine);
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+    use crate::coordinator::engine::ApuEngine;
+    use crate::coordinator::server::SyntheticLoad;
+    use crate::sim::{Apu, ApuConfig};
+
+    fn test_engine(seed: u64) -> Result<Box<dyn Engine>> {
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, seed)?;
+        let program = compile_packed_layers("fleet-test", &layers, 0.2, 4, 4)?;
+        let apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        Ok(Box::new(ApuEngine::new(apu, &program)?))
+    }
+
+    fn config(shards: usize, policy: DispatchPolicy, cap: usize) -> FleetConfig {
+        FleetConfig {
+            shards,
+            policy,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn fleet_serves_across_shards() {
+        let fleet =
+            Fleet::start(config(3, DispatchPolicy::RoundRobin, 1024), |_| test_engine(5)).unwrap();
+        let mut load = SyntheticLoad::new(1000.0, 7);
+        let rxs: Vec<_> = (0..30).map(|_| fleet.submit(load.next_input(16)).unwrap()).collect();
+        for rx in rxs {
+            let reply = rx.recv().unwrap();
+            assert_eq!(reply.output.unwrap().len(), 12);
+            assert!(reply.shard < 3);
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.completed(), 30);
+        assert_eq!(m.rejected(), 0);
+        // round-robin: every shard saw exactly a third of the traffic
+        for sh in &m.shards {
+            assert_eq!(sh.completed, 10);
+        }
+    }
+
+    #[test]
+    fn admission_control_rejects_at_bound() {
+        // An engine that blocks until released, so queues actually fill.
+        struct Stalled(mpsc::Receiver<()>);
+        impl Engine for Stalled {
+            fn name(&self) -> &str {
+                "stalled"
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn output_dim(&self) -> usize {
+                1
+            }
+            fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                let _ = self.0.recv();
+                Ok(inputs.to_vec())
+            }
+        }
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate = std::sync::Mutex::new(Some(gate_rx));
+        let cap = 4;
+        let fleet = Fleet::start(
+            FleetConfig {
+                shards: 1,
+                policy: DispatchPolicy::JoinShortestQueue,
+                batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
+                queue_cap: cap,
+            },
+            move |_| Ok(Box::new(Stalled(gate.lock().unwrap().take().unwrap())) as Box<dyn Engine>),
+        )
+        .unwrap();
+        // Saturate: the worker takes one request into an executing batch
+        // and stalls; everything else must queue up to the bound, after
+        // which submits are rejected rather than buffered.
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..64 {
+            match fleet.submit(vec![0.5]) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitError::Rejected { cap: c, .. }) => {
+                    assert_eq!(c, cap);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected > 0, "saturation must trigger admission control");
+        assert!(accepted.len() <= cap + 1, "bound overshot: {} admitted", accepted.len());
+        // Release the engine; every admitted request must still complete.
+        for _ in 0..accepted.len() {
+            let _ = gate_tx.send(());
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.completed(), accepted.len() as u64);
+        assert_eq!(m.rejected(), rejected as u64);
+        for rx in accepted {
+            assert!(rx.recv().unwrap().output.is_ok());
+        }
+    }
+
+    #[test]
+    fn engine_errors_reply_instead_of_dropping() {
+        struct Flaky(u32);
+        impl Engine for Flaky {
+            fn name(&self) -> &str {
+                "flaky"
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn output_dim(&self) -> usize {
+                1
+            }
+            fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                self.0 += 1;
+                if self.0 % 2 == 0 {
+                    bail!("transient engine fault");
+                }
+                Ok(inputs.to_vec())
+            }
+        }
+        let fleet = Fleet::start(
+            FleetConfig {
+                shards: 1,
+                policy: DispatchPolicy::RoundRobin,
+                batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
+                queue_cap: 1024,
+            },
+            |_| Ok(Box::new(Flaky(0)) as Box<dyn Engine>),
+        )
+        .unwrap();
+        let n = 20;
+        let rxs: Vec<_> = (0..n).map(|_| fleet.submit(vec![1.0]).unwrap()).collect();
+        let mut ok = 0;
+        let mut failed = 0;
+        for rx in rxs {
+            match rx.recv().unwrap().output {
+                Ok(_) => ok += 1,
+                Err(ServeError::Engine(msg)) => {
+                    assert!(msg.contains("transient engine fault"));
+                    failed += 1;
+                }
+            }
+        }
+        assert_eq!(ok + failed, n);
+        assert!(failed > 0, "every other batch must fail");
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.completed(), ok as u64);
+        assert_eq!(m.failed(), failed as u64);
+    }
+
+    #[test]
+    fn partial_factory_failure_degrades_not_dies() {
+        let fleet = Fleet::start(config(4, DispatchPolicy::LeastOutstanding, 1024), |id| {
+            if id == 2 {
+                bail!("shard 2 hardware absent");
+            }
+            test_engine(11)
+        })
+        .unwrap();
+        assert_eq!(fleet.alive_shards(), 3);
+        assert_eq!(fleet.dead_shards().len(), 1);
+        assert_eq!(fleet.dead_shards()[0].0, 2);
+        let mut load = SyntheticLoad::new(1000.0, 13);
+        let rxs: Vec<_> = (0..24).map(|_| fleet.submit(load.next_input(16)).unwrap()).collect();
+        for rx in rxs {
+            let reply = rx.recv().unwrap();
+            assert!(reply.output.is_ok());
+            assert_ne!(reply.shard, 2, "dead shard must not receive traffic");
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.completed(), 24);
+        assert_eq!(m.shards[2].completed, 0);
+        assert_eq!(m.dead.len(), 1);
+    }
+
+    #[test]
+    fn all_factories_failing_errors_start() {
+        let r = Fleet::start(config(3, DispatchPolicy::RoundRobin, 16), |id| {
+            bail!("shard {id} boom")
+        });
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.err().unwrap()).contains("every shard engine failed"));
+    }
+
+    #[test]
+    fn counters_return_to_zero_when_drained() {
+        let fleet =
+            Fleet::start(config(2, DispatchPolicy::JoinShortestQueue, 64), |_| test_engine(3)).unwrap();
+        let mut load = SyntheticLoad::new(1000.0, 17);
+        let rxs: Vec<_> = (0..16).map(|_| fleet.submit(load.next_input(16)).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // Every reply has been received, so nothing is queued/outstanding.
+        for l in fleet.shard_loads() {
+            assert_eq!(l.queued, 0);
+            assert_eq!(l.outstanding, 0);
+        }
+        fleet.shutdown().unwrap();
+    }
+}

@@ -2,15 +2,27 @@
 //!
 //! The paper's deployment story (§1, §6) is an edge SoC serving inference
 //! under real-time constraints. This module is the framework around the
-//! accelerator: a request queue, a deadline-aware dynamic batcher, a
-//! worker thread driving an inference engine (the cycle-accurate APU
-//! simulator or the PJRT golden model — python is never on this path),
-//! and latency/throughput metrics.
+//! accelerator: a request queue, a deadline-aware dynamic batcher, shard
+//! workers driving inference engines (the cycle-accurate APU simulator or
+//! the PJRT golden model — python is never on this path), and
+//! latency/throughput metrics.
+//!
+//! Scaling out happens in [`fleet`]: N shard workers (each with its own
+//! engine + batcher) behind a pluggable [`dispatch`] policy, with bounded
+//! per-shard queues (admission control) and [`slo`] reporting
+//! (p50/p95/p99, queue depth, rejection rate). The single-engine
+//! [`Server`] is the 1-shard special case of the fleet.
 
 pub mod batcher;
+pub mod dispatch;
 pub mod engine;
+pub mod fleet;
 pub mod server;
+pub mod slo;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 pub use engine::{ApuEngine, Engine, GoldenEngine};
-pub use server::{Server, ServerMetrics, SyntheticLoad};
+pub use fleet::{Fleet, FleetConfig, FleetMetrics, SubmitError};
+pub use server::{Reply, ServeError, Server, ServerMetrics, SyntheticLoad};
+pub use slo::{SloReport, SloSnapshot};

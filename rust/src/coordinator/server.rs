@@ -1,39 +1,77 @@
-//! The serving loop: worker thread + request channel + metrics.
+//! The single-engine serving loop — the 1-shard special case of the
+//! [`Fleet`](super::fleet::Fleet).
+//!
+//! `Server` keeps the original one-engine API (FnOnce factory, unbounded
+//! queue, `ServerMetrics` on shutdown) but runs on the fleet's shared
+//! shard-worker code path (`fleet::serve_loop`), so batching, error
+//! replies, and metrics behave identically whether one engine or eight
+//! are serving.
 
-use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
+use super::dispatch::DispatchPolicy;
 use super::engine::Engine;
+use super::fleet::{Fleet, FleetConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
-/// One inference request.
-struct Request {
-    input: Vec<f32>,
-    submitted: Instant,
-    reply: mpsc::Sender<Reply>,
+/// How a served request can fail after admission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The engine failed on the batch this request rode in.
+    Engine(String),
 }
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// The response handed back to the caller.
 #[derive(Debug)]
 pub struct Reply {
-    pub output: Vec<f32>,
+    /// The inference result, or the explicit per-request error when the
+    /// engine failed on this batch (the batch is never silently dropped).
+    pub output: Result<Vec<f32>, ServeError>,
     pub latency: Duration,
+    /// Size of the batch this request rode in.
     pub batch_size: usize,
+    /// The shard that served the request (0 for a single-engine server).
+    pub shard: usize,
 }
 
-/// Aggregated serving metrics.
+impl Reply {
+    /// The output, with an engine failure converted into an `anyhow`
+    /// error (convenience for callers that just propagate).
+    pub fn into_output(self) -> Result<Vec<f32>> {
+        self.output.map_err(anyhow::Error::from)
+    }
+}
+
+/// Aggregated serving metrics for one engine (one fleet shard).
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     pub completed: u64,
+    /// Requests that got an explicit engine-error reply.
+    pub failed: u64,
+    /// Requests refused by admission control (always 0 for the unbounded
+    /// single-engine server; filled in from shard state at shutdown).
+    pub rejected: u64,
     pub batches: u64,
     pub latency_us: Summary,
     pub batch_sizes: Summary,
     pub engine_us: Summary,
+    /// Queue depth sampled at every batch release.
+    pub queue_depth: Summary,
 }
 
 impl ServerMetrics {
@@ -42,12 +80,12 @@ impl ServerMetrics {
     }
 }
 
-/// A handle to a running server. The engine is **constructed inside the
-/// worker thread** (PJRT client handles are not `Send`), so `start` takes
-/// a factory closure rather than an engine value.
+/// A handle to a running single-engine server. The engine is
+/// **constructed inside the worker thread** (PJRT client handles are not
+/// `Send`), so `start` takes a factory closure rather than an engine
+/// value. Internally this is a 1-shard [`Fleet`] with an unbounded queue.
 pub struct Server {
-    tx: Option<mpsc::Sender<Request>>,
-    worker: Option<JoinHandle<ServerMetrics>>,
+    fleet: Fleet,
 }
 
 impl Server {
@@ -56,130 +94,39 @@ impl Server {
     where
         F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::spawn(move || {
-            let engine = match make_engine() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(()));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return ServerMetrics::default();
-                }
-            };
-            serve_loop(engine, policy, rx)
-        });
-        ready_rx.recv().context("worker died during engine construction")??;
-        Ok(Server { tx: Some(tx), worker: Some(worker) })
+        // Adapt the one-shot factory to the fleet's per-shard factory;
+        // with exactly one shard it is called exactly once.
+        let cell = Mutex::new(Some(make_engine));
+        let fleet = Fleet::start(
+            FleetConfig {
+                shards: 1,
+                policy: DispatchPolicy::RoundRobin,
+                batch: policy,
+                queue_cap: usize::MAX,
+            },
+            move |_shard| {
+                let f = cell.lock().unwrap().take().context("single-shard factory reused")?;
+                f()
+            },
+        )?;
+        Ok(Server { fleet })
     }
 
     /// Submit a request; returns the channel the reply arrives on.
     pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Reply>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .context("server stopped")?
-            .send(Request { input, submitted: Instant::now(), reply: rtx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rrx)
+        self.fleet.submit(input).map_err(anyhow::Error::from)
     }
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, input: Vec<f32>) -> Result<Reply> {
-        let rx = self.submit(input)?;
-        rx.recv().context("server dropped request")
+        self.fleet.infer(input)
     }
 
     /// Stop the worker and collect metrics.
-    pub fn shutdown(mut self) -> Result<ServerMetrics> {
-        drop(self.tx.take());
-        let worker = self.worker.take().context("already shut down")?;
-        worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))
+    pub fn shutdown(self) -> Result<ServerMetrics> {
+        let metrics = self.fleet.shutdown()?;
+        metrics.shards.into_iter().next().context("no shard metrics")
     }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn serve_loop(
-    mut engine: Box<dyn Engine>,
-    policy: BatchPolicy,
-    rx: mpsc::Receiver<Request>,
-) -> ServerMetrics {
-    let mut metrics = ServerMetrics::default();
-    let mut batcher: Batcher<Request> = Batcher::new(policy);
-    let mut open = true;
-    while open || !batcher.is_empty() {
-        // Fill the batcher: block briefly for the first request, then
-        // drain whatever is already queued.
-        if batcher.is_empty() && open {
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(r) => batcher.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    open = false;
-                    continue;
-                }
-            }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(r) => batcher.push(r),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    open = false;
-                    break;
-                }
-            }
-        }
-        let now = Instant::now();
-        if !batcher.ready(now) && open {
-            if let Some(d) = batcher.next_deadline(now) {
-                // Wait out the batching window (or a new arrival).
-                match rx.recv_timeout(d.min(Duration::from_millis(5))) {
-                    Ok(r) => batcher.push(r),
-                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                }
-                continue;
-            }
-            continue;
-        }
-        let batch = batcher.take_batch();
-        if batch.is_empty() {
-            continue;
-        }
-        let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.input.clone()).collect();
-        let t0 = Instant::now();
-        let outputs = match engine.infer_batch(&inputs) {
-            Ok(o) => o,
-            Err(e) => {
-                eprintln!("engine error, dropping batch: {e:#}");
-                continue;
-            }
-        };
-        let engine_time = t0.elapsed();
-        metrics.engine_us.add(engine_time.as_secs_f64() * 1e6);
-        metrics.batches += 1;
-        metrics.batch_sizes.add(batch.len() as f64);
-        let done = Instant::now();
-        for (pending, output) in batch.into_iter().zip(outputs) {
-            let latency = done.duration_since(pending.payload.submitted);
-            metrics.completed += 1;
-            metrics.latency_us.add(latency.as_secs_f64() * 1e6);
-            let _ = pending.payload.reply.send(Reply { output, latency, batch_size: metrics.batch_sizes.count() as usize });
-        }
-    }
-    drop(engine);
-    metrics
 }
 
 /// Synthetic Poisson arrival generator (the edge workload driver).
@@ -229,12 +176,40 @@ mod tests {
         let receivers: Vec<_> = (0..20).map(|_| server.submit(load.next_input(16)).unwrap()).collect();
         for rx in receivers {
             let reply = rx.recv().unwrap();
-            assert_eq!(reply.output.len(), 12);
+            assert_eq!(reply.shard, 0);
+            assert_eq!(reply.output.unwrap().len(), 12);
         }
         let metrics = server.shutdown().unwrap();
         assert_eq!(metrics.completed, 20);
+        assert_eq!(metrics.failed, 0);
         assert!(metrics.batches >= 5); // max_batch 4 → at least 5 batches
         assert!(metrics.latency_us.mean() > 0.0);
+    }
+
+    #[test]
+    fn reply_batch_size_is_the_ride_size() {
+        // Submit a burst and hold the worker off with a long max_wait so
+        // everything rides one batch: each reply must report that batch's
+        // size, not the cumulative number of batches served.
+        let server = Server::start(
+            || Ok(test_engine()),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        )
+        .unwrap();
+        let mut load = SyntheticLoad::new(1e9, 21);
+        let rxs: Vec<_> = (0..8).map(|_| server.submit(load.next_input(16)).unwrap()).collect();
+        for rx in rxs {
+            let reply = rx.recv().unwrap();
+            assert!(
+                (1..=8).contains(&reply.batch_size),
+                "batch_size {} out of range",
+                reply.batch_size
+            );
+        }
+        // A trailing solo request rides a batch of exactly 1.
+        let reply = server.infer(load.next_input(16)).unwrap();
+        assert_eq!(reply.batch_size, 1);
+        server.shutdown().unwrap();
     }
 
     #[test]

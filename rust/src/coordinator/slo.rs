@@ -1,0 +1,204 @@
+//! SLO accounting: turn a fleet run's raw metrics into per-shard and
+//! fleet-wide latency percentiles, queue-depth, and rejection-rate
+//! summaries — the numbers a production serving fleet is actually held
+//! to (p50/p95/p99 targets, bounded rejection rate).
+
+use std::time::Duration;
+
+use super::fleet::FleetMetrics;
+use super::server::ServerMetrics;
+use crate::util::table::Table;
+
+/// One row of SLO numbers (a shard, or the whole fleet).
+#[derive(Debug, Clone)]
+pub struct SloSnapshot {
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub mean_batch: f64,
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: f64,
+}
+
+impl SloSnapshot {
+    fn from_shard(m: &ServerMetrics) -> SloSnapshot {
+        let mut lat = m.latency_us.clone();
+        SloSnapshot {
+            completed: m.completed,
+            failed: m.failed,
+            rejected: m.rejected,
+            p50_us: lat.p50(),
+            p95_us: lat.p95(),
+            p99_us: lat.p99(),
+            mean_us: lat.mean(),
+            mean_batch: m.batch_sizes.mean(),
+            mean_queue_depth: m.queue_depth.mean(),
+            max_queue_depth: if m.queue_depth.count() == 0 { 0.0 } else { m.queue_depth.max() },
+        }
+    }
+
+    /// Fraction of arrivals (admitted + rejected) that were rejected.
+    pub fn rejection_rate(&self) -> f64 {
+        let arrivals = self.completed + self.failed + self.rejected;
+        if arrivals == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / arrivals as f64
+        }
+    }
+}
+
+/// The full report: one snapshot per shard plus the fleet aggregate
+/// (latency streams merged, so fleet percentiles are exact).
+#[derive(Debug)]
+pub struct SloReport {
+    pub policy: &'static str,
+    pub per_shard: Vec<SloSnapshot>,
+    pub fleet: SloSnapshot,
+    pub dead: Vec<(usize, String)>,
+    pub elapsed: Duration,
+    pub throughput_rps: f64,
+}
+
+impl SloReport {
+    pub fn from_metrics(m: &FleetMetrics, elapsed: Duration) -> SloReport {
+        let per_shard: Vec<SloSnapshot> = m.shards.iter().map(SloSnapshot::from_shard).collect();
+        let mut fleet_lat = m.fleet_latency_us();
+        let mut batch = crate::util::stats::Summary::new();
+        let mut depth = crate::util::stats::Summary::new();
+        for s in &m.shards {
+            batch.merge(&s.batch_sizes);
+            depth.merge(&s.queue_depth);
+        }
+        let fleet = SloSnapshot {
+            completed: m.completed(),
+            failed: m.failed(),
+            rejected: m.rejected(),
+            p50_us: fleet_lat.p50(),
+            p95_us: fleet_lat.p95(),
+            p99_us: fleet_lat.p99(),
+            mean_us: fleet_lat.mean(),
+            mean_batch: batch.mean(),
+            mean_queue_depth: depth.mean(),
+            max_queue_depth: if depth.count() == 0 { 0.0 } else { depth.max() },
+        };
+        SloReport {
+            policy: m.policy.name(),
+            per_shard,
+            fleet,
+            dead: m.dead.clone(),
+            elapsed,
+            throughput_rps: m.throughput_rps(elapsed),
+        }
+    }
+
+    /// Render the per-shard + fleet table (the `apu fleet` output).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "shard", "done", "fail", "rej", "rej%", "p50us", "p95us", "p99us", "batch", "qdepth",
+        ]);
+        let row = |label: String, s: &SloSnapshot| -> Vec<String> {
+            vec![
+                label,
+                s.completed.to_string(),
+                s.failed.to_string(),
+                s.rejected.to_string(),
+                format!("{:.1}", 100.0 * s.rejection_rate()),
+                format!("{:.0}", s.p50_us),
+                format!("{:.0}", s.p95_us),
+                format!("{:.0}", s.p99_us),
+                format!("{:.2}", s.mean_batch),
+                format!("{:.1}", s.mean_queue_depth),
+            ]
+        };
+        for (i, s) in self.per_shard.iter().enumerate() {
+            if let Some((_, err)) = self.dead.iter().find(|(id, _)| *id == i) {
+                t.row(&[
+                    format!("{i}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("dead: {err}"),
+                ]);
+            } else {
+                t.row(&row(format!("{i}"), s));
+            }
+        }
+        t.row(&row("fleet".into(), &self.fleet));
+        format!(
+            "policy={} shards={} throughput={:.1} req/s elapsed={:.2}s\n{}",
+            self.policy,
+            self.per_shard.len(),
+            self.throughput_rps,
+            self.elapsed.as_secs_f64(),
+            t.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatch::DispatchPolicy;
+
+    fn shard_metrics(latencies: &[f64], failed: u64, rejected: u64) -> ServerMetrics {
+        let mut m = ServerMetrics { failed, rejected, ..Default::default() };
+        for &l in latencies {
+            m.latency_us.add(l);
+            m.completed += 1;
+        }
+        m.batch_sizes.add(latencies.len().max(1) as f64);
+        m.queue_depth.add(latencies.len() as f64);
+        m
+    }
+
+    #[test]
+    fn fleet_percentiles_merge_shard_streams() {
+        let a = shard_metrics(&[100.0, 200.0, 300.0], 0, 0);
+        let b = shard_metrics(&[400.0, 500.0], 0, 0);
+        let fm = FleetMetrics {
+            shards: vec![a, b],
+            dead: vec![],
+            policy: DispatchPolicy::JoinShortestQueue,
+        };
+        let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
+        assert_eq!(r.fleet.completed, 5);
+        // merged stream = [100..500]: p50 is the middle value
+        assert!((r.fleet.p50_us - 300.0).abs() < 1e-9);
+        assert!(r.fleet.p99_us <= 500.0 && r.fleet.p99_us > 490.0);
+        assert_eq!(r.per_shard.len(), 2);
+        assert!((r.throughput_rps - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejection_rate_counts_all_arrivals() {
+        let m = shard_metrics(&[50.0; 60], 20, 20);
+        let fm =
+            FleetMetrics { shards: vec![m], dead: vec![], policy: DispatchPolicy::RoundRobin };
+        let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
+        // 60 completed + 20 failed + 20 rejected → 20% rejected
+        assert!((r.fleet.rejection_rate() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_marks_dead_shards() {
+        let fm = FleetMetrics {
+            shards: vec![shard_metrics(&[10.0], 0, 0), ServerMetrics::default()],
+            dead: vec![(1, "no hardware".into())],
+            policy: DispatchPolicy::LeastOutstanding,
+        };
+        let out = SloReport::from_metrics(&fm, Duration::from_millis(100)).render();
+        assert!(out.contains("dead: no hardware"));
+        assert!(out.contains("policy=least-outstanding"));
+        assert!(out.contains("fleet"));
+    }
+}

@@ -9,7 +9,13 @@
 //! * **L3 (this crate)** — the co-design framework: structured-pruning
 //!   decomposition, routing scheduler, hardware generator, cycle-accurate
 //!   simulator, network compiler, baselines, and the edge-serving
-//!   coordinator.
+//!   coordinator. The coordinator scales out via `coordinator::fleet`:
+//!   N shard workers (each owning its own engine + batcher) behind a
+//!   pluggable dispatcher (`coordinator::dispatch` — round-robin,
+//!   least-outstanding, join-shortest-queue) with bounded per-shard
+//!   queues (admission control) and SLO reporting (`coordinator::slo`:
+//!   p50/p95/p99, queue depth, rejection rate). The single-engine
+//!   `Server` is the 1-shard special case of the fleet.
 //! * **L2/L1 (python/, build-time only)** — JAX training with mask
 //!   molding + INT4 QAT, and the Pallas block-diagonal FC kernel, AOT
 //!   lowered to HLO text artifacts.

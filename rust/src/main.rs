@@ -5,14 +5,19 @@
 //! apu compile   [--pes N] [--emit-asm] [--artifacts DIR]
 //! apu simulate  [--pes N] [--n N] [--artifacts DIR]
 //! apu serve     [--engine sim|golden] [--requests N] [--rate RPS] [--batch B]
+//! apu fleet     [--shards N] [--policy rr|lo|jsq] [--requests N] [--rate RPS]
+//!               [--batch B] [--queue-cap Q] [--model synthetic|artifact]
 //! apu dse       [--sweep block|precision]
 //! apu netlist   [--pes N] [--block S] [--bits B]
 //! ```
 
 use anyhow::{bail, Context, Result};
 
-use apu::compiler::{compile_packed_layers, import_bundle};
-use apu::coordinator::{ApuEngine, BatchPolicy, GoldenEngine, Server, SyntheticLoad};
+use apu::compiler::{compile_packed_layers, import_bundle, synthetic_packed_network};
+use apu::coordinator::{
+    ApuEngine, BatchPolicy, DispatchPolicy, Fleet, FleetConfig, GoldenEngine, Server, SloReport,
+    SubmitError, SyntheticLoad,
+};
 use apu::figures;
 use apu::generator::{DesignInstance, GeneratorConfig};
 use apu::runtime::Manifest;
@@ -36,6 +41,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "compile" => cmd_compile(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
         "dse" => cmd_dse(rest),
         "netlist" => cmd_netlist(rest),
         _ => {
@@ -46,6 +52,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                  \x20 compile            compile the trained artifact model to an APU program\n\
                  \x20 simulate           run the cycle-accurate simulator on the test vectors\n\
                  \x20 serve              run the edge-serving coordinator demo\n\
+                 \x20 fleet              run the sharded multi-engine serving fleet\n\
                  \x20 dse                design-space exploration sweeps (Figs. 10/11)\n\
                  \x20 netlist            print a generated design instance's structure\n"
             );
@@ -237,6 +244,88 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     );
     println!("  batches     {} (mean size {:.2})", metrics.batches, metrics.batch_sizes.mean());
     println!("  engine time mean {:.0} us/batch", metrics.engine_us.mean());
+    Ok(())
+}
+
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    let opts = vec![
+        Opt { name: "shards", default: Some("4"), help: "number of shard workers" },
+        Opt { name: "policy", default: Some("jsq"), help: "dispatch: rr | lo | jsq" },
+        Opt { name: "requests", default: Some("256"), help: "request count" },
+        Opt { name: "rate", default: Some("2000"), help: "arrival rate, req/s" },
+        Opt { name: "batch", default: Some("8"), help: "max batch size per shard" },
+        Opt { name: "queue-cap", default: Some("64"), help: "per-shard queue bound (admission control)" },
+        Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact" },
+        Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
+        Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
+    ];
+    let args = parse(argv, &opts)?;
+    if args.has_flag("help") {
+        println!("{}", usage("fleet", "Run the sharded multi-engine serving fleet", &opts));
+        return Ok(());
+    }
+    let shards = args.get_usize("shards")?;
+    let policy = DispatchPolicy::parse(args.get("policy").unwrap())
+        .context("unknown --policy (want rr | lo | jsq)")?;
+    let n = args.get_usize("requests")?;
+    let rate = args.get_f64("rate")?;
+    let config = FleetConfig {
+        shards,
+        policy,
+        batch: BatchPolicy {
+            max_batch: args.get_usize("batch")?,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        queue_cap: args.get_usize("queue-cap")?,
+    };
+    let n_pes = args.get_usize("pes")?;
+    let (din, fleet) = match args.get("model").unwrap() {
+        "synthetic" => {
+            // Self-contained: a synthetic packed network per shard, no
+            // `make artifacts` needed.
+            let fleet = Fleet::start(config, move |shard| {
+                let layers = synthetic_packed_network(&[64, 48, 10], n_pes, 4, 1000 + shard as u64)?;
+                let program = compile_packed_layers("fleet", &layers, 0.15, 4, n_pes)?;
+                let apu = Apu::new(ApuConfig { n_pes, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+                Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn apu::coordinator::Engine>)
+            })?;
+            (64, fleet)
+        }
+        "artifact" => {
+            let dir = args.get("artifacts").unwrap().to_string();
+            let fleet = Fleet::start(config, move |_| {
+                let model = import_bundle(&format!("{dir}/lenet_model.json"))?;
+                let program =
+                    compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, n_pes)?;
+                let apu = Apu::new(ApuConfig { n_pes, ..Default::default() });
+                Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn apu::coordinator::Engine>)
+            })?;
+            (800, fleet)
+        }
+        other => bail!("unknown model {other}"),
+    };
+
+    let mut load = SyntheticLoad::new(rate, 42);
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n);
+    let mut rejected_at_submit = 0u64;
+    for _ in 0..n {
+        std::thread::sleep(load.next_gap());
+        match fleet.submit(load.next_input(din)) {
+            Ok(rx) => receivers.push(rx),
+            Err(SubmitError::Rejected { .. }) => rejected_at_submit += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for rx in receivers {
+        rx.recv()?;
+    }
+    let elapsed = t0.elapsed();
+    let metrics = fleet.shutdown()?;
+    println!("{}", SloReport::from_metrics(&metrics, elapsed).render());
+    if rejected_at_submit > 0 {
+        println!("({rejected_at_submit} of {n} arrivals rejected by admission control)");
+    }
     Ok(())
 }
 

@@ -7,6 +7,11 @@
 //! serve from either engine. HLO *text* is the interchange format — see
 //! DESIGN.md (jax ≥0.5 serialized protos are rejected by xla_extension
 //! 0.5.1).
+//!
+//! The PJRT client lives behind the `pjrt` cargo feature (it links the
+//! native `xla_extension` library). Without the feature, `Runtime` and
+//! `Executable` are stubs that error at call time, so the rest of the
+//! stack — simulator, coordinator, fleet — builds and runs everywhere.
 
 use std::path::{Path, PathBuf};
 
@@ -15,10 +20,12 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// The PJRT CPU client (one per process).
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
@@ -46,11 +53,13 @@ impl Runtime {
 }
 
 /// A compiled artifact.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     path: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     pub fn path(&self) -> &Path {
         &self.path
@@ -82,6 +91,45 @@ impl Executable {
             out.push(e.to_vec::<f32>().map_err(|er| anyhow::anyhow!("to_vec: {er:?}"))?);
         }
         Ok(out)
+    }
+}
+
+/// Stub runtime when built without the `pjrt` feature: construction
+/// fails with a pointer at the feature flag, so callers get a clear
+/// error instead of a link failure.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        bail!("built without the `pjrt` feature — rebuild with `--features pjrt` for the PJRT golden-model runtime")
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+        bail!("built without the `pjrt` feature")
+    }
+}
+
+/// Stub artifact handle when built without the `pjrt` feature; never
+/// constructible (the stub `Runtime::cpu` already errors).
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    path: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        bail!("built without the `pjrt` feature")
     }
 }
 
@@ -128,10 +176,12 @@ impl Manifest {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     fn artifacts() -> Option<Manifest> {
         Manifest::load(Manifest::default_dir()).ok()
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn golden_model_runs_testvec() {
         let Some(m) = artifacts() else {

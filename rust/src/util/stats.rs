@@ -3,7 +3,7 @@
 //! coordinator's latency/throughput accounting.
 
 /// Online summary of a stream of f64 observations.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Summary {
     n: u64,
     mean: f64,
@@ -14,9 +14,25 @@ pub struct Summary {
     sorted: bool,
 }
 
+impl Default for Summary {
+    /// Same as [`Summary::new`] — a derived `Default` would start
+    /// `min`/`max` at 0.0 and corrupt the extrema of positive streams.
+    fn default() -> Self {
+        Summary::new()
+    }
+}
+
 impl Summary {
     pub fn new() -> Self {
-        Summary { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::new(),
+            sorted: false,
+        }
     }
 
     pub fn add(&mut self, x: f64) {
@@ -79,8 +95,25 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
+    }
+
+    /// Fold another summary into this one (fleet-wide SLO aggregation:
+    /// per-shard latency streams merge into one distribution, so the
+    /// combined percentiles are exact, not an average of percentiles).
+    pub fn merge(&mut self, other: &Summary) {
+        for &x in &other.samples {
+            self.add(x);
+        }
     }
 }
 
@@ -112,6 +145,60 @@ mod tests {
         assert_eq!(s.percentile(50.0), 50.0);
         assert_eq!(s.percentile(99.0), 99.0);
         assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn p50_p95_p99_on_latency_like_stream() {
+        // 1..=1000 us: p50=500.5, p95=950.05, p99=990.01 under linear
+        // interpolation over the 1000-sample ramp.
+        let mut s = Summary::new();
+        for i in 1..=1000 {
+            s.add(i as f64);
+        }
+        assert!((s.p50() - 500.5).abs() < 1e-9);
+        assert!((s.p95() - 950.05).abs() < 1e-9);
+        assert!((s.p99() - 990.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_distributions_exactly() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut whole = Summary::new();
+        for i in 0..50 {
+            a.add(i as f64);
+            whole.add(i as f64);
+        }
+        for i in 50..100 {
+            b.add(i as f64);
+            whole.add(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.p95() - whole.p95()).abs() < 1e-9);
+        assert_eq!(a.min(), 0.0);
+        assert_eq!(a.max(), 99.0);
+    }
+
+    #[test]
+    fn default_tracks_extrema_like_new() {
+        let mut s = Summary::default();
+        s.add(5.0);
+        s.add(3.0);
+        assert_eq!(s.min(), 3.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn merge_into_empty() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        b.add(7.0);
+        b.add(9.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.median(), 8.0);
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! End-to-end fleet serving: sharding, dispatch, admission control, and
+//! the no-request-lost guarantee under burst load.
+
+use std::time::Duration;
+
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::coordinator::{
+    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, SloReport, SubmitError,
+    SyntheticLoad,
+};
+use apu::sim::{Apu, ApuConfig};
+
+fn make_engine(shard: usize) -> anyhow::Result<Box<dyn Engine>> {
+    let layers = synthetic_packed_network(&[64, 40, 12], 4, 4, 100 + shard as u64)?;
+    let program = compile_packed_layers("fleet-it", &layers, 0.15, 4, 4)?;
+    let apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    Ok(Box::new(ApuEngine::new(apu, &program)?))
+}
+
+fn config(shards: usize, policy: DispatchPolicy, queue_cap: usize) -> FleetConfig {
+    FleetConfig {
+        shards,
+        policy,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        queue_cap,
+    }
+}
+
+/// Under a hard burst across ≥4 shards with bounded queues, every
+/// arrival is accounted for: a reply (success), or an explicit
+/// admission rejection. Nothing is lost, nothing hangs.
+#[test]
+fn burst_load_no_request_lost_or_hanging() {
+    for policy in DispatchPolicy::ALL {
+        let fleet = Fleet::start(config(4, policy, 16), make_engine).unwrap();
+        let mut load = SyntheticLoad::new(1e9, 23);
+        let n = 400;
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        for _ in 0..n {
+            match fleet.submit(load.next_input(64)) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitError::Rejected { shard, cap, .. }) => {
+                    assert!(shard < 4);
+                    assert_eq!(cap, 16);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        let mut replied = 0u64;
+        for rx in &accepted {
+            let reply = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("accepted request must not hang");
+            assert_eq!(reply.output.unwrap().len(), 12, "policy {}", policy.name());
+            replied += 1;
+        }
+        assert_eq!(replied as usize + rejected as usize, n);
+        let metrics = fleet.shutdown().unwrap();
+        assert_eq!(metrics.completed(), replied, "policy {}", policy.name());
+        assert_eq!(metrics.rejected(), rejected, "policy {}", policy.name());
+        assert_eq!(metrics.failed(), 0);
+    }
+}
+
+/// One shard's engine factory fails: the fleet starts degraded, routes
+/// around the dead shard, and still neither loses nor hangs requests.
+#[test]
+fn burst_load_with_one_dead_shard() {
+    let fleet = Fleet::start(config(4, DispatchPolicy::JoinShortestQueue, 64), |shard| {
+        if shard == 1 {
+            anyhow::bail!("shard 1: no device");
+        }
+        make_engine(shard)
+    })
+    .unwrap();
+    assert_eq!(fleet.alive_shards(), 3);
+    let mut load = SyntheticLoad::new(1e9, 31);
+    let n = 300;
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..n {
+        match fleet.submit(load.next_input(64)) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::Rejected { shard, .. }) => {
+                assert_ne!(shard, 1, "dead shard must not take traffic");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let n_accepted = accepted.len();
+    for rx in accepted {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("must not hang");
+        assert_ne!(reply.shard, 1);
+        assert!(reply.output.is_ok());
+    }
+    assert_eq!(n_accepted + rejected, n);
+    let metrics = fleet.shutdown().unwrap();
+    assert_eq!(metrics.completed(), n_accepted as u64);
+    assert_eq!(metrics.shards[1].completed, 0);
+    assert_eq!(metrics.dead.len(), 1);
+    assert_eq!(metrics.dead[0].0, 1);
+    // The SLO report renders the degraded topology.
+    let report = SloReport::from_metrics(&metrics, Duration::from_secs(1)).render();
+    assert!(report.contains("dead:"));
+}
+
+/// Saturating the fleet with paced load produces a coherent SLO report:
+/// fleet percentiles ordered, queue depth bounded by the cap, and
+/// per-shard completions summing to the fleet total.
+#[test]
+fn slo_report_is_coherent_under_load() {
+    let cap = 32;
+    let fleet = Fleet::start(config(4, DispatchPolicy::LeastOutstanding, cap), make_engine).unwrap();
+    let mut load = SyntheticLoad::new(50_000.0, 37);
+    let mut accepted = Vec::new();
+    for _ in 0..500 {
+        std::thread::sleep(load.next_gap());
+        if let Ok(rx) = fleet.submit(load.next_input(64)) {
+            accepted.push(rx);
+        }
+    }
+    for rx in accepted {
+        rx.recv_timeout(Duration::from_secs(30)).expect("must not hang");
+    }
+    let metrics = fleet.shutdown().unwrap();
+    let report = SloReport::from_metrics(&metrics, Duration::from_secs(1));
+    assert_eq!(report.fleet.completed, metrics.completed());
+    assert!(report.fleet.p50_us <= report.fleet.p95_us);
+    assert!(report.fleet.p95_us <= report.fleet.p99_us);
+    assert!(report.fleet.max_queue_depth <= cap as f64);
+    let per_shard: u64 = report.per_shard.iter().map(|s| s.completed).sum();
+    assert_eq!(per_shard, report.fleet.completed);
+}
+
+/// The 1-shard fleet behaves exactly like the legacy single-engine
+/// server: same outputs for the same input, FIFO within a shard.
+#[test]
+fn one_shard_fleet_matches_server_semantics() {
+    let fleet = Fleet::start(config(1, DispatchPolicy::RoundRobin, 1024), make_engine).unwrap();
+    let input: Vec<f32> = (0..64).map(|i| ((i * 7 % 15) as f32 - 7.0) * 0.1).collect();
+    let a = fleet.infer(input.clone()).unwrap().into_output().unwrap();
+    let b = fleet.infer(input).unwrap().into_output().unwrap();
+    assert_eq!(a, b, "same input, same engine, same output");
+    let metrics = fleet.shutdown().unwrap();
+    assert_eq!(metrics.completed(), 2);
+}

@@ -6,7 +6,9 @@
 //! Requires `make artifacts`; tests skip (with a note) when absent.
 
 use apu::compiler::{compile_packed_layers, import_bundle};
-use apu::runtime::{Manifest, Runtime};
+use apu::runtime::Manifest;
+#[cfg(feature = "pjrt")]
+use apu::runtime::Runtime;
 use apu::sim::{Apu, ApuConfig};
 use apu::util::bundle::Bundle;
 
@@ -51,6 +53,7 @@ fn simulator_matches_python_golden_on_all_testvecs() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_golden_matches_python_golden() {
     let Some(m) = manifest() else { return };
@@ -68,6 +71,7 @@ fn pjrt_golden_matches_python_golden() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn batch8_artifact_matches_batch1() {
     let Some(m) = manifest() else { return };

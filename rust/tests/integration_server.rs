@@ -26,7 +26,7 @@ fn sustained_load_completes_every_request() {
     let mut ok = 0;
     for rx in rxs {
         let reply = rx.recv().unwrap();
-        assert_eq!(reply.output.len(), 12);
+        assert_eq!(reply.output.unwrap().len(), 12);
         ok += 1;
     }
     assert_eq!(ok, n);
@@ -46,7 +46,7 @@ fn deterministic_outputs_regardless_of_batching() {
     )
     .unwrap();
     let input: Vec<f32> = (0..64).map(|i| ((i * 7 % 15) as f32 - 7.0) * 0.1).collect();
-    let want = solo.infer(input.clone()).unwrap().output;
+    let want = solo.infer(input.clone()).unwrap().into_output().unwrap();
     solo.shutdown().unwrap();
 
     let batched = Server::start(
@@ -63,7 +63,7 @@ fn deterministic_outputs_regardless_of_batching() {
     for (i, rx) in rxs {
         let reply = rx.recv().unwrap();
         if i == 7 {
-            assert_eq!(reply.output, want);
+            assert_eq!(reply.output.unwrap(), want);
         }
     }
     batched.shutdown().unwrap();
