@@ -1,0 +1,36 @@
+//! Bench: end-to-end compile latency of `compiler::pipeline` for the zoo
+//! networks — compile throughput is a serving-path concern once fleets
+//! hot-load models. Big ImageNet-scale networks run the analysis passes
+//! (normalize → map → cost); the executable-scale networks additionally
+//! run full emission (pruning, routing schedules, instruction stream).
+
+use apu::compiler::pipeline::{analyze, compile_network, PipelineOptions};
+use apu::compiler::CostModel;
+use apu::nn::zoo;
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    let paper = CostModel::paper_9pe();
+    let nano = CostModel::nano_4pe();
+
+    // Analysis passes only (emission would exceed the route budget).
+    for net in [zoo::alexnet(), zoo::vgg19(true), zoo::resnet50(true), zoo::transformer_mha(8, 512, 64)] {
+        let r = bench(&format!("pipeline/analyze/{}", net.name), budget(), || {
+            analyze(&net, &paper).unwrap().cost.total_cycles()
+        });
+        println!("{}", r.report());
+    }
+
+    // Full compile (normalize → weights → lower → emit) on executable nets.
+    let opts = PipelineOptions::default();
+    for (net, model) in [(zoo::vgg_nano(), &nano), (zoo::lenet_300_100(), &paper)] {
+        let r = bench(&format!("pipeline/emit/{}", net.name), budget(), || {
+            compile_network(&net, model, &opts).unwrap().program.insns.len()
+        });
+        println!(
+            "{}  ({:.1} compiles/s)",
+            r.report(),
+            r.per_second(1.0)
+        );
+    }
+}

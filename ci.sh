@@ -3,5 +3,7 @@
 set -euo pipefail
 
 cargo build --release
+# Examples are part of the contract (ROADMAP demos); rot fails the build.
+cargo build --release --examples
 cargo test -q
 cargo clippy --all-targets -- -D warnings

@@ -9,8 +9,9 @@ use crate::util::rng::Rng;
 
 /// Split the network input stream into `n` chunk blocks (the first
 /// layer's routing sources — the host streams input chunks onto the
-/// crossbar wires).
-fn input_chunks(din: usize, n: usize) -> Vec<Vec<u32>> {
+/// crossbar wires). Also used for any host-produced buffer whose values
+/// carry no PE ownership (post-pool/gather activations).
+pub(crate) fn input_chunks(din: usize, n: usize) -> Vec<Vec<u32>> {
     let n = n.min(din).max(1);
     (0..n)
         .map(|g| {
@@ -23,7 +24,7 @@ fn input_chunks(din: usize, n: usize) -> Vec<Vec<u32>> {
 
 /// Merge producer groups onto `n_pes` crossbar wires (folded layers own
 /// more blocks than wires; wire = block mod n_pes).
-fn merge_by_wire(groups: &[Vec<u32>], n_pes: usize) -> Vec<Vec<u32>> {
+pub(crate) fn merge_by_wire(groups: &[Vec<u32>], n_pes: usize) -> Vec<Vec<u32>> {
     if groups.len() <= n_pes {
         return groups.to_vec();
     }
@@ -69,56 +70,72 @@ pub fn compile_packed_layers(
     let q_seg = p.push_data(DataSegment::F32(vec![in_scale, bits as f32]));
     p.insns.push(Insn::HostOp { op: crate::isa::HostOpKind::Quantize, seg: q_seg });
 
-    let mut prev_groups: Option<Vec<Vec<u32>>> = None; // producer groups
+    let mut producers = input_chunks(layers[0].structure.din, n_pes);
     for (li, layer) in layers.iter().enumerate() {
-        let s = &layer.structure;
-        let producers = match &prev_groups {
-            None => input_chunks(s.din, n_pes),
-            Some(g) => merge_by_wire(g, n_pes),
-        };
-        let (bh, bw) = (s.bh(), s.bw());
-        // Fold into waves of at most n_pes blocks.
-        for (wi, wave) in (0..s.nb).collect::<Vec<_>>().chunks(n_pes).enumerate() {
-            let wave_nb = wave.len();
-            p.insns.push(Insn::ConfigLayer {
-                layer: li as u16,
-                nb: wave_nb as u16,
-                bh: bh as u16,
-                bw: bw as u16,
-                bits: layer.bits as u8,
-                relu: layer.relu,
-            });
-            for (pe, &g) in wave.iter().enumerate() {
-                let w_seg = p.push_data(DataSegment::I8(layer.codes[g].clone()));
-                let b_seg = p.push_data(DataSegment::F32(layer.bias[g].clone()));
-                let s_seg = p.push_data(DataSegment::F32(vec![layer.w_scale[g], layer.out_scale[g]]));
-                p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_seg });
-                p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_seg });
-                p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_seg });
-            }
-            // Static routing schedule for this wave's consumers.
-            let consumers: Vec<Vec<u32>> = wave.iter().map(|&g| s.col_groups[g].clone()).collect();
-            let demand = build_demand(&producers, &consumers)?;
-            let sched = schedule_routes(&demand)?;
-            sched.verify(&demand)?;
-            let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
-            p.insns.push(Insn::Route { seg: r_seg, from_input: li == 0 });
-            p.insns.push(Insn::Compute { rows: bh as u16 });
-            // Scatter segment: [dout, wave row indices...]
-            let mut scat = Vec::with_capacity(1 + wave_nb * bh);
-            scat.push(s.dout as u32);
-            for &g in wave {
-                scat.extend_from_slice(&s.row_groups[g]);
-            }
-            let sc_seg = p.push_data(DataSegment::U32(scat));
-            p.insns.push(Insn::Scatter { seg: sc_seg });
-            let _ = wi;
-        }
-        prev_groups = Some(s.row_groups.clone());
+        producers = emit_packed_fc(&mut p, li as u16, layer, &producers, li == 0, n_pes)?;
     }
     p.insns.push(Insn::Halt);
     p.validate()?;
     Ok(p)
+}
+
+/// Emit one packed FC layer (all of its waves) into `p`.
+///
+/// `producers` are the previous layer's per-wire activation groups (or
+/// input chunks for the first layer); the group *index* is the crossbar
+/// wire its activations are broadcast on, which must equal the owning
+/// PE's index modulo `n_pes` for the simulator's ownership check.
+/// Returns this layer's producer groups for the next layer. Shared by
+/// [`compile_packed_layers`] and the graph pipeline
+/// (`compiler::pipeline`).
+pub(crate) fn emit_packed_fc(
+    p: &mut Program,
+    layer_id: u16,
+    layer: &PackedLayer,
+    producers: &[Vec<u32>],
+    from_input: bool,
+    n_pes: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let s = &layer.structure;
+    let producers = merge_by_wire(producers, n_pes);
+    let (bh, bw) = (s.bh(), s.bw());
+    // Fold into waves of at most n_pes blocks.
+    for wave in (0..s.nb).collect::<Vec<_>>().chunks(n_pes) {
+        let wave_nb = wave.len();
+        p.insns.push(Insn::ConfigLayer {
+            layer: layer_id,
+            nb: wave_nb as u16,
+            bh: bh as u16,
+            bw: bw as u16,
+            bits: layer.bits as u8,
+            relu: layer.relu,
+        });
+        for (pe, &g) in wave.iter().enumerate() {
+            let w_seg = p.push_data(DataSegment::I8(layer.codes[g].clone()));
+            let b_seg = p.push_data(DataSegment::F32(layer.bias[g].clone()));
+            let s_seg = p.push_data(DataSegment::F32(vec![layer.w_scale[g], layer.out_scale[g]]));
+            p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_seg });
+            p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_seg });
+            p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_seg });
+        }
+        // Static routing schedule for this wave's consumers.
+        let consumers: Vec<Vec<u32>> = wave.iter().map(|&g| s.col_groups[g].clone()).collect();
+        let demand = build_demand(&producers, &consumers)?;
+        let sched = schedule_routes(&demand)?;
+        sched.verify(&demand)?;
+        let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
+        p.insns.push(Insn::Route { seg: r_seg, from_input });
+        p.insns.push(Insn::Compute { rows: bh as u16 });
+        // Scatter segment: [dout, wave row indices...]
+        let mut scat = Vec::with_capacity(1 + wave_nb * bh);
+        scat.push(s.dout as u32);
+        for &g in wave {
+            scat.extend_from_slice(&s.row_groups[g]);
+        }
+        let sc_seg = p.push_data(DataSegment::U32(scat));
+        p.insns.push(Insn::Scatter { seg: sc_seg });
+    }
+    Ok(s.row_groups.clone())
 }
 
 /// Synthesize a random packed FC network (figure benches and property

@@ -2,23 +2,34 @@
 //!
 //! The paper's flow parses a TensorFlow/Caffe model, extracts weights and
 //! activations, and translates the model into accelerator instructions.
-//! Ours is the same pipeline with the python bundle as the interchange:
+//! Ours is the same flow, staged as passes:
 //!
+//! * [`pipeline`] — the pass-based graph pipeline: any
+//!   [`crate::nn::Network`] + machine model → executable
+//!   [`crate::isa::Program`] (normalize → weights/fold → map → lower →
+//!   emit). Convs lower via im2col-style unrolling (§4.4.3 cases I/III),
+//!   pooling/padding run as host ops, FCs get structured pruning + INT-k
+//!   quantization.
+//! * [`cost`] — the analytic mapping/cost model for whole networks.
+//!   [`cost::decide_layer`] is the *shared* mapping decision: the
+//!   pipeline emitter and the cost model consume the same
+//!   [`cost::MappingDecision`] per layer, so predictions and programs
+//!   agree on every layer's §4.4.3 case (cross-validated in
+//!   `rust/tests/integration_sim.rs` and
+//!   `rust/tests/integration_pipeline.rs`).
+//! * [`emit`] — the packed-FC emitter: per-layer routing schedules, wave
+//!   folding when blocks exceed PEs, host ops for ingress quantization
+//!   (used directly for imported FC stacks, and by the pipeline for FC
+//!   layers).
 //! * [`import_`] — load the python-exported packed model (INT4 codes,
-//!   scales, permutations) into [`crate::pruning::PackedLayer`]s;
-//! * [`emit`] — lower packed layers into an executable [`crate::isa::Program`]:
-//!   per-layer routing schedules, wave folding when blocks exceed PEs,
-//!   host ops for ingress quantization;
-//! * [`cost`] — the analytic mapping/cost model for whole networks
-//!   (conv cases I–III of §4.4.3, pooling on host, attention per head):
-//!   produces per-layer cycle/energy/utilization without functional
-//!   simulation, validated against the cycle-accurate sim on small FC
-//!   networks (`rust/tests/integration_sim.rs`).
+//!   scales, permutations) into [`crate::pruning::PackedLayer`]s.
 
 pub mod cost;
 pub mod emit;
 pub mod import_;
+pub mod pipeline;
 
-pub use cost::{CostModel, LayerCost, MappingCase, NetworkCost};
+pub use cost::{decide_layer, CostModel, LayerCost, MappingCase, MappingDecision, NetworkCost};
 pub use emit::{compile_packed_layers, synthetic_packed_network};
 pub use import_::import_bundle;
+pub use pipeline::{analyze, compile_network, CompiledNetwork, NetworkAnalysis, PipelineOptions};

@@ -1,0 +1,955 @@
+//! Pass-based compiler pipeline: any [`nn::Network`](crate::nn::Network)
+//! + machine model → executable [`isa::Program`](crate::isa::Program).
+//!
+//! The passes run in a fixed order:
+//!
+//! 1. **Graph normalization** (`nn::passes::normalize`) — fold `BatchNorm`
+//!    layers into the preceding conv/FC and fuse their trailing-ReLU flags
+//!    (paper §4.4.3 "Batch Normalization").
+//! 2. **Weight materialization + numeric fold** — [`NetworkWeights`]
+//!    carries per-layer dense weights (synthesized deterministically for
+//!    shape-library networks); the batch-norm fold is applied numerically
+//!    (`W' = s·W`, `b' = s·b + t`).
+//! 3. **Mapping** — one [`MappingDecision`] per layer from
+//!    [`decide_layer`], the *same* decision the analytic cost model uses,
+//!    so the emitted program and the cycle prediction can never disagree
+//!    on a layer's §4.4.3 case.
+//! 4. **Lowering + compression** — FC layers get structured pruning +
+//!    INT-k quantization (`pruning::{BlockStructure, PackedLayer}`);
+//!    convolutions lower to per-position mat-vecs over an im2col-style
+//!    unrolled kernel, one group per PE (case I when `groups == 1`, case
+//!    III group conv otherwise), with the host `Gather` op materializing
+//!    the zero-padded input plane; pooling lowers to a `HostOp`.
+//! 5. **Emission** — static routing schedules (`sched`), wave folding
+//!    when blocks/positions exceed the PE count, and the final `Insn`
+//!    stream the cycle-accurate simulator executes.
+//!
+//! Case II mappings (`ConvLarge`, or FC blocks tiled across PEs) need
+//! host-side partial-sum folds of *runtime* values; they remain
+//! analytic-only — [`compile_network`] reports them as non-executable
+//! while [`analyze`] still costs them.
+//!
+//! **Route-cycle caveat:** the analytic model charges conv routing at
+//! line-buffer reuse (the input volume enters once per column-tile pass,
+//! §3.1.2), while the emitted per-position schedules deliver the full
+//! im2col expansion — simulated route cycles for convs exceed the
+//! analytic figure by roughly `kh·kw`. Mapping cases, compute cycles,
+//! and MAC counts are the cross-validated quantities
+//! (`rust/tests/integration_pipeline.rs`); closing the route gap needs a
+//! PE-local line buffer in the simulator (ROADMAP follow-up).
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::cost::{
+    cost_network, decide_layer, CostModel, MappingCase, MappingDecision, NetworkCost,
+};
+use crate::compiler::emit::{emit_packed_fc, input_chunks};
+use crate::isa::{DataSegment, HostOpKind, Insn, Program};
+use crate::nn::graph::{LayerKind, Network};
+use crate::nn::passes::{normalize, LayerFate, Normalized};
+use crate::pruning::{BlockStructure, PackedLayer, Quantizer};
+use crate::sched::{build_demand, schedule_routes};
+use crate::sim::host_maxpool;
+use crate::util::rng::Rng;
+
+/// Emission budget: total routed activation values across the program. A
+/// full-resolution VGG-19 would emit tens of millions of static route
+/// assignments; past this bound the pipeline refuses emission and points
+/// at [`analyze`] instead.
+const MAX_ROUTE_ITEMS: u64 = 20_000_000;
+
+/// Pipeline knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineOptions {
+    /// Seed for synthetic weights and pruning structures.
+    pub seed: u64,
+    /// Ingress quantizer scale (host `Quantize` op at program start).
+    pub in_scale: f32,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions { seed: 7, in_scale: 0.5 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weights (pass 2)
+// ---------------------------------------------------------------------------
+
+/// Dense per-layer parameters, aligned with a network's layer list.
+#[derive(Debug, Clone)]
+pub enum LayerParams {
+    /// Row-major `dout × din` weights + bias.
+    Fc { w: Vec<f32>, b: Vec<f32> },
+    /// Row-major `cout × (kh·kw·cin/groups)` unrolled filters + bias;
+    /// row `r` belongs to group `r / (cout/groups)`, columns iterate
+    /// `(ky, kx, ci-within-group)`.
+    Conv { w: Vec<f32>, b: Vec<f32> },
+    /// Per-channel affine: `y = scale·x + shift`.
+    BatchNorm { scale: Vec<f32>, shift: Vec<f32> },
+    /// Parameter-free layer (pooling, attention placeholder).
+    None,
+}
+
+/// A network's dense weights (pre-compression).
+#[derive(Debug, Clone)]
+pub struct NetworkWeights {
+    pub layers: Vec<LayerParams>,
+}
+
+impl NetworkWeights {
+    /// Deterministic He-style synthetic weights for a shape-library
+    /// network (the zoo carries geometry, not trained values).
+    pub fn synthetic(net: &Network, seed: u64) -> Result<NetworkWeights> {
+        let shapes = net.shapes()?;
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(net.layers.len());
+        for (i, l) in net.layers.iter().enumerate() {
+            let inp = shapes[i];
+            let params = match &l.kind {
+                LayerKind::Fc { dout } => {
+                    let din = inp.flat();
+                    let scale = (2.0 / din as f32).sqrt();
+                    let w: Vec<f32> = (0..dout * din).map(|_| rng.normal() * scale).collect();
+                    let b: Vec<f32> = (0..*dout).map(|_| rng.normal() * 0.05).collect();
+                    LayerParams::Fc { w, b }
+                }
+                LayerKind::Conv { cout, kh, kw, groups, .. } => {
+                    let kvol = kh * kw * (inp.c / groups);
+                    let scale = (2.0 / kvol as f32).sqrt();
+                    let w: Vec<f32> = (0..cout * kvol).map(|_| rng.normal() * scale).collect();
+                    let b: Vec<f32> = (0..*cout).map(|_| rng.normal() * 0.05).collect();
+                    LayerParams::Conv { w, b }
+                }
+                LayerKind::BatchNorm => {
+                    let c = inp.c;
+                    let scale: Vec<f32> = (0..c).map(|_| rng.uniform(0.5, 1.5)).collect();
+                    let shift: Vec<f32> = (0..c).map(|_| rng.normal() * 0.1).collect();
+                    LayerParams::BatchNorm { scale, shift }
+                }
+                LayerKind::MaxPool { .. } | LayerKind::Attention { .. } => LayerParams::None,
+            };
+            layers.push(params);
+        }
+        Ok(NetworkWeights { layers })
+    }
+
+    /// Apply the numeric batch-norm fold matching a [`normalize`] result:
+    /// `y = s·(Wx + b) + t ⇒ W' = s·W, b' = s·b + t` per output unit.
+    /// Returns weights aligned with the *normalized* layer list.
+    pub fn fold(mut self, norm: &Normalized) -> Result<NetworkWeights> {
+        if self.layers.len() != norm.fates.len() {
+            bail!("weights cover {} layers but network has {}", self.layers.len(), norm.fates.len());
+        }
+        let mut out: Vec<LayerParams> = Vec::with_capacity(norm.net.layers.len());
+        for (i, fate) in norm.fates.iter().enumerate() {
+            match fate {
+                LayerFate::Kept(_) => out.push(std::mem::replace(&mut self.layers[i], LayerParams::None)),
+                LayerFate::FoldedInto(j) => {
+                    let LayerParams::BatchNorm { scale, shift } = &self.layers[i] else {
+                        bail!("layer {i} marked folded but carries no batch-norm parameters");
+                    };
+                    let target = out
+                        .get_mut(*j)
+                        .with_context(|| format!("fold target {j} not yet lowered"))?;
+                    let (w, b) = match target {
+                        LayerParams::Fc { w, b } | LayerParams::Conv { w, b } => (w, b),
+                        _ => bail!("fold target {j} is not a conv/FC layer"),
+                    };
+                    if b.len() != scale.len() {
+                        bail!("batch-norm width {} != producer width {}", scale.len(), b.len());
+                    }
+                    let cols = w.len() / b.len();
+                    for (r, (s, t)) in scale.iter().zip(shift).enumerate() {
+                        for v in &mut w[r * cols..(r + 1) * cols] {
+                            *v *= s;
+                        }
+                        b[r] = b[r] * s + t;
+                    }
+                }
+            }
+        }
+        Ok(NetworkWeights { layers: out })
+    }
+}
+
+/// Full-precision float reference for a network + weights (no
+/// quantization) — the oracle for the batch-norm fold.
+pub fn float_forward(net: &Network, weights: &NetworkWeights, x: &[f32]) -> Result<Vec<f32>> {
+    let shapes = net.shapes()?;
+    if weights.layers.len() != net.layers.len() {
+        bail!("weights cover {} layers but network has {}", weights.layers.len(), net.layers.len());
+    }
+    if x.len() != shapes[0].flat() {
+        bail!("input len {} != network din {}", x.len(), shapes[0].flat());
+    }
+    let mut acts = x.to_vec();
+    for (i, l) in net.layers.iter().enumerate() {
+        let (inp, outp) = (shapes[i], shapes[i + 1]);
+        acts = match (&l.kind, &weights.layers[i]) {
+            (LayerKind::Fc { dout }, LayerParams::Fc { w, b }) => {
+                let din = inp.flat();
+                let mut out = vec![0f32; *dout];
+                for (r, o) in out.iter_mut().enumerate() {
+                    let mut acc = 0f64;
+                    for (c, &a) in acts.iter().enumerate() {
+                        acc += w[r * din + c] as f64 * a as f64;
+                    }
+                    let v = acc as f32 + b[r];
+                    *o = if l.relu { v.max(0.0) } else { v };
+                }
+                out
+            }
+            (LayerKind::Conv { cout, kh, kw, stride, groups, padding }, LayerParams::Conv { w, b }) => {
+                let (h, wdt, c) = (inp.h, inp.w, inp.c);
+                let cin_g = c / groups;
+                let kvol = kh * kw * cin_g;
+                let bh = cout / groups;
+                let mut out = vec![0f32; outp.h * outp.w * cout];
+                for oy in 0..outp.h {
+                    for ox in 0..outp.w {
+                        for oc in 0..*cout {
+                            let q = oc / bh;
+                            let mut acc = 0f64;
+                            for ky in 0..*kh {
+                                for kx in 0..*kw {
+                                    let iy = (oy * stride + ky) as isize - *padding as isize;
+                                    let ix = (ox * stride + kx) as isize - *padding as isize;
+                                    if iy < 0 || ix < 0 || iy >= h as isize || ix >= wdt as isize {
+                                        continue;
+                                    }
+                                    for ci in 0..cin_g {
+                                        let a = acts[((iy as usize) * wdt + ix as usize) * c + q * cin_g + ci];
+                                        let wv = w[oc * kvol + (ky * kw + kx) * cin_g + ci];
+                                        acc += wv as f64 * a as f64;
+                                    }
+                                }
+                            }
+                            let v = acc as f32 + b[oc];
+                            out[(oy * outp.w + ox) * cout + oc] = if l.relu { v.max(0.0) } else { v };
+                        }
+                    }
+                }
+                out
+            }
+            (LayerKind::MaxPool { window, stride }, _) => {
+                host_maxpool(&acts, inp.h, inp.w, inp.c, *window, *stride)?
+            }
+            (LayerKind::BatchNorm, LayerParams::BatchNorm { scale, shift }) => {
+                let c = inp.c;
+                let mut out = acts.clone();
+                for (idx, v) in out.iter_mut().enumerate() {
+                    let ch = idx % c;
+                    let y = *v * scale[ch] + shift[ch];
+                    *v = if l.relu { y.max(0.0) } else { y };
+                }
+                out
+            }
+            (LayerKind::Attention { .. }, _) => bail!("{}: attention has no float reference", l.name),
+            _ => bail!("{}: weights do not match layer kind", l.name),
+        };
+    }
+    Ok(acts)
+}
+
+// ---------------------------------------------------------------------------
+// Lowered layers (pass 4)
+// ---------------------------------------------------------------------------
+
+/// A convolution lowered for the PE array: per-group INT-k codes over the
+/// im2col-unrolled kernel, executed as one mat-vec per output position.
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub name: String,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub padding: usize,
+    /// Mapped group count (§4.4.3 case III when > 1).
+    pub groups: usize,
+    pub oh: usize,
+    pub ow: usize,
+    /// `codes[g]` — row-major `(cout/groups) × kvol` INT-k codes.
+    pub codes: Vec<Vec<i8>>,
+    pub w_scale: Vec<f32>,
+    pub bias: Vec<Vec<f32>>,
+    /// Per-group output quantizer scale; `0.0` bypasses (logit head).
+    pub out_scale: Vec<f32>,
+    pub relu: bool,
+    pub bits: u32,
+}
+
+impl ConvLayer {
+    pub fn kvol(&self) -> usize {
+        self.kh * self.kw * (self.in_c / self.groups)
+    }
+
+    /// Rows per group block (= output channels each PE computes).
+    pub fn bh(&self) -> usize {
+        self.cout / self.groups
+    }
+
+    /// Functional reference for one input plane (channel-last `h×w×c`),
+    /// mirroring the PE datapath exactly: integer codes × grid inputs in
+    /// an f64 tree, bias, ReLU, end-of-tree quantizer.
+    pub fn forward(&self, acts: &[f32]) -> Result<Vec<f32>> {
+        if acts.len() != self.in_h * self.in_w * self.in_c {
+            bail!("{}: input len {} != {}x{}x{}", self.name, acts.len(), self.in_h, self.in_w, self.in_c);
+        }
+        let padded = self.padded(acts);
+        let (pw, c) = (self.in_w + 2 * self.padding, self.in_c);
+        let (bh, kvol, cin_g) = (self.bh(), self.kvol(), self.in_c / self.groups);
+        let mut out = vec![0f32; self.oh * self.ow * self.cout];
+        let mut latch = vec![0f32; kvol];
+        for pos in 0..self.oh * self.ow {
+            let (oy, ox) = (pos / self.ow, pos % self.ow);
+            for q in 0..self.groups {
+                // latch fill in route-slot order: (ky, kx, ci-within-group)
+                let mut slot = 0;
+                for ky in 0..self.kh {
+                    for kx in 0..self.kw {
+                        let (y, x) = (oy * self.stride + ky, ox * self.stride + kx);
+                        for ci in 0..cin_g {
+                            latch[slot] = padded[(y * pw + x) * c + q * cin_g + ci];
+                            slot += 1;
+                        }
+                    }
+                }
+                let oq = (self.out_scale[q] > 0.0).then(|| Quantizer::new(self.bits, self.out_scale[q]));
+                for i in 0..bh {
+                    let row = &self.codes[q][i * kvol..(i + 1) * kvol];
+                    let acc: f64 = row.iter().zip(&latch).map(|(&cd, &a)| cd as f64 * a as f64).sum();
+                    let mut o = acc as f32 * self.w_scale[q] + self.bias[q][i];
+                    if self.relu {
+                        o = o.max(0.0);
+                    }
+                    if let Some(qz) = &oq {
+                        o = qz.fake(o);
+                    }
+                    out[pos * self.cout + q * bh + i] = o;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The zero-padded input plane the emitted host `Gather` materializes.
+    fn padded(&self, acts: &[f32]) -> Vec<f32> {
+        let (h, w, c, p) = (self.in_h, self.in_w, self.in_c, self.padding);
+        if p == 0 {
+            return acts.to_vec();
+        }
+        let (ph, pw) = (h + 2 * p, w + 2 * p);
+        let mut out = vec![0f32; ph * pw * c];
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    out[((y + p) * pw + (x + p)) * c + ch] = acts[(y * w + x) * c + ch];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One lowered layer, ready for emission.
+#[derive(Debug, Clone)]
+pub enum Lowered {
+    /// Structured-pruned (or nb=1 dense) FC on the PE array.
+    Fc(PackedLayer),
+    /// Conv as per-position mat-vecs (cases I/III).
+    Conv(ConvLayer),
+    /// Max-pool on the host core.
+    Pool { h: usize, w: usize, c: usize, window: usize, stride: usize },
+}
+
+// ---------------------------------------------------------------------------
+// Analysis (passes 1 + 3, no emission)
+// ---------------------------------------------------------------------------
+
+/// Mapping + cost for a network without emitting a program — works for
+/// every layer kind, including the analytic-only case-II mappings.
+#[derive(Debug, Clone)]
+pub struct NetworkAnalysis {
+    pub normalized: Normalized,
+    pub decisions: Vec<MappingDecision>,
+    pub cost: NetworkCost,
+}
+
+impl NetworkAnalysis {
+    /// Per-layer mapping/cost table (the `apu compile` report).
+    pub fn table(&self) -> String {
+        mapping_table(&self.cost, &self.decisions)
+    }
+}
+
+/// Run the graph passes and the shared mapping decision, then cost the
+/// normalized network analytically.
+pub fn analyze(net: &Network, model: &CostModel) -> Result<NetworkAnalysis> {
+    let normalized = normalize(net)?;
+    let shapes = normalized.net.shapes()?;
+    let mut decisions = Vec::with_capacity(normalized.net.layers.len());
+    for (i, l) in normalized.net.layers.iter().enumerate() {
+        let d = decide_layer(model, &l.kind, shapes[i], shapes[i + 1])
+            .with_context(|| format!("layer {}", l.name))?;
+        decisions.push(d);
+    }
+    let cost = cost_network(model, &normalized.net)?;
+    Ok(NetworkAnalysis { normalized, decisions, cost })
+}
+
+/// Render the per-layer mapping/cost table.
+pub fn mapping_table(cost: &NetworkCost, decisions: &[MappingDecision]) -> String {
+    let mut s = format!(
+        "{:<14} {:<13} {:>5} {:>12} {:>10} {:>10} {:>10} {:>10} {:>6} {:>6}\n",
+        "layer", "case", "nb/g", "macs", "compute", "route", "host", "stream", "util%", "waves"
+    );
+    for (l, d) in cost.layers.iter().zip(decisions) {
+        let nbg = if l.case == MappingCase::FcStructured || l.case == MappingCase::FcDense {
+            d.nb
+        } else {
+            d.groups
+        };
+        s.push_str(&format!(
+            "{:<14} {:<13} {:>5} {:>12} {:>10} {:>10} {:>10} {:>10} {:>6.1} {:>6}\n",
+            l.name,
+            format!("{:?}", l.case),
+            nbg,
+            l.macs,
+            l.compute_cycles,
+            l.route_cycles,
+            l.host_cycles,
+            l.stream_cycles,
+            l.utilization * 100.0,
+            l.waves
+        ));
+    }
+    s.push_str(&format!(
+        "{:<14} {:<13} {:>5} {:>12} {:>10}   total cycles, mean util {:.1}%\n",
+        "TOTAL",
+        "",
+        "",
+        cost.total_macs(),
+        cost.total_cycles(),
+        cost.mean_utilization() * 100.0
+    ));
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Full compilation
+// ---------------------------------------------------------------------------
+
+/// A network compiled end to end: the executable program, the lowered
+/// layers (for the functional reference), and the analytic view built
+/// from the *same* mapping decisions.
+#[derive(Debug, Clone)]
+pub struct CompiledNetwork {
+    pub name: String,
+    pub model: CostModel,
+    pub program: Program,
+    pub lowered: Vec<Lowered>,
+    /// One decision per normalized layer (parallel to `cost.layers`).
+    pub decisions: Vec<MappingDecision>,
+    pub cost: NetworkCost,
+    pub in_scale: f32,
+    pub bits: u32,
+}
+
+impl CompiledNetwork {
+    /// Functional reference the cycle-accurate simulator must reproduce
+    /// bit-for-bit (ingress quantize → lowered layers in order).
+    pub fn reference_forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.program.din {
+            bail!("input len {} != program din {}", x.len(), self.program.din);
+        }
+        let q = Quantizer::new(self.bits, self.in_scale);
+        let mut acts: Vec<f32> = x.iter().map(|&v| q.fake(v)).collect();
+        for low in &self.lowered {
+            acts = match low {
+                Lowered::Fc(p) => p.forward(&acts)?,
+                Lowered::Conv(cv) => cv.forward(&acts)?,
+                Lowered::Pool { h, w, c, window, stride } => {
+                    host_maxpool(&acts, *h, *w, *c, *window, *stride)?
+                }
+            };
+        }
+        Ok(acts)
+    }
+
+    /// Per-layer mapping/cost table.
+    pub fn table(&self) -> String {
+        mapping_table(&self.cost, &self.decisions)
+    }
+}
+
+/// Run the full pipeline: normalize → weights+fold → map → lower →
+/// emit. Errors (rather than silently degrading) when a layer's mapping
+/// is analytic-only (case II tiling, attention) or the program would
+/// exceed the emission budget.
+pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions) -> Result<CompiledNetwork> {
+    if opts.in_scale <= 0.0 {
+        bail!("in_scale must be positive, got {}", opts.in_scale);
+    }
+    // Pass 1: graph normalization.
+    let norm = normalize(net)?;
+    // Pass 3 pre-flight (before materializing weights — an ImageNet-scale
+    // network carries hundreds of MB of synthetic parameters): every
+    // layer must be executable and the route schedule affordable.
+    let shapes = norm.net.shapes()?;
+    let mut decisions = Vec::with_capacity(norm.net.layers.len());
+    let mut items = 0u64;
+    for (i, l) in norm.net.layers.iter().enumerate() {
+        let (inp, outp) = (shapes[i], shapes[i + 1]);
+        let d = decide_layer(model, &l.kind, inp, outp).with_context(|| format!("layer {}", l.name))?;
+        ensure_executable(l, &d)?;
+        items += match &l.kind {
+            LayerKind::Fc { .. } => inp.flat() as u64,
+            LayerKind::Conv { kh, kw, .. } => {
+                (outp.h * outp.w * d.groups) as u64 * (kh * kw * (inp.c / d.groups)) as u64
+            }
+            _ => 0,
+        };
+        decisions.push(d);
+    }
+    if items > MAX_ROUTE_ITEMS {
+        bail!(
+            "{}: {items} routed values exceed the {MAX_ROUTE_ITEMS} emission budget — use pipeline::analyze",
+            net.name
+        );
+    }
+    // Pass 2: weights + numeric batch-norm fold.
+    let weights = NetworkWeights::synthetic(net, opts.seed)?.fold(&norm)?;
+    // Pass 4: compression + lowering onto the shared decisions.
+    let lowered = lower_layers(&norm, &weights, &decisions, model, opts)?;
+    // Pass 5: emission + the analytic view over the same decisions.
+    // decide_layer is pure, so cost_network's internal decisions must
+    // equal ours; verify rather than assume, so a future stateful
+    // decision can't silently split the two paths.
+    let cost = cost_network(model, &norm.net)?;
+    for (d, lc) in decisions.iter().zip(&cost.layers) {
+        if d.case != lc.case {
+            bail!("internal: mapping disagreement on {} ({:?} vs {:?})", lc.name, d.case, lc.case);
+        }
+    }
+    let program = emit_program(
+        &norm.net.name,
+        &lowered,
+        shapes[0].flat(),
+        shapes.last().unwrap().flat(),
+        model,
+        opts,
+    )?;
+    Ok(CompiledNetwork {
+        name: net.name.clone(),
+        model: model.clone(),
+        program,
+        lowered,
+        decisions,
+        cost,
+        in_scale: opts.in_scale,
+        bits: model.bits,
+    })
+}
+
+/// Can this layer's mapping be emitted, or is it analytic-only?
+fn ensure_executable(l: &crate::nn::Layer, d: &MappingDecision) -> Result<()> {
+    match &l.kind {
+        LayerKind::Fc { .. } | LayerKind::Conv { .. } => {
+            if !d.fits_one_pe() {
+                bail!(
+                    "{}: {:?} tiles {}×{} across PEs — §4.4.3-II partial-sum folds are analytic-only",
+                    l.name, d.case, d.th, d.tw
+                );
+            }
+            if let LayerKind::Conv { groups, .. } = &l.kind {
+                if d.groups != *groups && *groups > 1 {
+                    bail!(
+                        "{}: dense lowering of a {groups}-group conv is unsupported (enable group_conv)",
+                        l.name
+                    );
+                }
+            }
+            Ok(())
+        }
+        LayerKind::MaxPool { .. } => Ok(()),
+        LayerKind::BatchNorm => bail!("{}: batch norm survived normalization (fold it first)", l.name),
+        LayerKind::Attention { .. } => {
+            bail!("{}: attention mapping (§4.4.4) is analytic-only — use pipeline::analyze", l.name)
+        }
+    }
+}
+
+/// Pass 4: per-layer compression + lowering onto the shared mapping.
+fn lower_layers(
+    norm: &Normalized,
+    weights: &NetworkWeights,
+    decisions: &[MappingDecision],
+    model: &CostModel,
+    opts: &PipelineOptions,
+) -> Result<Vec<Lowered>> {
+    let net = &norm.net;
+    let shapes = net.shapes()?;
+    let mut rng = Rng::new(opts.seed ^ 0x9e37_79b9_7f4a_7c15);
+    let mut lowered = Vec::with_capacity(net.layers.len());
+    let last = net.layers.len() - 1;
+    for (i, l) in net.layers.iter().enumerate() {
+        let (inp, outp) = (shapes[i], shapes[i + 1]);
+        let d = &decisions[i];
+        ensure_executable(l, d)?;
+        match (&l.kind, &weights.layers[i]) {
+            (LayerKind::Fc { dout }, LayerParams::Fc { w, b }) => {
+                let structure = BlockStructure::random(*dout, inp.flat(), d.nb, &mut rng)?;
+                let out_scale: Vec<f32> = (0..d.nb)
+                    .map(|_| if i == last { 0.0 } else { 0.1 + rng.f64() as f32 * 0.4 })
+                    .collect();
+                let packed = PackedLayer::quantize_from(structure, model.bits, w, b, out_scale, l.relu)?;
+                lowered.push(Lowered::Fc(packed));
+            }
+            (LayerKind::Conv { cout, kh, kw, stride, padding, .. }, LayerParams::Conv { w, b }) => {
+                let g = d.groups;
+                let bh = cout / g;
+                let kvol = kh * kw * (inp.c / g);
+                let mut codes = Vec::with_capacity(g);
+                let mut w_scale = Vec::with_capacity(g);
+                let mut bias = Vec::with_capacity(g);
+                let mut out_scale = Vec::with_capacity(g);
+                for q in 0..g {
+                    let block = &w[q * bh * kvol..(q + 1) * bh * kvol];
+                    let qz = Quantizer::calibrate(model.bits, block);
+                    codes.push(block.iter().map(|&x| qz.quantize(x) as i8).collect());
+                    w_scale.push(qz.scale);
+                    bias.push(b[q * bh..(q + 1) * bh].to_vec());
+                    out_scale.push(if i == last { 0.0 } else { 0.1 + rng.f64() as f32 * 0.4 });
+                }
+                lowered.push(Lowered::Conv(ConvLayer {
+                    name: l.name.clone(),
+                    in_h: inp.h,
+                    in_w: inp.w,
+                    in_c: inp.c,
+                    cout: *cout,
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    padding: *padding,
+                    groups: g,
+                    oh: outp.h,
+                    ow: outp.w,
+                    codes,
+                    w_scale,
+                    bias,
+                    out_scale,
+                    relu: l.relu,
+                    bits: model.bits,
+                }));
+            }
+            (LayerKind::MaxPool { window, stride }, _) => {
+                lowered.push(Lowered::Pool { h: inp.h, w: inp.w, c: inp.c, window: *window, stride: *stride });
+            }
+            _ => bail!("{}: weights do not match layer kind", l.name),
+        }
+    }
+    Ok(lowered)
+}
+
+// ---------------------------------------------------------------------------
+// Emission (pass 5)
+// ---------------------------------------------------------------------------
+
+fn emit_program(
+    name: &str,
+    lowered: &[Lowered],
+    din: usize,
+    dout: usize,
+    model: &CostModel,
+    opts: &PipelineOptions,
+) -> Result<Program> {
+    let n_pes = model.n_pes;
+    let mut p = Program { name: name.to_string(), din, dout, ..Default::default() };
+
+    // Ingress quantizer on the host core.
+    let q_seg = p.push_data(DataSegment::F32(vec![opts.in_scale, model.bits as f32]));
+    p.insns.push(Insn::HostOp { op: HostOpKind::Quantize, seg: q_seg });
+
+    let mut producers = input_chunks(din, n_pes);
+    let mut from_input = true;
+    for (li, low) in lowered.iter().enumerate() {
+        match low {
+            Lowered::Fc(packed) => {
+                producers = emit_packed_fc(&mut p, li as u16, packed, &producers, from_input, n_pes)?;
+            }
+            Lowered::Conv(cv) => {
+                producers = emit_conv(&mut p, li as u16, cv, n_pes)?;
+            }
+            Lowered::Pool { h, w, c, window, stride } => {
+                let seg = p.push_data(DataSegment::F32(vec![
+                    *h as f32,
+                    *w as f32,
+                    *c as f32,
+                    *window as f32,
+                    *stride as f32,
+                ]));
+                p.insns.push(Insn::HostOp { op: HostOpKind::MaxPool, seg });
+                let oh = (h - window) / stride + 1;
+                let ow = (w - window) / stride + 1;
+                producers = input_chunks(oh * ow * c, n_pes);
+            }
+        }
+        from_input = false;
+    }
+    p.insns.push(Insn::Halt);
+    if p.data.len() > u16::MAX as usize {
+        bail!("{name}: {} data segments overflow the 16-bit segment table", p.data.len());
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Emit one lowered convolution: host `Gather` materializes the padded
+/// plane, then positions run as waves of per-PE mat-vecs. Groups are
+/// PE-stationary — with `g` groups on `n` PEs, each wave computes
+/// `min(g,n)` groups × `max(1, n/g)` positions, so weights load once per
+/// group chunk (plus one reload for a ragged tail wave) and the wave
+/// count matches the analytic model's `ceil(positions·g / n)` whenever
+/// `g` and `n` divide evenly.
+fn emit_conv(p: &mut Program, layer_id: u16, cv: &ConvLayer, n_pes: usize) -> Result<Vec<Vec<u32>>> {
+    let (h, w, c, pad) = (cv.in_h, cv.in_w, cv.in_c, cv.padding);
+    let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+    let (g, bh, kvol) = (cv.groups, cv.bh(), cv.kvol());
+    let cin_g = c / g;
+    let positions = cv.oh * cv.ow;
+    let dout = positions * cv.cout;
+
+    // Host gather: padded input plane (negative index = implicit zero).
+    // Gather parameters ride an f32 segment, which is only exact for
+    // indices below 2^24 — refuse planes past that rather than letting
+    // rounded indices read the wrong activation.
+    if ((ph * pw * c) as u64) >= (1 << 24) {
+        bail!("{}: padded plane of {} values exceeds the f32-exact gather index range", cv.name, ph * pw * c);
+    }
+    let mut idx = Vec::with_capacity(ph * pw * c);
+    for y in 0..ph {
+        for x in 0..pw {
+            for ch in 0..c {
+                let (iy, ix) = (y as isize - pad as isize, x as isize - pad as isize);
+                let inside = iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w;
+                idx.push(if inside { ((iy as usize * w + ix as usize) * c + ch) as f32 } else { -1.0 });
+            }
+        }
+    }
+    let g_seg = p.push_data(DataSegment::F32(idx));
+    p.insns.push(Insn::HostOp { op: HostOpKind::Gather, seg: g_seg });
+
+    // Padded-plane producers: host-owned, chunked across crossbar wires.
+    let padded_chunks = input_chunks(ph * pw * c, n_pes);
+
+    // One weight/bias/scale segment per group, shared across waves.
+    let mut w_segs = Vec::with_capacity(g);
+    let mut b_segs = Vec::with_capacity(g);
+    let mut s_segs = Vec::with_capacity(g);
+    for q in 0..g {
+        w_segs.push(p.push_data(DataSegment::I8(cv.codes[q].clone())));
+        b_segs.push(p.push_data(DataSegment::F32(cv.bias[q].clone())));
+        s_segs.push(p.push_data(DataSegment::F32(vec![cv.w_scale[q], cv.out_scale[q]])));
+    }
+
+    let mut owners: Vec<Vec<u32>> = vec![Vec::new(); n_pes];
+    let mut q0 = 0;
+    while q0 < g {
+        let cg = (g - q0).min(n_pes); // groups in this chunk
+        let reps = (n_pes / cg).max(1); // positions per wave
+        let mut pos0 = 0;
+        let mut cur_nb = 0usize;
+        while pos0 < positions {
+            let reps_here = reps.min(positions - pos0);
+            let nb = cg * reps_here;
+            if nb != cur_nb {
+                // (Re)configure the wave shape; PE weight SRAMs are
+                // cleared by ConfigLayer, so reload the chunk's groups.
+                p.insns.push(Insn::ConfigLayer {
+                    layer: layer_id,
+                    nb: nb as u16,
+                    bh: bh as u16,
+                    bw: kvol as u16,
+                    bits: cv.bits as u8,
+                    relu: cv.relu,
+                });
+                for pe in 0..nb {
+                    let q = q0 + pe % cg;
+                    p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_segs[q] });
+                    p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_segs[q] });
+                    p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_segs[q] });
+                }
+                cur_nb = nb;
+            }
+            // Routing demand: PE pe latches the im2col window of its
+            // (position, group) job, slots in (ky, kx, ci) order.
+            let mut consumers = Vec::with_capacity(nb);
+            for pe in 0..nb {
+                let q = q0 + pe % cg;
+                let pos = pos0 + pe / cg;
+                let (oy, ox) = (pos / cv.ow, pos % cv.ow);
+                let mut want = Vec::with_capacity(kvol);
+                for ky in 0..cv.kh {
+                    for kx in 0..cv.kw {
+                        let (y, x) = (oy * cv.stride + ky, ox * cv.stride + kx);
+                        for ci in 0..cin_g {
+                            want.push(((y * pw + x) * c + q * cin_g + ci) as u32);
+                        }
+                    }
+                }
+                consumers.push(want);
+            }
+            let demand = build_demand(&padded_chunks, &consumers)?;
+            let sched = schedule_routes(&demand)?;
+            sched.verify(&demand)?;
+            let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
+            p.insns.push(Insn::Route { seg: r_seg, from_input: false });
+            p.insns.push(Insn::Compute { rows: bh as u16 });
+            // Scatter: channel-last output layout, owner = wave PE index.
+            let mut scat = Vec::with_capacity(1 + nb * bh);
+            scat.push(dout as u32);
+            for pe in 0..nb {
+                let q = q0 + pe % cg;
+                let pos = pos0 + pe / cg;
+                for i in 0..bh {
+                    let gidx = (pos * cv.cout + q * bh + i) as u32;
+                    scat.push(gidx);
+                    owners[pe].push(gidx);
+                }
+            }
+            let sc_seg = p.push_data(DataSegment::U32(scat));
+            p.insns.push(Insn::Scatter { seg: sc_seg });
+            if p.data.len() + 8 > u16::MAX as usize {
+                bail!("{}: conv emission overflows the segment table", cv.name);
+            }
+            pos0 += reps_here;
+        }
+        q0 += cg;
+    }
+    Ok(owners)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::graph::{Layer, Shape};
+    use crate::nn::zoo;
+    use crate::sim::Apu;
+
+    fn conv_layer(name: &str, cout: usize, k: usize, groups: usize, padding: usize, relu: bool) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv { cout, kh: k, kw: k, stride: 1, groups, padding },
+            relu,
+        }
+    }
+
+    #[test]
+    fn bn_fold_preserves_float_semantics() {
+        let net = Network {
+            name: "fold".into(),
+            input: Shape { h: 6, w: 6, c: 4 },
+            layers: vec![
+                conv_layer("conv", 8, 3, 2, 1, false),
+                Layer { name: "bn".into(), kind: LayerKind::BatchNorm, relu: true },
+                Layer { name: "fc".into(), kind: LayerKind::Fc { dout: 10 }, relu: false },
+            ],
+        };
+        let weights = NetworkWeights::synthetic(&net, 11).unwrap();
+        let norm = normalize(&net).unwrap();
+        let folded = weights.clone().fold(&norm).unwrap();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..6 * 6 * 4).map(|_| rng.normal()).collect();
+        let want = float_forward(&net, &weights, &x).unwrap();
+        let got = float_forward(&norm.net, &folded, &x).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (&a, &b)) in want.iter().zip(&got).enumerate() {
+            assert!((a - b).abs() < 1e-4, "output {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn single_conv_simulates_exactly() {
+        // One grouped conv: the sim must reproduce the lowered reference
+        // bit-for-bit (routing, latching, PE datapath, scatter).
+        let net = Network {
+            name: "conv1".into(),
+            input: Shape { h: 6, w: 6, c: 4 },
+            layers: vec![conv_layer("c", 8, 3, 2, 1, true)],
+        };
+        let model = CostModel::nano_4pe();
+        let compiled = compile_network(&net, &model, &PipelineOptions::default()).unwrap();
+        assert_eq!(compiled.decisions[0].case, MappingCase::ConvGroup);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..6 * 6 * 4).map(|_| rng.normal()).collect();
+        let want = compiled.reference_forward(&x).unwrap();
+        let mut apu = Apu::new(model.apu_config());
+        apu.load(&compiled.program).unwrap();
+        let got = apu.run(&x).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "output {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_fc_fallback_simulates_exactly() {
+        // 12→7: 7 is indivisible by fc_blocks=4, so the mapping falls back
+        // to a dense nb=1 block on one PE.
+        let net = Network {
+            name: "dense".into(),
+            input: Shape { h: 1, w: 1, c: 12 },
+            layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { dout: 7 }, relu: true }],
+        };
+        let model = CostModel::nano_4pe();
+        let compiled = compile_network(&net, &model, &PipelineOptions::default()).unwrap();
+        assert_eq!(compiled.decisions[0].case, MappingCase::FcDense);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin()).collect();
+        let want = compiled.reference_forward(&x).unwrap();
+        let mut apu = Apu::new(model.apu_config());
+        apu.load(&compiled.program).unwrap();
+        let got = apu.run(&x).unwrap();
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "output {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn analytic_only_mappings_refuse_emission() {
+        let model = CostModel::nano_4pe();
+        // a conv whose unrolled kernel exceeds one PE → case II
+        let big = Network {
+            name: "big".into(),
+            input: Shape { h: 8, w: 8, c: 64 },
+            layers: vec![conv_layer("c", 64, 5, 1, 2, true)],
+        };
+        let err = compile_network(&big, &model, &PipelineOptions::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("analytic-only"), "{err:#}");
+        // …but analyze still costs it
+        let a = analyze(&big, &model).unwrap();
+        assert_eq!(a.cost.layers[0].case, MappingCase::ConvLarge);
+        // attention is analytic-only too
+        let mha = zoo::transformer_mha(4, 64, 8);
+        assert!(compile_network(&mha, &model, &PipelineOptions::default()).is_err());
+        assert!(analyze(&mha, &model).is_ok());
+    }
+
+    #[test]
+    fn pipeline_and_cost_model_share_mapping_cases() {
+        let model = CostModel::nano_4pe();
+        let compiled =
+            compile_network(&zoo::vgg_nano(), &model, &PipelineOptions::default()).unwrap();
+        assert_eq!(compiled.decisions.len(), compiled.cost.layers.len());
+        for (d, lc) in compiled.decisions.iter().zip(&compiled.cost.layers) {
+            assert_eq!(d.case, lc.case, "{}: emitter/cost disagree", lc.name);
+        }
+        let table = compiled.table();
+        assert!(table.contains("ConvGroup") && table.contains("TOTAL"), "{table}");
+    }
+}

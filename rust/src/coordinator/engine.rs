@@ -30,6 +30,14 @@ impl ApuEngine {
         Ok(ApuEngine { apu, din: program.din, dout: program.dout, name: format!("apu-sim:{}", program.name) })
     }
 
+    /// Build a serving engine for a pipeline-compiled network: the
+    /// simulator instance is sized from the same machine model the
+    /// compiler mapped against (`apu fleet --model zoo:<name>`).
+    pub fn from_compiled(compiled: &crate::compiler::CompiledNetwork) -> Result<ApuEngine> {
+        let apu = Apu::new(compiled.model.apu_config());
+        ApuEngine::new(apu, &compiled.program)
+    }
+
     pub fn stats(&self) -> &crate::sim::SimStats {
         self.apu.stats()
     }

@@ -1,0 +1,263 @@
+//! On-disk program artifacts: the binary container `apu compile --out`
+//! writes and the fleet/engine loaders read back.
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   magic   "APU1"
+//!   name    u32 len + utf8 bytes
+//!   din     u64
+//!   dout    u64
+//!   insns   u32 word count + u64 words (the RoCC encoding, `isa::encode`)
+//!   data    u32 segment count, then per segment:
+//!             u8 tag (0=i8, 1=f32, 2=u32, 3=routes) + u32 len + payload
+//!             (routes serialize as cycle:u32 src:u16 dst:u16 act:u32 slot:u32)
+//! ```
+//! Loading re-validates the program, so a corrupted artifact errors
+//! instead of mis-executing.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::encode::{decode_stream, encode_stream};
+use super::program::{DataSegment, Program};
+use crate::sched::Assignment;
+
+const MAGIC: &[u8; 4] = b"APU1";
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            bail!("artifact truncated at byte {}", self.pos);
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Check an untrusted element count against the bytes actually left,
+    /// so a corrupted length field errors instead of pre-allocating GBs.
+    fn check_count(&self, n: usize, elem_bytes: usize) -> Result<()> {
+        let need = n.checked_mul(elem_bytes);
+        let left = self.buf.len() - self.pos;
+        if need.map_or(true, |need| need > left) {
+            bail!("artifact claims {n} elements but only {left} bytes remain");
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a program to the artifact byte format.
+pub fn to_bytes(p: &Program) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, p.name.len() as u32);
+    out.extend_from_slice(p.name.as_bytes());
+    out.extend_from_slice(&(p.din as u64).to_le_bytes());
+    out.extend_from_slice(&(p.dout as u64).to_le_bytes());
+    let words = encode_stream(&p.insns);
+    put_u32(&mut out, words.len() as u32);
+    for w in &words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    put_u32(&mut out, p.data.len() as u32);
+    for seg in &p.data {
+        match seg {
+            DataSegment::I8(v) => {
+                out.push(0);
+                put_u32(&mut out, v.len() as u32);
+                out.extend(v.iter().map(|&b| b as u8));
+            }
+            DataSegment::F32(v) => {
+                out.push(1);
+                put_u32(&mut out, v.len() as u32);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            DataSegment::U32(v) => {
+                out.push(2);
+                put_u32(&mut out, v.len() as u32);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            DataSegment::Routes(v) => {
+                out.push(3);
+                put_u32(&mut out, v.len() as u32);
+                for a in v {
+                    out.extend_from_slice(&a.cycle.to_le_bytes());
+                    out.extend_from_slice(&a.src.to_le_bytes());
+                    out.extend_from_slice(&a.dst.to_le_bytes());
+                    out.extend_from_slice(&a.act.to_le_bytes());
+                    out.extend_from_slice(&a.dst_slot.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse an artifact byte buffer back into a validated program.
+pub fn from_bytes(buf: &[u8]) -> Result<Program> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("not an APU program artifact (bad magic)");
+    }
+    let name_len = r.u32()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec()).context("artifact name not utf8")?;
+    let din = r.u64()? as usize;
+    let dout = r.u64()? as usize;
+    let n_words = r.u32()? as usize;
+    r.check_count(n_words, 8)?;
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        words.push(r.u64()?);
+    }
+    let insns = decode_stream(&words)?;
+    let n_segs = r.u32()? as usize;
+    r.check_count(n_segs, 5)?; // tag + len at minimum per segment
+    let mut data = Vec::with_capacity(n_segs);
+    for _ in 0..n_segs {
+        let tag = r.u8()?;
+        let len = r.u32()? as usize;
+        let seg = match tag {
+            0 => DataSegment::I8(r.take(len)?.iter().map(|&b| b as i8).collect()),
+            1 => {
+                r.check_count(len, 4)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(r.f32()?);
+                }
+                DataSegment::F32(v)
+            }
+            2 => {
+                r.check_count(len, 4)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(r.u32()?);
+                }
+                DataSegment::U32(v)
+            }
+            3 => {
+                r.check_count(len, 16)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(Assignment {
+                        cycle: r.u32()?,
+                        src: r.u16()?,
+                        dst: r.u16()?,
+                        act: r.u32()?,
+                        dst_slot: r.u32()?,
+                    });
+                }
+                DataSegment::Routes(v)
+            }
+            other => bail!("unknown segment tag {other}"),
+        };
+        data.push(seg);
+    }
+    if r.pos != buf.len() {
+        bail!("{} trailing bytes after artifact", buf.len() - r.pos);
+    }
+    let p = Program { insns, data, din, dout, name };
+    p.validate()?;
+    Ok(p)
+}
+
+impl Program {
+    /// Write this program as a binary artifact (`apu compile --out`).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, to_bytes(self)).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load and validate a program artifact.
+    pub fn load(path: impl AsRef<Path>) -> Result<Program> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        from_bytes(&buf).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+
+    fn sample() -> Program {
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, 17).unwrap();
+        compile_packed_layers("artifact-test", &layers, 0.1, 4, 4).unwrap()
+    }
+
+    #[test]
+    fn byte_roundtrip_is_exact() {
+        let p = sample();
+        let q = from_bytes(&to_bytes(&p)).unwrap();
+        assert_eq!(p.name, q.name);
+        assert_eq!((p.din, p.dout), (q.din, q.dout));
+        assert_eq!(p.insns, q.insns);
+        assert_eq!(p.data, q.data);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let p = sample();
+        let mut bytes = to_bytes(&p);
+        assert!(from_bytes(&bytes[..10]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err()); // bad magic
+        assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_length_fields_without_allocating() {
+        let p = sample();
+        let mut bytes = to_bytes(&p);
+        // clobber the instruction word count (magic + name + din + dout)
+        let off = 4 + 4 + p.name.len() + 16;
+        bytes[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = sample();
+        let path = std::env::temp_dir().join(format!("apu-artifact-{}.bin", std::process::id()));
+        p.save(&path).unwrap();
+        let q = Program::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(p.insns, q.insns);
+        assert_eq!(p.data, q.data);
+    }
+}

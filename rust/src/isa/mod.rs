@@ -9,6 +9,7 @@
 //! assembler/disassembler give the human-readable form used in tests and
 //! the `apu compile --emit-asm` flow.
 
+pub mod artifact;
 pub mod encode;
 pub mod program;
 

@@ -17,7 +17,9 @@ pub enum HostOpKind {
     FoldAdd,
     /// Quantize a host buffer to the layer grid (scale from segment).
     Quantize,
-    /// Copy/permute a host buffer (activation reordering at boundaries).
+    /// Copy/permute a host buffer (activation reordering at boundaries);
+    /// a negative index gathers an implicit zero — the compiler uses this
+    /// to materialize zero-padded convolution input planes.
     Gather,
 }
 

@@ -2,18 +2,23 @@
 //!
 //! ```text
 //! apu figures <fig3|fig4b|fig6|fig9|fig10|fig11|fig13|fig14|fig15|headline|all>
-//! apu compile   [--pes N] [--emit-asm] [--artifacts DIR]
+//! apu compile   [--net artifact|lenet|alexnet|vgg19|resnet50|vgg-nano|mha]
+//!               [--machine paper|nano] [--seed S] [--out FILE] [--emit-asm]
+//!               [--pes N] [--artifacts DIR]
 //! apu simulate  [--pes N] [--n N] [--artifacts DIR]
 //! apu serve     [--engine sim|golden] [--requests N] [--rate RPS] [--batch B]
 //! apu fleet     [--shards N] [--policy rr|lo|jsq] [--requests N] [--rate RPS]
-//!               [--batch B] [--queue-cap Q] [--model synthetic|artifact]
+//!               [--batch B] [--queue-cap Q] [--model synthetic|artifact|zoo:<name>]
 //! apu dse       [--sweep block|precision]
 //! apu netlist   [--pes N] [--block S] [--bits B]
 //! ```
 
 use anyhow::{bail, Context, Result};
 
-use apu::compiler::{compile_packed_layers, import_bundle, synthetic_packed_network};
+use apu::compiler::{
+    compile_packed_layers, import_bundle, pipeline, synthetic_packed_network, CostModel,
+    PipelineOptions,
+};
 use apu::coordinator::{
     ApuEngine, BatchPolicy, DispatchPolicy, Fleet, FleetConfig, GoldenEngine, Server, SloReport,
     SubmitError, SyntheticLoad,
@@ -49,7 +54,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 "apu — Tuning Algorithms and Generators for Efficient Edge Inference (reproduction)\n\n\
                  Commands:\n\
                  \x20 figures <id|all>   regenerate paper tables/figures\n\
-                 \x20 compile            compile the trained artifact model to an APU program\n\
+                 \x20 compile            compile a network (zoo or trained artifact) to an APU program\n\
                  \x20 simulate           run the cycle-accurate simulator on the test vectors\n\
                  \x20 serve              run the edge-serving coordinator demo\n\
                  \x20 fleet              run the sharded multi-engine serving fleet\n\
@@ -101,40 +106,122 @@ fn artifact_opts() -> Vec<Opt> {
     ]
 }
 
-fn load_program(args: &apu::util::cli::Args) -> Result<(apu::isa::Program, String)> {
-    let dir = args.get("artifacts").unwrap();
+fn load_program(dir: &str, n_pes: usize) -> Result<apu::isa::Program> {
     let model = import_bundle(&format!("{dir}/lenet_model.json"))
         .context("importing model bundle — run `make artifacts` first")?;
-    let n_pes = args.get_usize("pes")?;
-    let program = compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, n_pes)?;
-    Ok((program, dir.to_string()))
+    compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, n_pes)
 }
 
 fn cmd_compile(argv: &[String]) -> Result<()> {
-    let opts = artifact_opts();
+    let opts = vec![
+        Opt {
+            name: "net",
+            default: Some("artifact"),
+            help: "artifact | lenet | alexnet | vgg19[-dense] | resnet50[-dense] | vgg-nano | mha",
+        },
+        Opt {
+            name: "machine",
+            default: Some("paper"),
+            help: "mapping target (zoo networks): paper (9×513×513) | nano (4×64×128)",
+        },
+        Opt { name: "seed", default: Some("7"), help: "synthetic weight seed (zoo networks)" },
+        Opt { name: "out", default: Some(""), help: "write the program artifact to this path" },
+        Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--net artifact)" },
+        Opt {
+            name: "pes",
+            default: Some("auto"),
+            help: "PE count override (auto = 10 for artifact, the machine's default for zoo)",
+        },
+        Opt { name: "emit-asm", default: None, help: "print the compiled instruction stream" },
+    ];
     let args = parse(argv, &opts)?;
     if args.has_flag("help") {
-        println!("{}", usage("compile", "Compile the trained model to an APU program", &opts));
+        println!("{}", usage("compile", "Compile a network to an APU program", &opts));
+        return Ok(());
     }
-    let (program, _) = load_program(&args)?;
+    let out = args.get("out").unwrap().to_string();
+    let net_name = args.get("net").unwrap().to_string();
+    let pes_arg = args.get("pes").unwrap().to_string();
+    let pes_override = if pes_arg == "auto" {
+        None
+    } else {
+        Some(pes_arg.parse::<usize>().context("--pes must be a number or 'auto'")?)
+    };
+
+    if net_name == "artifact" {
+        // The python-trained LeNet bundle: packed FC stack → program.
+        let program = load_program(args.get("artifacts").unwrap(), pes_override.unwrap_or(10))?;
+        println!(
+            "compiled {}: {} instructions, {} data segments, din={} dout={}",
+            program.name,
+            program.insns.len(),
+            program.data.len(),
+            program.din,
+            program.dout
+        );
+        if args.has_flag("emit-asm") {
+            println!("{}", program.disassemble());
+        }
+        if !out.is_empty() {
+            program.save(&out)?;
+            println!("wrote program artifact to {out}");
+        }
+        return Ok(());
+    }
+
+    // Zoo network through the pass-based pipeline.
+    let net = apu::nn::zoo::by_name(&net_name)
+        .with_context(|| format!("unknown zoo network {net_name} (try lenet, alexnet, vgg19, resnet50, vgg-nano, mha)"))?;
+    let mut model = match args.get("machine").unwrap() {
+        "paper" => CostModel::paper_9pe(),
+        "nano" => CostModel::nano_4pe(),
+        other => bail!("unknown --machine {other} (want paper | nano)"),
+    };
+    if let Some(pes) = pes_override {
+        model.n_pes = pes;
+    }
     println!(
-        "compiled {}: {} instructions, {} data segments, din={} dout={}",
-        program.name,
-        program.insns.len(),
-        program.data.len(),
-        program.din,
-        program.dout
+        "{} mapped onto {} PEs of {}×{} @ INT{}:",
+        net.name, model.n_pes, model.pe_h, model.pe_w, model.bits
     );
-    if args.has_flag("emit-asm") {
-        println!("{}", program.disassemble());
+    let popts = PipelineOptions { seed: args.get_usize("seed")? as u64, ..Default::default() };
+    match pipeline::compile_network(&net, &model, &popts) {
+        Ok(compiled) => {
+            print!("{}", compiled.table());
+            println!(
+                "emitted {}: {} instructions, {} data segments, din={} dout={}",
+                compiled.program.name,
+                compiled.program.insns.len(),
+                compiled.program.data.len(),
+                compiled.program.din,
+                compiled.program.dout
+            );
+            if args.has_flag("emit-asm") {
+                println!("{}", compiled.program.disassemble());
+            }
+            if !out.is_empty() {
+                compiled.program.save(&out)?;
+                println!("wrote program artifact to {out}");
+            }
+        }
+        Err(e) => {
+            // Emission refused (case II / attention / budget): still print
+            // the analytic mapping table, which covers every layer kind.
+            print!("{}", pipeline::analyze(&net, &model)?.table());
+            if !out.is_empty() {
+                return Err(e.context("emission failed but --out was requested"));
+            }
+            println!("(analytic only — not emitted: {e:#})");
+        }
     }
     Ok(())
 }
 
 fn cmd_simulate(argv: &[String]) -> Result<()> {
     let args = parse(argv, &artifact_opts())?;
-    let (program, dir) = load_program(&args)?;
+    let dir = args.get("artifacts").unwrap().to_string();
     let n_pes = args.get_usize("pes")?;
+    let program = load_program(&dir, n_pes)?;
     let mut apu = Apu::new(ApuConfig { n_pes, ..Default::default() });
     apu.load(&program)?;
 
@@ -255,7 +342,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         Opt { name: "rate", default: Some("2000"), help: "arrival rate, req/s" },
         Opt { name: "batch", default: Some("8"), help: "max batch size per shard" },
         Opt { name: "queue-cap", default: Some("64"), help: "per-shard queue bound (admission control)" },
-        Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact" },
+        Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact | zoo:<name> (e.g. zoo:vgg-nano)" },
         Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
         Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
     ];
@@ -301,6 +388,26 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn apu::coordinator::Engine>)
             })?;
             (800, fleet)
+        }
+        m if m.starts_with("zoo:") => {
+            // A zoo network compiled once through the pipeline; every
+            // shard serves the same program on its own simulator.
+            let name = m.strip_prefix("zoo:").unwrap();
+            let net = apu::nn::zoo::by_name(name)
+                .with_context(|| format!("unknown zoo network {name}"))?;
+            // vgg-nano maps onto the nano instance; everything else gets
+            // the paper geometry (513-wide PEs) so FC stacks fit one PE.
+            // (Compare the canonical zoo name, not the CLI spelling.)
+            let mut machine =
+                if net.name == "vgg-nano" { CostModel::nano_4pe() } else { CostModel::paper_9pe() };
+            machine.n_pes = n_pes;
+            let compiled = pipeline::compile_network(&net, &machine, &PipelineOptions::default())
+                .with_context(|| format!("compiling {name} for the fleet"))?;
+            let din = compiled.program.din;
+            let fleet = Fleet::start(config, move |_| {
+                Ok(Box::new(ApuEngine::from_compiled(&compiled)?) as Box<dyn apu::coordinator::Engine>)
+            })?;
+            (din, fleet)
         }
         other => bail!("unknown model {other}"),
     };

@@ -7,7 +7,9 @@
 //! geometry and sparsity, not on trained values).
 
 pub mod graph;
+pub mod passes;
 pub mod zoo;
 
 pub use graph::{Layer, LayerKind, Network};
-pub use zoo::{alexnet, lenet_300_100, resnet50, transformer_mha, vgg19};
+pub use passes::{normalize, LayerFate, Normalized};
+pub use zoo::{alexnet, lenet_300_100, resnet50, transformer_mha, vgg19, vgg_nano};

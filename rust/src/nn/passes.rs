@@ -1,0 +1,160 @@
+//! Graph normalization passes — stage 1 of `compiler::pipeline`.
+//!
+//! The paper folds batch normalization into the preceding conv/FC layer at
+//! compile time (§4.4.3 "Batch Normalization") and fuses trailing ReLUs
+//! into the PE datapath. These passes rewrite the layer graph accordingly
+//! and record *where* every original layer went, so the weight-level fold
+//! (`compiler::pipeline::NetworkWeights::fold`) can apply the matching
+//! numeric transform: `y = s·(Wx + b) + t  ⇒  W' = s·W, b' = s·b + t`.
+
+use anyhow::{bail, Result};
+
+use super::graph::{LayerKind, Network};
+
+/// Where one original layer went during normalization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerFate {
+    /// Survived; index into the normalized layer list.
+    Kept(usize),
+    /// Batch norm folded into the surviving layer at this normalized index.
+    FoldedInto(usize),
+}
+
+/// A normalized network plus the provenance map for the numeric fold.
+#[derive(Debug, Clone)]
+pub struct Normalized {
+    pub net: Network,
+    /// `fates[i]` = what happened to original layer `i`.
+    pub fates: Vec<LayerFate>,
+}
+
+impl Normalized {
+    /// Original-layer indices that were folded away.
+    pub fn folded(&self) -> Vec<usize> {
+        self.fates
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| matches!(f, LayerFate::FoldedInto(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Fold every `BatchNorm` into its preceding conv/FC layer and fuse its
+/// trailing-ReLU flag into the survivor (a `conv → bn(relu)` pair becomes
+/// one conv with `relu = true`).
+pub fn normalize(net: &Network) -> Result<Normalized> {
+    net.shapes()?; // validate geometry before rewriting
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut fates = Vec::with_capacity(net.layers.len());
+    for l in &net.layers {
+        match l.kind {
+            LayerKind::BatchNorm => {
+                let Some(prev_idx) = layers.len().checked_sub(1) else {
+                    bail!("{}: batch norm has no preceding layer to fold into", l.name);
+                };
+                let prev: &mut super::graph::Layer = &mut layers[prev_idx];
+                if !matches!(prev.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. }) {
+                    bail!("{}: batch norm must follow a conv/FC layer, found {}", l.name, prev.name);
+                }
+                if prev.relu {
+                    // s·relu(Wx+b)+t ≠ relu(s·(Wx+b)+t): the affine fold
+                    // is only valid on the producer's pre-activation.
+                    bail!("{}: cannot fold batch norm through {}'s fused ReLU", l.name, prev.name);
+                }
+                prev.relu = l.relu;
+                fates.push(LayerFate::FoldedInto(prev_idx));
+            }
+            _ => {
+                layers.push(l.clone());
+                fates.push(LayerFate::Kept(layers.len() - 1));
+            }
+        }
+    }
+    if layers.is_empty() {
+        bail!("{}: network is empty after normalization", net.name);
+    }
+    Ok(Normalized {
+        net: Network { name: net.name.clone(), input: net.input, layers },
+        fates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::graph::{Layer, Shape};
+
+    fn bn_net() -> Network {
+        Network {
+            name: "bn".into(),
+            input: Shape { h: 4, w: 4, c: 4 },
+            layers: vec![
+                Layer {
+                    name: "conv".into(),
+                    kind: LayerKind::Conv { cout: 8, kh: 3, kw: 3, stride: 1, groups: 1, padding: 1 },
+                    relu: false,
+                },
+                Layer { name: "bn".into(), kind: LayerKind::BatchNorm, relu: true },
+                Layer { name: "fc".into(), kind: LayerKind::Fc { dout: 10 }, relu: false },
+            ],
+        }
+    }
+
+    #[test]
+    fn bn_folds_and_fuses_relu() {
+        let n = normalize(&bn_net()).unwrap();
+        assert_eq!(n.net.layers.len(), 2);
+        assert_eq!(n.net.layers[0].name, "conv");
+        assert!(n.net.layers[0].relu, "bn's trailing relu must fuse into the conv");
+        assert_eq!(
+            n.fates,
+            vec![LayerFate::Kept(0), LayerFate::FoldedInto(0), LayerFate::Kept(1)]
+        );
+        assert_eq!(n.folded(), vec![1]);
+        // shapes unchanged end to end (bn is shape-preserving)
+        assert_eq!(
+            n.net.shapes().unwrap().last().unwrap().flat(),
+            bn_net().shapes().unwrap().last().unwrap().flat()
+        );
+    }
+
+    #[test]
+    fn leading_bn_rejected() {
+        let net = Network {
+            name: "bad".into(),
+            input: Shape { h: 1, w: 1, c: 8 },
+            layers: vec![Layer { name: "bn0".into(), kind: LayerKind::BatchNorm, relu: false }],
+        };
+        assert!(normalize(&net).is_err());
+    }
+
+    #[test]
+    fn bn_after_fused_relu_rejected() {
+        // relu-then-bn cannot fold: s·relu(y)+t ≠ relu(s·y+t).
+        let mut net = bn_net();
+        net.layers[0].relu = true;
+        assert!(normalize(&net).is_err());
+    }
+
+    #[test]
+    fn bn_after_pool_rejected() {
+        let net = Network {
+            name: "bad".into(),
+            input: Shape { h: 4, w: 4, c: 4 },
+            layers: vec![
+                Layer { name: "p".into(), kind: LayerKind::MaxPool { window: 2, stride: 2 }, relu: false },
+                Layer { name: "bn".into(), kind: LayerKind::BatchNorm, relu: false },
+            ],
+        };
+        assert!(normalize(&net).is_err());
+    }
+
+    #[test]
+    fn bn_free_networks_pass_through() {
+        let net = crate::nn::zoo::lenet_300_100();
+        let n = normalize(&net).unwrap();
+        assert_eq!(n.net, net);
+        assert!(n.folded().is_empty());
+    }
+}

@@ -124,6 +124,49 @@ pub fn resnet50(group_conv: bool) -> Network {
     }
 }
 
+/// Reduced VGG: the same conv/pool/FC topology scaled to a 16×16 input so
+/// the whole network lowers through `compiler::pipeline` into an
+/// *executable* program (every conv is case I/III, every FC fits one PE)
+/// and simulates in milliseconds — the end-to-end serving model for
+/// fleet tests. Includes a batch-norm layer so the normalization passes
+/// are exercised on the executable path (`conv2_1` carries no ReLU of its
+/// own; `bn2`'s trailing ReLU fuses into it at compile time).
+pub fn vgg_nano() -> Network {
+    Network {
+        name: "vgg-nano".into(),
+        input: Shape { h: 16, w: 16, c: 3 },
+        layers: vec![
+            conv("conv1_1", 16, 3, 1, 1),
+            conv("conv1_2", 16, 3, 1, 2),
+            pool("pool1"),
+            Layer {
+                name: "conv2_1".into(),
+                kind: LayerKind::Conv { cout: 32, kh: 3, kw: 3, stride: 1, groups: 2, padding: 1 },
+                relu: false,
+            },
+            Layer { name: "bn2".into(), kind: LayerKind::BatchNorm, relu: true },
+            pool("pool2"),
+            fc("fc1", 64, true),
+            fc("fc2", 10, false),
+        ],
+    }
+}
+
+/// CLI lookup: a zoo network by name (`apu compile --net <name>`).
+pub fn by_name(name: &str) -> Option<Network> {
+    Some(match name {
+        "lenet" | "lenet-300-100" => lenet_300_100(),
+        "alexnet" => alexnet(),
+        "vgg19" | "vgg19-group" => vgg19(true),
+        "vgg19-dense" => vgg19(false),
+        "resnet50" | "resnet50-group" => resnet50(true),
+        "resnet50-dense" => resnet50(false),
+        "vgg-nano" | "vgg_nano" => vgg_nano(),
+        "mha" => transformer_mha(8, 512, 64),
+        _ => return None,
+    })
+}
+
 /// One Transformer multi-head-attention layer (paper §4.4.4): each head's
 /// projections map onto one PE.
 pub fn transformer_mha(heads: usize, dmodel: usize, seq: usize) -> Network {
@@ -217,5 +260,26 @@ mod tests {
     fn mha_maps_heads() {
         let n = transformer_mha(8, 512, 64);
         assert!(n.macs().unwrap()[0] > 0);
+    }
+
+    #[test]
+    fn vgg_nano_geometry() {
+        let n = vgg_nano();
+        let shapes = n.shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().flat(), 10);
+        // fc1 input is the pooled 4x4x32 = 512 plane
+        let fc1 = n.layers.iter().position(|l| l.name == "fc1").unwrap();
+        assert_eq!(shapes[fc1].flat(), 512);
+        // small enough to simulate: well under a million MACs
+        let macs: u64 = n.macs().unwrap().iter().sum();
+        assert!(macs < 1_000_000, "vgg-nano macs {macs}");
+    }
+
+    #[test]
+    fn by_name_covers_the_zoo() {
+        for name in ["lenet", "alexnet", "vgg19", "resnet50", "vgg-nano", "mha"] {
+            assert!(by_name(name).is_some(), "missing zoo entry {name}");
+        }
+        assert!(by_name("nope").is_none());
     }
 }

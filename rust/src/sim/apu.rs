@@ -146,6 +146,10 @@ impl Apu {
         let mut per_pe_bits = vec![0u64; self.cfg.n_pes];
         let mut weight_bits = 0u64;
         let mut cur_bits = 4u32;
+        // Residency = the union of distinct segments each PE ever holds;
+        // re-issuing LoadWeights for the same segment (the compiler does
+        // this for ragged conv tail waves) adds no footprint.
+        let mut seen = std::collections::HashSet::new();
         for insn in &program.insns {
             match insn {
                 Insn::ConfigLayer { nb, bits, .. } => {
@@ -158,10 +162,12 @@ impl Apu {
                     if *pe as usize >= self.cfg.n_pes {
                         bail!("LoadWeights pe {pe} out of range");
                     }
-                    let n = program.segment(*seg)?.as_i8()?.len() as u64;
-                    let bits = n * cur_bits as u64;
-                    per_pe_bits[*pe as usize] += bits;
-                    weight_bits += bits;
+                    if seen.insert((*pe, *seg)) {
+                        let n = program.segment(*seg)?.as_i8()?.len() as u64;
+                        let bits = n * cur_bits as u64;
+                        per_pe_bits[*pe as usize] += bits;
+                        weight_bits += bits;
+                    }
                 }
                 _ => {}
             }
@@ -422,26 +428,7 @@ impl Apu {
                 };
                 let (h, w, c, win, stride) =
                     (*h as usize, *w as usize, *c as usize, *win as usize, *stride as usize);
-                if h * w * c != self.acts.len() {
-                    bail!("MaxPool shape {h}x{w}x{c} != buffer {}", self.acts.len());
-                }
-                let oh = (h - win) / stride + 1;
-                let ow = (w - win) / stride + 1;
-                let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
-                for oy in 0..oh {
-                    for ox in 0..ow {
-                        for ch in 0..c {
-                            let mut m = f32::NEG_INFINITY;
-                            for ky in 0..win {
-                                for kx in 0..win {
-                                    let v = self.acts[((oy * stride + ky) * w + (ox * stride + kx)) * c + ch];
-                                    m = m.max(v);
-                                }
-                            }
-                            out[(oy * ow + ox) * c + ch] = m;
-                        }
-                    }
-                }
+                let out = host_maxpool(&self.acts, h, w, c, win, stride)?;
                 self.charge_host(out.len() * win * win);
                 self.acts = out;
                 self.act_owner = vec![u16::MAX; self.acts.len()];
@@ -458,6 +445,12 @@ impl Apu {
             HostOpKind::Gather => {
                 let mut out = Vec::with_capacity(params.len());
                 for &idx in params {
+                    // Negative index = implicit zero: the compiler uses
+                    // this to materialize zero-padded conv input planes.
+                    if idx < 0.0 {
+                        out.push(0.0);
+                        continue;
+                    }
                     let i = idx as usize;
                     if i >= self.acts.len() {
                         bail!("Gather index {i} out of range");
@@ -510,6 +503,44 @@ impl Apu {
     pub fn is_streamed(&self) -> bool {
         self.plan.as_ref().map(|p| p.streamed).unwrap_or(false)
     }
+}
+
+/// Channel-last max-pool — the functional semantics of
+/// [`HostOpKind::MaxPool`]. Shared with the compiler pipeline's
+/// reference forward (`compiler::pipeline`) so the oracle and the
+/// executed host op cannot drift apart.
+pub fn host_maxpool(
+    acts: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+    stride: usize,
+) -> Result<Vec<f32>> {
+    if h * w * c != acts.len() {
+        bail!("MaxPool shape {h}x{w}x{c} != buffer {}", acts.len());
+    }
+    if win == 0 || stride == 0 || win > h || win > w {
+        bail!("MaxPool window {win}/stride {stride} invalid for {h}x{w}");
+    }
+    let oh = (h - win) / stride + 1;
+    let ow = (w - win) / stride + 1;
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..win {
+                    for kx in 0..win {
+                        let v = acts[((oy * stride + ky) * w + (ox * stride + kx)) * c + ch];
+                        m = m.max(v);
+                    }
+                }
+                out[(oy * ow + ox) * c + ch] = m;
+            }
+        }
+    }
+    Ok(out)
 }
 
 // Silence unused-import warning when DataSegment only appears in tests.

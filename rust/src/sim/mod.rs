@@ -13,5 +13,5 @@
 pub mod apu;
 pub mod pe;
 
-pub use apu::{Apu, ApuConfig, SimStats};
+pub use apu::{host_maxpool, Apu, ApuConfig, SimStats};
 pub use pe::PeUnit;

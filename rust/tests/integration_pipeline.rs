@@ -1,0 +1,190 @@
+//! End-to-end pipeline validation: a zoo conv network compiles through
+//! `compiler::pipeline` into an executable program, runs on the
+//! cycle-accurate simulator bit-for-bit against the functional reference,
+//! agrees with the analytic cost model on every layer's mapping case and
+//! on compute cycles, round-trips through the binary ISA encoding and the
+//! on-disk artifact format, and serves behind the sharded fleet.
+
+use apu::compiler::pipeline::{analyze, compile_network, PipelineOptions};
+use apu::compiler::{CostModel, MappingCase};
+use apu::coordinator::{ApuEngine, BatchPolicy, Engine, Fleet, FleetConfig};
+use apu::isa::encode::{decode_stream, encode_stream};
+use apu::isa::Program;
+use apu::nn::graph::{Layer, LayerKind, Network, Shape};
+use apu::nn::zoo;
+use apu::sim::Apu;
+use apu::util::rng::Rng;
+
+fn nano_compiled() -> apu::compiler::CompiledNetwork {
+    compile_network(&zoo::vgg_nano(), &CostModel::nano_4pe(), &PipelineOptions::default()).unwrap()
+}
+
+#[test]
+fn vgg_nano_executes_and_agrees_with_the_cost_model() {
+    let model = CostModel::nano_4pe();
+    let compiled = nano_compiled();
+
+    // 1. Mapping agreement: the emitter and the analytic model chose the
+    //    same §4.4.3 case for every layer (they share decide_layer).
+    assert_eq!(compiled.decisions.len(), compiled.cost.layers.len());
+    for (d, lc) in compiled.decisions.iter().zip(&compiled.cost.layers) {
+        assert_eq!(d.case, lc.case, "{}: emitter vs cost model", lc.name);
+    }
+    // The network exercises conv cases I and III, host pooling, a folded
+    // batch norm (gone after normalization), and both FC mappings.
+    let cases: Vec<MappingCase> = compiled.cost.layers.iter().map(|l| l.case).collect();
+    assert!(cases.contains(&MappingCase::ConvSmall));
+    assert!(cases.contains(&MappingCase::ConvGroup));
+    assert!(cases.contains(&MappingCase::Host));
+    assert!(cases.contains(&MappingCase::FcStructured));
+    assert!(cases.contains(&MappingCase::FcDense));
+
+    // 2. Functional agreement: the sim reproduces the lowered reference.
+    let mut rng = Rng::new(99);
+    let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.normal()).collect();
+    let want = compiled.reference_forward(&x).unwrap();
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    assert!(!apu.is_streamed(), "vgg-nano must fit on-chip");
+    let got = apu.run(&x).unwrap();
+    assert_eq!(got.len(), 10);
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-5, "output {i}: {g} vs {w}");
+    }
+
+    // 3. Cycle agreement: vgg-nano's geometry divides the PE count
+    //    evenly, so the emitted wave structure must match the analytic
+    //    compute-cycle count exactly.
+    let model_compute: u64 = compiled.cost.layers.iter().map(|l| l.compute_cycles).sum();
+    assert_eq!(apu.stats().compute_cycles, model_compute);
+    // MAC accounting matches the graph-level count (groups included).
+    let net_macs: u64 = analyze(&zoo::vgg_nano(), &model).unwrap().cost.total_macs();
+    assert_eq!(apu.stats().macs, net_macs);
+}
+
+#[test]
+fn conv_cost_model_matches_simulator_cycles() {
+    // The conv analogue of integration_sim's FC cross-validation: a
+    // single grouped conv whose jobs divide the PE array evenly.
+    let net = Network {
+        name: "xconv".into(),
+        input: Shape { h: 8, w: 8, c: 8 },
+        layers: vec![Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { cout: 16, kh: 3, kw: 3, stride: 1, groups: 2, padding: 1 },
+            relu: true,
+        }],
+    };
+    let model = CostModel::nano_4pe();
+    let compiled = compile_network(&net, &model, &PipelineOptions::default()).unwrap();
+    assert_eq!(compiled.cost.layers[0].case, MappingCase::ConvGroup);
+
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    let x: Vec<f32> = (0..compiled.program.din).map(|i| (i as f32 * 0.21).cos()).collect();
+    apu.run(&x).unwrap();
+
+    // positions=64 × groups=2 = 128 jobs on 4 PEs → 32 waves × 8 rows.
+    assert_eq!(compiled.cost.layers[0].compute_cycles, 256);
+    assert_eq!(apu.stats().compute_cycles, compiled.cost.layers[0].compute_cycles);
+    assert_eq!(apu.stats().macs, compiled.cost.total_macs());
+    // utilization is perfect on this geometry
+    assert!((compiled.cost.layers[0].utilization - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn conv_program_roundtrips_isa_and_artifact() {
+    let compiled = nano_compiled();
+    let program = &compiled.program;
+
+    // Binary instruction encoding round-trip on a conv-lowered program.
+    let words = encode_stream(&program.insns);
+    let decoded = decode_stream(&words).unwrap();
+    assert_eq!(program.insns, decoded);
+
+    // On-disk artifact round-trip, then execution equivalence.
+    let path = std::env::temp_dir().join(format!("apu-pipeline-{}.apu", std::process::id()));
+    program.save(&path).unwrap();
+    let loaded = Program::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(program.insns, loaded.insns);
+    assert_eq!(program.data, loaded.data);
+
+    let model = &compiled.model;
+    let x: Vec<f32> = (0..program.din).map(|i| (i as f32 * 0.17).sin()).collect();
+    let mut a1 = Apu::new(model.apu_config());
+    let mut a2 = Apu::new(model.apu_config());
+    a1.load(program).unwrap();
+    a2.load(&loaded).unwrap();
+    assert_eq!(a1.run(&x).unwrap(), a2.run(&x).unwrap());
+}
+
+#[test]
+fn fleet_serves_a_compiled_zoo_network() {
+    // The acceptance path: zoo conv network → pipeline → ApuEngine →
+    // sharded fleet → responses that match the functional reference.
+    let compiled = nano_compiled();
+    let din = compiled.program.din;
+    let mut rng = Rng::new(4242);
+    let inputs: Vec<Vec<f32>> = (0..12).map(|_| (0..din).map(|_| rng.normal()).collect()).collect();
+    let want: Vec<Vec<f32>> =
+        inputs.iter().map(|x| compiled.reference_forward(x).unwrap()).collect();
+
+    let config = FleetConfig {
+        shards: 2,
+        batch: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+        queue_cap: 32,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(config, move |_| {
+        Ok(Box::new(ApuEngine::from_compiled(&compiled)?) as Box<dyn Engine>)
+    })
+    .unwrap();
+    assert_eq!(fleet.alive_shards(), 2);
+
+    let receivers: Vec<_> = inputs.iter().map(|x| fleet.submit(x.clone()).unwrap()).collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx.recv().unwrap();
+        let out = reply.output.unwrap();
+        assert_eq!(out.len(), 10);
+        for (j, (&g, &w)) in out.iter().zip(&want[i]).enumerate() {
+            assert!((g - w).abs() < 1e-5, "request {i} output {j}: {g} vs {w}");
+        }
+    }
+    let metrics = fleet.shutdown().unwrap();
+    assert_eq!(metrics.completed(), 12);
+    assert_eq!(metrics.failed(), 0);
+}
+
+#[test]
+fn analysis_covers_the_full_zoo() {
+    // Every zoo network flows through the passes + shared mapping, even
+    // the ones whose emission is analytic-only.
+    let model = CostModel::paper_9pe();
+    for name in ["lenet", "alexnet", "vgg19", "resnet50", "vgg-nano", "mha"] {
+        let net = zoo::by_name(name).unwrap();
+        let a = analyze(&net, &model).unwrap();
+        assert!(a.cost.total_cycles() > 0, "{name} costs nothing?");
+        assert_eq!(a.decisions.len(), a.cost.layers.len());
+        for (d, lc) in a.decisions.iter().zip(&a.cost.layers) {
+            assert_eq!(d.case, lc.case, "{name}/{}", lc.name);
+        }
+    }
+}
+
+#[test]
+fn lenet_compiles_through_the_pipeline_on_the_paper_instance() {
+    // The FC-only zoo entry stays executable through the generic path.
+    let model = CostModel::paper_9pe();
+    let compiled =
+        compile_network(&zoo::lenet_300_100(), &model, &PipelineOptions::default()).unwrap();
+    assert!(compiled.cost.layers.iter().all(|l| l.case == MappingCase::FcStructured));
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    let x: Vec<f32> = (0..800).map(|i| (i as f32 * 0.05).sin()).collect();
+    let got = apu.run(&x).unwrap();
+    let want = compiled.reference_forward(&x).unwrap();
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-4, "output {i}: {g} vs {w}");
+    }
+}
