@@ -21,9 +21,13 @@ fn main() {
         println!("{}", r.report());
     }
 
-    // Full compile (normalize → weights → lower → emit) on executable nets.
+    // Full compile (normalize → weights → lower → emit) on executable
+    // nets — alexnet-nano exercises the §4.4.3-II tiled emission path
+    // (per-tile waves + runtime FoldAdd partial-sum buffers).
     let opts = PipelineOptions::default();
-    for (net, model) in [(zoo::vgg_nano(), &nano), (zoo::lenet_300_100(), &paper)] {
+    for (net, model) in
+        [(zoo::vgg_nano(), &nano), (zoo::alexnet_nano(), &nano), (zoo::lenet_300_100(), &paper)]
+    {
         let r = bench(&format!("pipeline/emit/{}", net.name), budget(), || {
             compile_network(&net, model, &opts).unwrap().program.insns.len()
         });

@@ -6,4 +6,5 @@ cargo build --release
 # Examples are part of the contract (ROADMAP demos); rot fails the build.
 cargo build --release --examples
 cargo test -q
+cargo fmt --check
 cargo clippy --all-targets -- -D warnings

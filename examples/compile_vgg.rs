@@ -5,10 +5,12 @@
 //! and then *emit and simulate* two executable programs:
 //!
 //! * the VGG FC tail at 1/8 width (2560→500→200→10, structured at
-//!   nb=10 — full-width FC6 tiles across PEs, a §4.4.3-II fold the
-//!   emitter deliberately leaves analytic);
+//!   nb=10);
 //! * `zoo::vgg_nano`, the reduced conv network, end to end on the nano
-//!   instance.
+//!   instance;
+//! * `zoo::alexnet_nano`, whose first conv, group conv, and FC blocks
+//!   all exceed one nano PE — the §4.4.3-II tiled path with runtime
+//!   `FoldAdd` partial-sum folds.
 //!
 //! ```bash
 //! cargo run --release --example compile_vgg
@@ -59,6 +61,9 @@ fn main() -> anyhow::Result<()> {
 
     // Executable 2: the reduced conv network on the nano instance.
     run_executable(&zoo::vgg_nano(), &CostModel::nano_4pe())?;
+
+    // Executable 3: the tiled reference — §4.4.3-II partial-sum folds.
+    run_executable(&zoo::alexnet_nano(), &CostModel::nano_4pe())?;
     Ok(())
 }
 

@@ -270,6 +270,23 @@ fn tile_cost(model: &CostModel, jobs: u64, tile_rows: u64) -> (u64, f64, u64) {
     (compute, utilization, waves)
 }
 
+/// Host cycles of a §4.4.3-II layer epilogue, mirroring the charges the
+/// emitted program incurs in the simulator (`emit_fold_epilogue`): one
+/// add per element per column tile beyond the first, plus the deferred
+/// per-element ReLU and — for non-terminal layers — the output
+/// quantizer, both of which move to the host when partial sums are
+/// folded there. Zero for untiled layers (the PE datapath applies
+/// bias/ReLU/quantize for free at the end of its adder tree).
+fn case_ii_host(tw: usize, dout: u64, relu: bool, last: bool) -> u64 {
+    if tw <= 1 {
+        return 0;
+    }
+    let folds = (tw as u64 - 1) * dout;
+    let act = if relu { dout } else { 0 };
+    let quant = if last { 0 } else { dout };
+    folds + act + quant
+}
+
 /// Streaming cycles when a layer's weights exceed residency.
 fn stream_cost(model: &CostModel, weight_bits: u64) -> u64 {
     if weight_bits > model.residency_bits() {
@@ -298,9 +315,10 @@ pub fn cost_network(model: &CostModel, net: &Network) -> Result<NetworkCost> {
                 // PE per cycle.
                 let routed = d.jobs * bw.min(model.pe_w) as u64;
                 let route = routed.div_ceil(model.n_pes as u64);
-                // Host folds partial sums when the block is split along
-                // its columns (§4.4.3-II).
-                let host = if d.tw > 1 { (d.tw as u64 - 1) * *dout as u64 } else { 0 };
+                // Host folds + deferred activation when the block is
+                // split along its columns (§4.4.3-II).
+                let host =
+                    case_ii_host(d.tw, *dout as u64, l.relu, i + 1 == net.layers.len());
                 let weight_bits = (nb * bh * bw) as u64 * model.bits as u64;
                 LayerCost {
                     name: l.name.clone(),
@@ -325,7 +343,8 @@ pub fn cost_network(model: &CostModel, net: &Network) -> Result<NetworkCost> {
                 // the routing network delivers the input volume, not the
                 // im2col expansion.
                 let route = (inp.flat() as u64 * (d.th * d.tw) as u64).div_ceil(model.n_pes as u64);
-                let host = if d.tw > 1 { (d.tw as u64 - 1) * positions * *cout as u64 } else { 0 };
+                let host =
+                    case_ii_host(d.tw, positions * *cout as u64, l.relu, i + 1 == net.layers.len());
                 let weight_bits = (cout * kh * kw * (inp.c / g)) as u64 * model.bits as u64;
                 LayerCost {
                     name: l.name.clone(),
@@ -341,7 +360,11 @@ pub fn cost_network(model: &CostModel, net: &Network) -> Result<NetworkCost> {
                 }
             }
             LayerKind::MaxPool { window, .. } => {
-                let host = outp.flat() as u64 * (window * window) as u64;
+                // Per output: window² loads + window²−1 max-combines,
+                // the same per-element convention the simulator charges
+                // (`sim::Apu::host_op`) — asserted equal in the
+                // integration tests.
+                let host = outp.flat() as u64 * (2 * (window * window) as u64 - 1);
                 LayerCost {
                     name: l.name.clone(),
                     case: MappingCase::Host,

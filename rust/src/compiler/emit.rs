@@ -2,7 +2,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::isa::{DataSegment, Insn, Program};
+use crate::isa::{DataSegment, HostOpKind, Insn, Program};
 use crate::pruning::{BlockStructure, PackedLayer};
 use crate::sched::{build_demand, schedule_routes};
 use crate::util::rng::Rng;
@@ -72,9 +72,15 @@ pub fn compile_packed_layers(
 
     let mut producers = input_chunks(layers[0].structure.din, n_pes);
     for (li, layer) in layers.iter().enumerate() {
-        producers = emit_packed_fc(&mut p, li as u16, layer, &producers, li == 0, n_pes)?;
+        // Imported bundles are packed to fit one PE by construction:
+        // unbounded tile caps keep this path untiled.
+        producers =
+            emit_packed_fc(&mut p, li as u16, layer, &producers, li == 0, n_pes, usize::MAX, usize::MAX)?;
     }
     p.insns.push(Insn::Halt);
+    if p.data.len() > u16::MAX as usize {
+        bail!("{name}: {} data segments overflow the 16-bit segment table", p.data.len());
+    }
     p.validate()?;
     Ok(p)
 }
@@ -85,9 +91,20 @@ pub fn compile_packed_layers(
 /// input chunks for the first layer); the group *index* is the crossbar
 /// wire its activations are broadcast on, which must equal the owning
 /// PE's index modulo `n_pes` for the simulator's ownership check.
+///
+/// `pe_h`/`pe_w` are the PE block capacity: a block larger than one PE
+/// is tiled into `th×tw` sub-blocks (§4.4.3-II). Row tiles split the
+/// block's output rows across extra waves; column tiles produce partial
+/// sums that land in named host buffers (`Scatter { buf: t, .. }`) and
+/// are folded by runtime `FoldAdd` ops — bias rides column tile 0 and
+/// ReLU/output quantization run on the host after the last fold, so
+/// both apply exactly once. Pass caps at least as large as the block
+/// (e.g. `usize::MAX`) for the untiled fast path.
+///
 /// Returns this layer's producer groups for the next layer. Shared by
 /// [`compile_packed_layers`] and the graph pipeline
 /// (`compiler::pipeline`).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn emit_packed_fc(
     p: &mut Program,
     layer_id: u16,
@@ -95,47 +112,107 @@ pub(crate) fn emit_packed_fc(
     producers: &[Vec<u32>],
     from_input: bool,
     n_pes: usize,
+    pe_h: usize,
+    pe_w: usize,
 ) -> Result<Vec<Vec<u32>>> {
     let s = &layer.structure;
     let producers = merge_by_wire(producers, n_pes);
     let (bh, bw) = (s.bh(), s.bw());
-    // Fold into waves of at most n_pes blocks.
-    for wave in (0..s.nb).collect::<Vec<_>>().chunks(n_pes) {
-        let wave_nb = wave.len();
-        p.insns.push(Insn::ConfigLayer {
-            layer: layer_id,
-            nb: wave_nb as u16,
-            bh: bh as u16,
-            bw: bw as u16,
-            bits: layer.bits as u8,
-            relu: layer.relu,
-        });
-        for (pe, &g) in wave.iter().enumerate() {
-            let w_seg = p.push_data(DataSegment::I8(layer.codes[g].clone()));
-            let b_seg = p.push_data(DataSegment::F32(layer.bias[g].clone()));
-            let s_seg = p.push_data(DataSegment::F32(vec![layer.w_scale[g], layer.out_scale[g]]));
-            p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_seg });
-            p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_seg });
-            p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_seg });
+    let (th, tw) = (bh.div_ceil(pe_h), bw.div_ceil(pe_w));
+    if tw > 1 {
+        // The host epilogue applies one quantizer scale to the whole
+        // stream, so a column-tiled lowering must be uniform.
+        if let Some(&os) = layer.out_scale.iter().find(|&&os| os != layer.out_scale[0]) {
+            bail!("column-tiled FC needs a uniform out_scale ({os} vs {})", layer.out_scale[0]);
         }
-        // Static routing schedule for this wave's consumers.
-        let consumers: Vec<Vec<u32>> = wave.iter().map(|&g| s.col_groups[g].clone()).collect();
-        let demand = build_demand(&producers, &consumers)?;
-        let sched = schedule_routes(&demand)?;
-        sched.verify(&demand)?;
-        let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
-        p.insns.push(Insn::Route { seg: r_seg, from_input });
-        p.insns.push(Insn::Compute { rows: bh as u16 });
-        // Scatter segment: [dout, wave row indices...]
-        let mut scat = Vec::with_capacity(1 + wave_nb * bh);
-        scat.push(s.dout as u32);
-        for &g in wave {
-            scat.extend_from_slice(&s.row_groups[g]);
+    }
+    let blocks: Vec<usize> = (0..s.nb).collect();
+    for r in 0..th {
+        let r0 = r * pe_h.min(bh);
+        let rows = pe_h.min(bh - r0);
+        for t in 0..tw {
+            let c0 = t * pe_w.min(bw);
+            let cols = pe_w.min(bw - c0);
+            // PE-side bias/ReLU/quantizer only when no fold follows:
+            // with column tiles they move to the host epilogue.
+            let in_pe_act = tw == 1;
+            // Fold each tile's blocks into waves of at most n_pes.
+            for wave in blocks.chunks(n_pes) {
+                let wave_nb = wave.len();
+                p.insns.push(Insn::ConfigLayer {
+                    layer: layer_id,
+                    nb: wave_nb as u16,
+                    bh: rows as u16,
+                    bw: cols as u16,
+                    bits: layer.bits as u8,
+                    relu: layer.relu && in_pe_act,
+                });
+                for (pe, &g) in wave.iter().enumerate() {
+                    let codes = &layer.codes[g];
+                    let mut tile = Vec::with_capacity(rows * cols);
+                    for i in 0..rows {
+                        let base = (r0 + i) * bw + c0;
+                        tile.extend_from_slice(&codes[base..base + cols]);
+                    }
+                    let bias: Vec<f32> = if t == 0 {
+                        layer.bias[g][r0..r0 + rows].to_vec()
+                    } else {
+                        vec![0.0; rows]
+                    };
+                    let out_scale = if in_pe_act { layer.out_scale[g] } else { 0.0 };
+                    let w_seg = p.push_data(DataSegment::I8(tile));
+                    let b_seg = p.push_data(DataSegment::F32(bias));
+                    let s_seg = p.push_data(DataSegment::F32(vec![layer.w_scale[g], out_scale]));
+                    p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_seg });
+                    p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_seg });
+                    p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_seg });
+                }
+                // Static routing schedule for this wave's column slice.
+                let consumers: Vec<Vec<u32>> =
+                    wave.iter().map(|&g| s.col_groups[g][c0..c0 + cols].to_vec()).collect();
+                let demand = build_demand(&producers, &consumers)?;
+                let sched = schedule_routes(&demand)?;
+                sched.verify(&demand)?;
+                let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
+                p.insns.push(Insn::Route { seg: r_seg, from_input });
+                p.insns.push(Insn::Compute { rows: rows as u16 });
+                // Scatter segment: [dout, wave row indices...]
+                let mut scat = Vec::with_capacity(1 + wave_nb * rows);
+                scat.push(s.dout as u32);
+                for &g in wave {
+                    scat.extend_from_slice(&s.row_groups[g][r0..r0 + rows]);
+                }
+                let sc_seg = p.push_data(DataSegment::U32(scat));
+                p.insns.push(Insn::Scatter { seg: sc_seg, buf: t as u16 });
+            }
         }
-        let sc_seg = p.push_data(DataSegment::U32(scat));
-        p.insns.push(Insn::Scatter { seg: sc_seg });
+    }
+    if tw > 1 {
+        emit_fold_epilogue(p, tw, layer.relu, layer.out_scale[0], layer.bits);
+        // Folded outputs are host-owned: chunk them across wires.
+        return Ok(input_chunks(s.dout, n_pes));
     }
     Ok(s.row_groups.clone())
+}
+
+/// Emit the §4.4.3-II layer epilogue: fold each named partial buffer
+/// into the committed stream (runtime `FoldAdd`, one per column tile
+/// beyond the first), then apply ReLU and the output quantizer on the
+/// host — exactly once, after the last fold. Shared by the tiled FC and
+/// tiled conv emitters.
+pub(crate) fn emit_fold_epilogue(p: &mut Program, tw: usize, relu: bool, out_scale: f32, bits: u32) {
+    for t in 1..tw {
+        let seg = p.push_data(DataSegment::F32(vec![t as f32]));
+        p.insns.push(Insn::HostOp { op: HostOpKind::FoldAdd, seg });
+    }
+    if relu {
+        let seg = p.push_data(DataSegment::F32(Vec::new()));
+        p.insns.push(Insn::HostOp { op: HostOpKind::Relu, seg });
+    }
+    if out_scale > 0.0 {
+        let seg = p.push_data(DataSegment::F32(vec![out_scale, bits as f32]));
+        p.insns.push(Insn::HostOp { op: HostOpKind::Quantize, seg });
+    }
 }
 
 /// Synthesize a random packed FC network (figure benches and property

@@ -24,10 +24,28 @@
 //!    when blocks/positions exceed the PE count, and the final `Insn`
 //!    stream the cycle-accurate simulator executes.
 //!
-//! Case II mappings (`ConvLarge`, or FC blocks tiled across PEs) need
-//! host-side partial-sum folds of *runtime* values; they remain
-//! analytic-only — [`compile_network`] reports them as non-executable
-//! while [`analyze`] still costs them.
+//! Case II mappings (`ConvLarge`, grouped convs whose per-group kernel
+//! exceeds one PE, and FC blocks tiled across PEs) are fully
+//! executable: a block/kernel larger than one PE is tiled into `th×tw`
+//! sub-blocks, each tile runs as its own ConfigLayer/Route/Compute
+//! waves, column-tile partial sums land in named host buffers
+//! (`Scatter { buf, .. }`), and runtime-operand `FoldAdd` host ops fold
+//! them into the stream — bias applied exactly once (column tile 0),
+//! ReLU and the output quantizer applied on the host only after the
+//! final fold. Attention (§4.4.4) remains analytic-only —
+//! [`compile_network`] reports it as non-executable while [`analyze`]
+//! still costs it.
+//!
+//! **Wave-count caveat:** the emitter schedules each tile's jobs in its
+//! own waves, while the analytic model packs all of a layer's jobs into
+//! one wave sequence and charges every job a full `tile_rows` of
+//! compute; the two wave (and compute-cycle) counts agree exactly
+//! whenever each tile's job count divides the PE count evenly
+//! (`positions % n_pes == 0` for convs, `nb % n_pes == 0` for FCs) and
+//! row tiles are not ragged (`bh % pe_h == 0` whenever `th > 1` — a
+//! ragged last row tile computes fewer rows than the analytic charge).
+//! That is the geometry the cross-validation tests and the zoo's tiled
+//! reference network (`zoo::alexnet_nano`) use.
 //!
 //! **Route-cycle caveat:** the analytic model charges conv routing at
 //! line-buffer reuse (the input volume enters once per column-tile pass,
@@ -43,7 +61,7 @@ use anyhow::{bail, Context, Result};
 use crate::compiler::cost::{
     cost_network, decide_layer, CostModel, MappingCase, MappingDecision, NetworkCost,
 };
-use crate::compiler::emit::{emit_packed_fc, input_chunks};
+use crate::compiler::emit::{emit_fold_epilogue, emit_packed_fc, input_chunks};
 use crate::isa::{DataSegment, HostOpKind, Insn, Program};
 use crate::nn::graph::{LayerKind, Network};
 use crate::nn::passes::{normalize, LayerFate, Normalized};
@@ -279,9 +297,15 @@ pub struct ConvLayer {
     pub w_scale: Vec<f32>,
     pub bias: Vec<Vec<f32>>,
     /// Per-group output quantizer scale; `0.0` bypasses (logit head).
+    /// Uniform across groups whenever the layer is column-tiled (the
+    /// host epilogue applies one scale to the whole stream).
     pub out_scale: Vec<f32>,
     pub relu: bool,
     pub bits: u32,
+    /// PE block capacity the layer was mapped against: a group block
+    /// larger than `tile_h × tile_w` is tiled (§4.4.3-II).
+    pub tile_h: usize,
+    pub tile_w: usize,
 }
 
 impl ConvLayer {
@@ -294,9 +318,23 @@ impl ConvLayer {
         self.cout / self.groups
     }
 
+    /// Row tiles per group block (§4.4.3-II when > 1).
+    pub fn th(&self) -> usize {
+        self.bh().div_ceil(self.tile_h)
+    }
+
+    /// Column tiles per group block — each beyond the first produces a
+    /// partial-sum buffer the host folds.
+    pub fn tw(&self) -> usize {
+        self.kvol().div_ceil(self.tile_w)
+    }
+
     /// Functional reference for one input plane (channel-last `h×w×c`),
     /// mirroring the PE datapath exactly: integer codes × grid inputs in
-    /// an f64 tree, bias, ReLU, end-of-tree quantizer.
+    /// an f64 tree *per column tile*, bias on column tile 0, f32 folds
+    /// in tile order, then ReLU and the end-of-tree quantizer — the same
+    /// arithmetic whether the fold happens inside one PE (`tw == 1`) or
+    /// across the host's partial-sum buffers (§4.4.3-II).
     pub fn forward(&self, acts: &[f32]) -> Result<Vec<f32>> {
         if acts.len() != self.in_h * self.in_w * self.in_c {
             bail!("{}: input len {} != {}x{}x{}", self.name, acts.len(), self.in_h, self.in_w, self.in_c);
@@ -304,6 +342,7 @@ impl ConvLayer {
         let padded = self.padded(acts);
         let (pw, c) = (self.in_w + 2 * self.padding, self.in_c);
         let (bh, kvol, cin_g) = (self.bh(), self.kvol(), self.in_c / self.groups);
+        let tw = self.tw();
         let mut out = vec![0f32; self.oh * self.ow * self.cout];
         let mut latch = vec![0f32; kvol];
         for pos in 0..self.oh * self.ow {
@@ -323,8 +362,19 @@ impl ConvLayer {
                 let oq = (self.out_scale[q] > 0.0).then(|| Quantizer::new(self.bits, self.out_scale[q]));
                 for i in 0..bh {
                     let row = &self.codes[q][i * kvol..(i + 1) * kvol];
-                    let acc: f64 = row.iter().zip(&latch).map(|(&cd, &a)| cd as f64 * a as f64).sum();
-                    let mut o = acc as f32 * self.w_scale[q] + self.bias[q][i];
+                    let mut o = 0f32;
+                    for t in 0..tw {
+                        let c0 = t * self.tile_w.min(kvol);
+                        let c1 = kvol.min(c0 + self.tile_w);
+                        let acc: f64 = row[c0..c1]
+                            .iter()
+                            .zip(&latch[c0..c1])
+                            .map(|(&cd, &a)| cd as f64 * a as f64)
+                            .sum();
+                        let part =
+                            acc as f32 * self.w_scale[q] + if t == 0 { self.bias[q][i] } else { 0.0 };
+                        o = if t == 0 { part } else { o + part };
+                    }
                     if self.relu {
                         o = o.max(0.0);
                     }
@@ -360,12 +410,53 @@ impl ConvLayer {
 /// One lowered layer, ready for emission.
 #[derive(Debug, Clone)]
 pub enum Lowered {
-    /// Structured-pruned (or nb=1 dense) FC on the PE array.
+    /// Structured-pruned (or nb=1 dense) FC on the PE array; blocks
+    /// larger than one PE tile across waves + host folds (§4.4.3-II).
     Fc(PackedLayer),
-    /// Conv as per-position mat-vecs (cases I/III).
+    /// Conv as per-position mat-vecs (cases I/II/III).
     Conv(ConvLayer),
     /// Max-pool on the host core.
     Pool { h: usize, w: usize, c: usize, window: usize, stride: usize },
+}
+
+/// Functional reference for a column-tiled FC block (§4.4.3-II),
+/// mirroring the emitted program exactly: an f64 tree per `tile_w`-wide
+/// column tile → f32 partial (PE), bias on tile 0 only, f32 folds in
+/// tile order (host `FoldAdd`), then ReLU and the *uniform* output
+/// quantizer after the last fold (host epilogue).
+fn tiled_fc_forward(layer: &PackedLayer, tile_w: usize, a: &[f32]) -> Result<Vec<f32>> {
+    let s = &layer.structure;
+    if a.len() != s.din {
+        bail!("input len {} != din {}", a.len(), s.din);
+    }
+    let (bh, bw) = (s.bh(), s.bw());
+    let tw = bw.div_ceil(tile_w);
+    let oq = (layer.out_scale[0] > 0.0).then(|| Quantizer::new(layer.bits, layer.out_scale[0]));
+    let mut out = vec![0f32; s.dout];
+    for g in 0..s.nb {
+        for i in 0..bh {
+            let row = &layer.codes[g][i * bw..(i + 1) * bw];
+            let mut o = 0f32;
+            for t in 0..tw {
+                let c0 = t * tile_w.min(bw);
+                let c1 = bw.min(c0 + tile_w);
+                let mut acc = 0f64;
+                for j in c0..c1 {
+                    acc += row[j] as f64 * a[s.col_groups[g][j] as usize] as f64;
+                }
+                let part = acc as f32 * layer.w_scale[g] + if t == 0 { layer.bias[g][i] } else { 0.0 };
+                o = if t == 0 { part } else { o + part };
+            }
+            if layer.relu {
+                o = o.max(0.0);
+            }
+            out[s.row_groups[g][i] as usize] = match &oq {
+                Some(q) => q.fake(o),
+                None => o,
+            };
+        }
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -373,7 +464,7 @@ pub enum Lowered {
 // ---------------------------------------------------------------------------
 
 /// Mapping + cost for a network without emitting a program — works for
-/// every layer kind, including the analytic-only case-II mappings.
+/// every layer kind, including the analytic-only attention mapping.
 #[derive(Debug, Clone)]
 pub struct NetworkAnalysis {
     pub normalized: Normalized,
@@ -472,7 +563,13 @@ impl CompiledNetwork {
         let mut acts: Vec<f32> = x.iter().map(|&v| q.fake(v)).collect();
         for low in &self.lowered {
             acts = match low {
-                Lowered::Fc(p) => p.forward(&acts)?,
+                Lowered::Fc(p) => {
+                    if p.structure.bw().div_ceil(self.model.pe_w) == 1 {
+                        p.forward(&acts)?
+                    } else {
+                        tiled_fc_forward(p, self.model.pe_w, &acts)?
+                    }
+                }
                 Lowered::Conv(cv) => cv.forward(&acts)?,
                 Lowered::Pool { h, w, c, window, stride } => {
                     host_maxpool(&acts, *h, *w, *c, *window, *stride)?
@@ -490,8 +587,8 @@ impl CompiledNetwork {
 
 /// Run the full pipeline: normalize → weights+fold → map → lower →
 /// emit. Errors (rather than silently degrading) when a layer's mapping
-/// is analytic-only (case II tiling, attention) or the program would
-/// exceed the emission budget.
+/// is analytic-only (attention) or the program would exceed the
+/// emission budget.
 pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions) -> Result<CompiledNetwork> {
     if opts.in_scale <= 0.0 {
         bail!("in_scale must be positive, got {}", opts.in_scale);
@@ -508,10 +605,12 @@ pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions)
         let (inp, outp) = (shapes[i], shapes[i + 1]);
         let d = decide_layer(model, &l.kind, inp, outp).with_context(|| format!("layer {}", l.name))?;
         ensure_executable(l, &d)?;
+        // Each row tile re-latches the layer's input slice, so tiled
+        // layers route th× the untiled volume.
         items += match &l.kind {
-            LayerKind::Fc { .. } => inp.flat() as u64,
+            LayerKind::Fc { .. } => (inp.flat() * d.th) as u64,
             LayerKind::Conv { kh, kw, .. } => {
-                (outp.h * outp.w * d.groups) as u64 * (kh * kw * (inp.c / d.groups)) as u64
+                (outp.h * outp.w * d.groups * d.th) as u64 * (kh * kw * (inp.c / d.groups)) as u64
             }
             _ => 0,
         };
@@ -558,15 +657,12 @@ pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions)
 }
 
 /// Can this layer's mapping be emitted, or is it analytic-only?
+/// Tiled FC/conv mappings (§4.4.3-II) lower through per-tile waves and
+/// runtime `FoldAdd` partial-sum buffers, so only attention (and a
+/// batch norm that escaped normalization) remain non-executable.
 fn ensure_executable(l: &crate::nn::Layer, d: &MappingDecision) -> Result<()> {
     match &l.kind {
         LayerKind::Fc { .. } | LayerKind::Conv { .. } => {
-            if !d.fits_one_pe() {
-                bail!(
-                    "{}: {:?} tiles {}×{} across PEs — §4.4.3-II partial-sum folds are analytic-only",
-                    l.name, d.case, d.th, d.tw
-                );
-            }
             if let LayerKind::Conv { groups, .. } = &l.kind {
                 if d.groups != *groups && *groups > 1 {
                     bail!(
@@ -605,9 +701,16 @@ fn lower_layers(
         match (&l.kind, &weights.layers[i]) {
             (LayerKind::Fc { dout }, LayerParams::Fc { w, b }) => {
                 let structure = BlockStructure::random(*dout, inp.flat(), d.nb, &mut rng)?;
-                let out_scale: Vec<f32> = (0..d.nb)
-                    .map(|_| if i == last { 0.0 } else { 0.1 + rng.f64() as f32 * 0.4 })
-                    .collect();
+                // Column-tiled blocks (§4.4.3-II) are quantized on the
+                // host after the fold, which applies one scale to the
+                // whole stream: the lowering must be uniform.
+                let out_scale: Vec<f32> = if i == last {
+                    vec![0.0; d.nb]
+                } else if d.tw > 1 {
+                    vec![0.1 + rng.f64() as f32 * 0.4; d.nb]
+                } else {
+                    (0..d.nb).map(|_| 0.1 + rng.f64() as f32 * 0.4).collect()
+                };
                 let packed = PackedLayer::quantize_from(structure, model.bits, w, b, out_scale, l.relu)?;
                 lowered.push(Lowered::Fc(packed));
             }
@@ -615,6 +718,9 @@ fn lower_layers(
                 let g = d.groups;
                 let bh = cout / g;
                 let kvol = kh * kw * (inp.c / g);
+                // As for FCs: a column-tiled conv is quantized by the
+                // host epilogue, so its out_scale must be uniform.
+                let shared_os = (d.tw > 1 && i != last).then(|| 0.1 + rng.f64() as f32 * 0.4);
                 let mut codes = Vec::with_capacity(g);
                 let mut w_scale = Vec::with_capacity(g);
                 let mut bias = Vec::with_capacity(g);
@@ -625,9 +731,13 @@ fn lower_layers(
                     codes.push(block.iter().map(|&x| qz.quantize(x) as i8).collect());
                     w_scale.push(qz.scale);
                     bias.push(b[q * bh..(q + 1) * bh].to_vec());
-                    out_scale.push(if i == last { 0.0 } else { 0.1 + rng.f64() as f32 * 0.4 });
+                    out_scale.push(match (i == last, shared_os) {
+                        (true, _) => 0.0,
+                        (false, Some(os)) => os,
+                        (false, None) => 0.1 + rng.f64() as f32 * 0.4,
+                    });
                 }
-                lowered.push(Lowered::Conv(ConvLayer {
+                let cv = ConvLayer {
                     name: l.name.clone(),
                     in_h: inp.h,
                     in_w: inp.w,
@@ -646,7 +756,20 @@ fn lower_layers(
                     out_scale,
                     relu: l.relu,
                     bits: model.bits,
-                }));
+                    tile_h: model.pe_h,
+                    tile_w: model.pe_w,
+                };
+                if cv.th() != d.th || cv.tw() != d.tw {
+                    bail!(
+                        "internal: {} tiling disagreement ({}×{} vs decision {}×{})",
+                        l.name,
+                        cv.th(),
+                        cv.tw(),
+                        d.th,
+                        d.tw
+                    );
+                }
+                lowered.push(Lowered::Conv(cv));
             }
             (LayerKind::MaxPool { window, stride }, _) => {
                 lowered.push(Lowered::Pool { h: inp.h, w: inp.w, c: inp.c, window: *window, stride: *stride });
@@ -681,7 +804,16 @@ fn emit_program(
     for (li, low) in lowered.iter().enumerate() {
         match low {
             Lowered::Fc(packed) => {
-                producers = emit_packed_fc(&mut p, li as u16, packed, &producers, from_input, n_pes)?;
+                producers = emit_packed_fc(
+                    &mut p,
+                    li as u16,
+                    packed,
+                    &producers,
+                    from_input,
+                    n_pes,
+                    model.pe_h,
+                    model.pe_w,
+                )?;
             }
             Lowered::Conv(cv) => {
                 producers = emit_conv(&mut p, li as u16, cv, n_pes)?;
@@ -717,6 +849,12 @@ fn emit_program(
 /// group chunk (plus one reload for a ragged tail wave) and the wave
 /// count matches the analytic model's `ceil(positions·g / n)` whenever
 /// `g` and `n` divide evenly.
+///
+/// A group block larger than one PE is tiled (§4.4.3-II): every
+/// `(row tile, column tile)` pair runs its own wave sequence, column
+/// tile `t` scatters into host buffer `t` (tile 0 into the pending
+/// stream, bias attached), and the layer ends with runtime `FoldAdd`
+/// ops plus a host ReLU/quantize epilogue.
 fn emit_conv(p: &mut Program, layer_id: u16, cv: &ConvLayer, n_pes: usize) -> Result<Vec<Vec<u32>>> {
     let (h, w, c, pad) = (cv.in_h, cv.in_w, cv.in_c, cv.padding);
     let (ph, pw) = (h + 2 * pad, w + 2 * pad);
@@ -724,6 +862,7 @@ fn emit_conv(p: &mut Program, layer_id: u16, cv: &ConvLayer, n_pes: usize) -> Re
     let cin_g = c / g;
     let positions = cv.oh * cv.ow;
     let dout = positions * cv.cout;
+    let (th, tw) = (cv.th(), cv.tw());
 
     // Host gather: padded input plane (negative index = implicit zero).
     // Gather parameters ride an f32 segment, which is only exact for
@@ -748,89 +887,124 @@ fn emit_conv(p: &mut Program, layer_id: u16, cv: &ConvLayer, n_pes: usize) -> Re
     // Padded-plane producers: host-owned, chunked across crossbar wires.
     let padded_chunks = input_chunks(ph * pw * c, n_pes);
 
-    // One weight/bias/scale segment per group, shared across waves.
-    let mut w_segs = Vec::with_capacity(g);
-    let mut b_segs = Vec::with_capacity(g);
-    let mut s_segs = Vec::with_capacity(g);
+    // One weight/bias/scale segment per (group, row tile, column tile),
+    // shared across waves. Bias rides column tile 0; with column tiles
+    // the PE-side activation (ReLU + quantizer) defers to the host
+    // epilogue after the last fold.
+    let mut w_segs = vec![vec![vec![0u16; tw]; th]; g];
+    let mut b_segs = vec![vec![vec![0u16; tw]; th]; g];
+    let mut s_segs = vec![vec![vec![0u16; tw]; th]; g];
     for q in 0..g {
-        w_segs.push(p.push_data(DataSegment::I8(cv.codes[q].clone())));
-        b_segs.push(p.push_data(DataSegment::F32(cv.bias[q].clone())));
-        s_segs.push(p.push_data(DataSegment::F32(vec![cv.w_scale[q], cv.out_scale[q]])));
+        for r in 0..th {
+            let r0 = r * cv.tile_h.min(bh);
+            let rows = cv.tile_h.min(bh - r0);
+            for t in 0..tw {
+                let c0 = t * cv.tile_w.min(kvol);
+                let cols = cv.tile_w.min(kvol - c0);
+                let mut tile = Vec::with_capacity(rows * cols);
+                for i in 0..rows {
+                    let base = (r0 + i) * kvol + c0;
+                    tile.extend_from_slice(&cv.codes[q][base..base + cols]);
+                }
+                w_segs[q][r][t] = p.push_data(DataSegment::I8(tile));
+                let bias: Vec<f32> =
+                    if t == 0 { cv.bias[q][r0..r0 + rows].to_vec() } else { vec![0.0; rows] };
+                b_segs[q][r][t] = p.push_data(DataSegment::F32(bias));
+                let os = if tw == 1 { cv.out_scale[q] } else { 0.0 };
+                s_segs[q][r][t] = p.push_data(DataSegment::F32(vec![cv.w_scale[q], os]));
+            }
+        }
     }
 
     let mut owners: Vec<Vec<u32>> = vec![Vec::new(); n_pes];
-    let mut q0 = 0;
-    while q0 < g {
-        let cg = (g - q0).min(n_pes); // groups in this chunk
-        let reps = (n_pes / cg).max(1); // positions per wave
-        let mut pos0 = 0;
-        let mut cur_nb = 0usize;
-        while pos0 < positions {
-            let reps_here = reps.min(positions - pos0);
-            let nb = cg * reps_here;
-            if nb != cur_nb {
-                // (Re)configure the wave shape; PE weight SRAMs are
-                // cleared by ConfigLayer, so reload the chunk's groups.
-                p.insns.push(Insn::ConfigLayer {
-                    layer: layer_id,
-                    nb: nb as u16,
-                    bh: bh as u16,
-                    bw: kvol as u16,
-                    bits: cv.bits as u8,
-                    relu: cv.relu,
-                });
-                for pe in 0..nb {
-                    let q = q0 + pe % cg;
-                    p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_segs[q] });
-                    p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_segs[q] });
-                    p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_segs[q] });
-                }
-                cur_nb = nb;
-            }
-            // Routing demand: PE pe latches the im2col window of its
-            // (position, group) job, slots in (ky, kx, ci) order.
-            let mut consumers = Vec::with_capacity(nb);
-            for pe in 0..nb {
-                let q = q0 + pe % cg;
-                let pos = pos0 + pe / cg;
-                let (oy, ox) = (pos / cv.ow, pos % cv.ow);
-                let mut want = Vec::with_capacity(kvol);
-                for ky in 0..cv.kh {
-                    for kx in 0..cv.kw {
-                        let (y, x) = (oy * cv.stride + ky, ox * cv.stride + kx);
-                        for ci in 0..cin_g {
+    for t in 0..tw {
+        let c0 = t * cv.tile_w.min(kvol);
+        let cols = cv.tile_w.min(kvol - c0);
+        for r in 0..th {
+            let r0 = r * cv.tile_h.min(bh);
+            let rows = cv.tile_h.min(bh - r0);
+            let mut q0 = 0;
+            while q0 < g {
+                let cg = (g - q0).min(n_pes); // groups in this chunk
+                let reps = (n_pes / cg).max(1); // positions per wave
+                let mut pos0 = 0;
+                let mut cur_nb = 0usize;
+                while pos0 < positions {
+                    let reps_here = reps.min(positions - pos0);
+                    let nb = cg * reps_here;
+                    if nb != cur_nb {
+                        // (Re)configure the wave shape; PE weight SRAMs are
+                        // cleared by ConfigLayer, so reload the chunk's groups.
+                        p.insns.push(Insn::ConfigLayer {
+                            layer: layer_id,
+                            nb: nb as u16,
+                            bh: rows as u16,
+                            bw: cols as u16,
+                            bits: cv.bits as u8,
+                            relu: cv.relu && tw == 1,
+                        });
+                        for pe in 0..nb {
+                            let q = q0 + pe % cg;
+                            p.insns.push(Insn::LoadWeights { pe: pe as u16, seg: w_segs[q][r][t] });
+                            p.insns.push(Insn::LoadBias { pe: pe as u16, seg: b_segs[q][r][t] });
+                            p.insns.push(Insn::SetScales { pe: pe as u16, seg: s_segs[q][r][t] });
+                        }
+                        cur_nb = nb;
+                    }
+                    // Routing demand: PE pe latches its tile's slice of the
+                    // im2col window of its (position, group) job; slot j of
+                    // the unrolled kernel is (ky, kx, ci-within-group).
+                    let mut consumers = Vec::with_capacity(nb);
+                    for pe in 0..nb {
+                        let q = q0 + pe % cg;
+                        let pos = pos0 + pe / cg;
+                        let (oy, ox) = (pos / cv.ow, pos % cv.ow);
+                        let mut want = Vec::with_capacity(cols);
+                        for slot in c0..c0 + cols {
+                            let ky = slot / (cv.kw * cin_g);
+                            let kx = (slot / cin_g) % cv.kw;
+                            let ci = slot % cin_g;
+                            let (y, x) = (oy * cv.stride + ky, ox * cv.stride + kx);
                             want.push(((y * pw + x) * c + q * cin_g + ci) as u32);
                         }
+                        consumers.push(want);
                     }
+                    let demand = build_demand(&padded_chunks, &consumers)?;
+                    let sched = schedule_routes(&demand)?;
+                    sched.verify(&demand)?;
+                    let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
+                    p.insns.push(Insn::Route { seg: r_seg, from_input: false });
+                    p.insns.push(Insn::Compute { rows: rows as u16 });
+                    // Scatter: channel-last output layout, owner = wave PE
+                    // index; column tile t lands in host buffer t.
+                    let mut scat = Vec::with_capacity(1 + nb * rows);
+                    scat.push(dout as u32);
+                    for pe in 0..nb {
+                        let q = q0 + pe % cg;
+                        let pos = pos0 + pe / cg;
+                        for i in 0..rows {
+                            let gidx = (pos * cv.cout + q * bh + r0 + i) as u32;
+                            scat.push(gidx);
+                            if t == 0 {
+                                owners[pe].push(gidx);
+                            }
+                        }
+                    }
+                    let sc_seg = p.push_data(DataSegment::U32(scat));
+                    p.insns.push(Insn::Scatter { seg: sc_seg, buf: t as u16 });
+                    if p.data.len() + 8 > u16::MAX as usize {
+                        bail!("{}: conv emission overflows the segment table", cv.name);
+                    }
+                    pos0 += reps_here;
                 }
-                consumers.push(want);
+                q0 += cg;
             }
-            let demand = build_demand(&padded_chunks, &consumers)?;
-            let sched = schedule_routes(&demand)?;
-            sched.verify(&demand)?;
-            let r_seg = p.push_data(DataSegment::Routes(sched.assignments));
-            p.insns.push(Insn::Route { seg: r_seg, from_input: false });
-            p.insns.push(Insn::Compute { rows: bh as u16 });
-            // Scatter: channel-last output layout, owner = wave PE index.
-            let mut scat = Vec::with_capacity(1 + nb * bh);
-            scat.push(dout as u32);
-            for pe in 0..nb {
-                let q = q0 + pe % cg;
-                let pos = pos0 + pe / cg;
-                for i in 0..bh {
-                    let gidx = (pos * cv.cout + q * bh + i) as u32;
-                    scat.push(gidx);
-                    owners[pe].push(gidx);
-                }
-            }
-            let sc_seg = p.push_data(DataSegment::U32(scat));
-            p.insns.push(Insn::Scatter { seg: sc_seg });
-            if p.data.len() + 8 > u16::MAX as usize {
-                bail!("{}: conv emission overflows the segment table", cv.name);
-            }
-            pos0 += reps_here;
         }
-        q0 += cg;
+    }
+    if tw > 1 {
+        emit_fold_epilogue(p, tw, cv.relu, cv.out_scale[0], cv.bits);
+        // Folded outputs are host-owned: chunk them across wires.
+        return Ok(input_chunks(dout, n_pes));
     }
     Ok(owners)
 }
@@ -921,20 +1095,27 @@ mod tests {
     }
 
     #[test]
-    fn analytic_only_mappings_refuse_emission() {
+    fn case_ii_conv_now_compiles_attention_stays_analytic() {
         let model = CostModel::nano_4pe();
-        // a conv whose unrolled kernel exceeds one PE → case II
+        // a conv whose unrolled kernel exceeds one PE → case II, which
+        // now lowers through per-tile waves + runtime FoldAdd
         let big = Network {
             name: "big".into(),
             input: Shape { h: 8, w: 8, c: 64 },
             layers: vec![conv_layer("c", 64, 5, 1, 2, true)],
         };
-        let err = compile_network(&big, &model, &PipelineOptions::default()).unwrap_err();
-        assert!(format!("{err:#}").contains("analytic-only"), "{err:#}");
-        // …but analyze still costs it
-        let a = analyze(&big, &model).unwrap();
-        assert_eq!(a.cost.layers[0].case, MappingCase::ConvLarge);
-        // attention is analytic-only too
+        let compiled = compile_network(&big, &model, &PipelineOptions::default()).unwrap();
+        assert_eq!(compiled.decisions[0].case, MappingCase::ConvLarge);
+        assert!(!compiled.decisions[0].fits_one_pe());
+        // the program carries the fold machinery
+        let folds = compiled
+            .program
+            .insns
+            .iter()
+            .filter(|i| matches!(i, Insn::HostOp { op: HostOpKind::FoldAdd, .. }))
+            .count();
+        assert_eq!(folds, compiled.decisions[0].tw - 1);
+        // attention remains analytic-only
         let mha = zoo::transformer_mha(4, 64, 8);
         assert!(compile_network(&mha, &model, &PipelineOptions::default()).is_err());
         assert!(analyze(&mha, &model).is_ok());

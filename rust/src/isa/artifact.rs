@@ -3,7 +3,7 @@
 //!
 //! Layout (all little-endian):
 //! ```text
-//!   magic   "APU1"
+//!   magic   "APU2"
 //!   name    u32 len + utf8 bytes
 //!   din     u64
 //!   dout    u64
@@ -14,6 +14,13 @@
 //! ```
 //! Loading re-validates the program, so a corrupted artifact errors
 //! instead of mis-executing.
+//!
+//! Version history: "APU1" predates buffer-selecting scatters and the
+//! runtime-operand `FoldAdd` (§4.4.3-II); its `Scatter` word had no
+//! buffer field and `FoldAdd` carried a static f32 operand segment, so
+//! v1 blobs cannot be reinterpreted safely. Loading one errors with an
+//! explicit "unsupported artifact version" message — recompile the
+//! network to regenerate the artifact.
 
 use std::path::Path;
 
@@ -23,7 +30,7 @@ use super::encode::{decode_stream, encode_stream};
 use super::program::{DataSegment, Program};
 use crate::sched::Assignment;
 
-const MAGIC: &[u8; 4] = b"APU1";
+const MAGIC: &[u8; 4] = b"APU2";
 
 struct Reader<'a> {
     buf: &'a [u8],
@@ -131,7 +138,15 @@ pub fn to_bytes(p: &Program) -> Vec<u8> {
 /// Parse an artifact byte buffer back into a validated program.
 pub fn from_bytes(buf: &[u8]) -> Result<Program> {
     let mut r = Reader { buf, pos: 0 };
-    if r.take(4)? != MAGIC {
+    let magic = r.take(4)?;
+    if magic != MAGIC {
+        if magic.starts_with(b"APU") {
+            bail!(
+                "unsupported artifact version {} (this build reads version {}) — recompile the network",
+                magic[3] as char,
+                MAGIC[3] as char
+            );
+        }
         bail!("not an APU program artifact (bad magic)");
     }
     let name_len = r.u32()? as usize;
@@ -238,6 +253,21 @@ mod tests {
         bytes[0] = b'X';
         assert!(from_bytes(&bytes).is_err()); // bad magic
         assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn rejects_old_artifact_version_with_clear_error() {
+        let p = sample();
+        let mut bytes = to_bytes(&p);
+        assert_eq!(&bytes[..4], b"APU2");
+        bytes[..4].copy_from_slice(b"APU1");
+        let err = from_bytes(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unsupported artifact version 1"), "{msg}");
+        // a future version is refused the same way
+        bytes[..4].copy_from_slice(b"APU9");
+        let msg = format!("{:#}", from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("unsupported artifact version 9"), "{msg}");
     }
 
     #[test]

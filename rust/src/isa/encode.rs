@@ -50,7 +50,7 @@ pub fn encode_insn(insn: &Insn) -> Vec<u64> {
         Insn::Route { seg, from_input } => vec![word(OP_ROUTE, from_input as u8, seg, 0, 0)],
         Insn::Compute { rows } => vec![word(OP_COMPUTE, 0, rows, 0, 0)],
         Insn::HostOp { op, seg } => vec![word(OP_HOST, op.code(), seg, 0, 0)],
-        Insn::Scatter { seg } => vec![word(OP_SCATTER, 0, seg, 0, 0)],
+        Insn::Scatter { seg, buf } => vec![word(OP_SCATTER, 0, seg, buf, 0)],
         Insn::HostDense { w_seg, b_seg, relu } => vec![word(OP_HOSTDENSE, relu as u8, w_seg, b_seg, 0)],
         Insn::Halt => vec![word(OP_HALT, 0, 0, 0, 0)],
     }
@@ -87,7 +87,7 @@ pub fn decode_insn(words: &[u64], i: usize) -> Result<(Insn, usize)> {
         OP_ROUTE => (Insn::Route { seg: a, from_input: flags != 0 }, 1),
         OP_COMPUTE => (Insn::Compute { rows: a }, 1),
         OP_HOST => (Insn::HostOp { op: HostOpKind::from_code(flags)?, seg: a }, 1),
-        OP_SCATTER => (Insn::Scatter { seg: a }, 1),
+        OP_SCATTER => (Insn::Scatter { seg: a, buf: b }, 1),
         OP_HOSTDENSE => (Insn::HostDense { w_seg: a, b_seg: b, relu: flags != 0 }, 1),
         OP_HALT => (Insn::Halt, 1),
         other => bail!("unknown opcode {other:#x}"),
@@ -135,7 +135,7 @@ mod tests {
                 op: HostOpKind::from_code(rng.below(5) as u8).unwrap(),
                 seg: rng.below(1 << 16) as u16,
             },
-            7 => Insn::Scatter { seg: rng.below(1 << 16) as u16 },
+            7 => Insn::Scatter { seg: rng.below(1 << 16) as u16, buf: rng.below(1 << 16) as u16 },
             8 => Insn::HostDense {
                 w_seg: rng.below(1 << 16) as u16,
                 b_seg: rng.below(1 << 16) as u16,

@@ -13,7 +13,12 @@ pub enum HostOpKind {
     Relu,
     /// 2D max-pool with square window (encoded in `arg`).
     MaxPool,
-    /// Elementwise add of two host buffers (partial-sum folding, §4.4.3 II).
+    /// Fold a named *runtime* partial-sum buffer into the activation
+    /// stream (§4.4.3-II): `acts[i] += buf[src][i]`, then the buffer is
+    /// freed. The params segment carries `[src_buf]` — the buffer id a
+    /// tiled layer's wave scatters (`Scatter { buf, .. }`) filled this
+    /// run. The operand data is produced at runtime by the PE tiles;
+    /// only the buffer *selection* is compile-time.
     FoldAdd,
     /// Quantize a host buffer to the layer grid (scale from segment).
     Quantize,
@@ -69,9 +74,12 @@ pub enum Insn {
     /// paper keeps layers too small/irregular for the PE array on the
     /// RISC-V (classifier heads). Weights/bias are f32 segments.
     HostDense { w_seg: u16, b_seg: u16, relu: bool },
-    /// Copy PE output SRAMs to the host output buffer (layer scatter),
-    /// using the row permutation in segment `seg`.
-    Scatter { seg: u16 },
+    /// Copy PE output SRAMs to a host output buffer (layer scatter),
+    /// using the row permutation in segment `seg`. `buf = 0` targets the
+    /// layer's pending output buffer (committed when the layer ends);
+    /// `buf >= 1` targets the named partial-sum buffer a later `FoldAdd`
+    /// host op folds into the stream (§4.4.3-II column tiles).
+    Scatter { seg: u16, buf: u16 },
     /// End of program.
     Halt,
 }
@@ -197,12 +205,20 @@ impl Program {
                         bail!("insn {i}: zero-row compute");
                     }
                 }
-                Insn::HostOp { seg, .. } => check(*seg, "f32")?,
+                Insn::HostOp { op, seg } => {
+                    check(*seg, "f32")?;
+                    if *op == HostOpKind::FoldAdd && self.segment(*seg)?.len() != 1 {
+                        bail!(
+                            "insn {i}: FoldAdd params must be [src_buf], got {} values",
+                            self.segment(*seg)?.len()
+                        );
+                    }
+                }
                 Insn::HostDense { w_seg, b_seg, .. } => {
                     check(*w_seg, "f32")?;
                     check(*b_seg, "f32")?;
                 }
-                Insn::Scatter { seg } => check(*seg, "u32")?,
+                Insn::Scatter { seg, .. } => check(*seg, "u32")?,
                 Insn::Halt => {}
             }
         }
@@ -226,7 +242,7 @@ impl Program {
                 Insn::HostDense { w_seg, b_seg, relu } => {
                     format!("host.dense w={w_seg} b={b_seg} relu={}", *relu as u8)
                 }
-                Insn::Scatter { seg } => format!("scatter seg={seg}"),
+                Insn::Scatter { seg, buf } => format!("scatter seg={seg} buf={buf}"),
                 Insn::Halt => "halt".to_string(),
             });
             s.push('\n');
@@ -252,7 +268,7 @@ mod tests {
             Insn::SetScales { pe: 0, seg: b },
             Insn::Route { seg: r, from_input: true },
             Insn::Compute { rows: 2 },
-            Insn::Scatter { seg: perm },
+            Insn::Scatter { seg: perm, buf: 0 },
             Insn::Halt,
         ];
         p
@@ -298,6 +314,18 @@ mod tests {
             assert!(asm.contains(needle), "missing {needle} in:\n{asm}");
         }
         assert_eq!(asm.lines().count(), 8);
+    }
+
+    #[test]
+    fn foldadd_params_must_be_one_buffer_id() {
+        let mut p = sample();
+        // segment 1 is a 2-element f32 segment: not a [src_buf] scalar
+        p.insns.insert(7, Insn::HostOp { op: HostOpKind::FoldAdd, seg: 1 });
+        assert!(p.validate().is_err());
+        let mut q = sample();
+        let s = q.push_data(DataSegment::F32(vec![1.0]));
+        q.insns.insert(7, Insn::HostOp { op: HostOpKind::FoldAdd, seg: s });
+        q.validate().unwrap();
     }
 
     #[test]

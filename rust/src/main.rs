@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! apu figures <fig3|fig4b|fig6|fig9|fig10|fig11|fig13|fig14|fig15|headline|all>
-//! apu compile   [--net artifact|lenet|alexnet|vgg19|resnet50|vgg-nano|mha]
+//! apu compile   [--net artifact|lenet|alexnet[-nano]|vgg19|resnet50|vgg-nano|mha]
 //!               [--machine paper|nano] [--seed S] [--out FILE] [--emit-asm]
 //!               [--pes N] [--artifacts DIR]
 //! apu simulate  [--pes N] [--n N] [--artifacts DIR]
@@ -117,7 +117,7 @@ fn cmd_compile(argv: &[String]) -> Result<()> {
         Opt {
             name: "net",
             default: Some("artifact"),
-            help: "artifact | lenet | alexnet | vgg19[-dense] | resnet50[-dense] | vgg-nano | mha",
+            help: "artifact | lenet | alexnet[-nano] | vgg19[-dense] | resnet50[-dense] | vgg-nano | mha",
         },
         Opt {
             name: "machine",
@@ -170,8 +170,9 @@ fn cmd_compile(argv: &[String]) -> Result<()> {
     }
 
     // Zoo network through the pass-based pipeline.
-    let net = apu::nn::zoo::by_name(&net_name)
-        .with_context(|| format!("unknown zoo network {net_name} (try lenet, alexnet, vgg19, resnet50, vgg-nano, mha)"))?;
+    let net = apu::nn::zoo::by_name(&net_name).with_context(|| {
+        format!("unknown zoo network {net_name} (available: {})", apu::nn::zoo::names().join(", "))
+    })?;
     let mut model = match args.get("machine").unwrap() {
         "paper" => CostModel::paper_9pe(),
         "nano" => CostModel::nano_4pe(),
@@ -342,7 +343,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         Opt { name: "rate", default: Some("2000"), help: "arrival rate, req/s" },
         Opt { name: "batch", default: Some("8"), help: "max batch size per shard" },
         Opt { name: "queue-cap", default: Some("64"), help: "per-shard queue bound (admission control)" },
-        Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact | zoo:<name> (e.g. zoo:vgg-nano)" },
+        Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact | zoo:<name> (e.g. zoo:vgg-nano, zoo:alexnet-nano)" },
         Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
         Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
     ];
@@ -393,13 +394,18 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             // A zoo network compiled once through the pipeline; every
             // shard serves the same program on its own simulator.
             let name = m.strip_prefix("zoo:").unwrap();
-            let net = apu::nn::zoo::by_name(name)
-                .with_context(|| format!("unknown zoo network {name}"))?;
-            // vgg-nano maps onto the nano instance; everything else gets
-            // the paper geometry (513-wide PEs) so FC stacks fit one PE.
+            let net = apu::nn::zoo::by_name(name).with_context(|| {
+                format!("unknown zoo network {name} (available: {})", apu::nn::zoo::names().join(", "))
+            })?;
+            // The -nano networks map onto the nano instance (vgg-nano
+            // untiled, alexnet-nano exercising the §4.4.3-II folds);
+            // everything else gets the paper geometry (513-wide PEs).
             // (Compare the canonical zoo name, not the CLI spelling.)
-            let mut machine =
-                if net.name == "vgg-nano" { CostModel::nano_4pe() } else { CostModel::paper_9pe() };
+            let mut machine = if net.name.ends_with("-nano") {
+                CostModel::nano_4pe()
+            } else {
+                CostModel::paper_9pe()
+            };
             machine.n_pes = n_pes;
             let compiled = pipeline::compile_network(&net, &machine, &PipelineOptions::default())
                 .with_context(|| format!("compiling {name} for the fleet"))?;

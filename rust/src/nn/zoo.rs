@@ -124,6 +124,43 @@ pub fn resnet50(group_conv: bool) -> Network {
     }
 }
 
+/// Reduced AlexNet: the same front-heavy topology (big first kernel, a
+/// 2-group conv, an FC tail) scaled to a 16×16 input so that on
+/// [`CostModel::nano_4pe`](crate::compiler::CostModel::nano_4pe) it
+/// genuinely *tiles* (§4.4.3 case II) yet still simulates in
+/// milliseconds:
+///
+/// * `conv1` — 7×7×3 kernel, 147 unrolled columns > the 128-wide PE →
+///   `ConvLarge`, two column tiles folded on the host;
+/// * `conv2` — 2-group conv, 144 columns per group → tiled `ConvGroup`;
+/// * `fc1` — structured blocks of 16×256 → column-tiled FC;
+/// * `fc2` — 10 outputs, indivisible by 4 blocks → dense untiled head.
+///
+/// Every tiled geometry divides the 4-PE machine evenly, so the emitted
+/// wave structure matches the analytic model's compute-cycle count
+/// exactly (the cross-validation tests assert it). The union of tile
+/// weights exceeds the nano instance's PE SRAM residency, so the
+/// program *streams* weights per run — the AlexNet-flavored version of
+/// the paper's Fig. 15 folding dip.
+pub fn alexnet_nano() -> Network {
+    Network {
+        name: "alexnet-nano".into(),
+        input: Shape { h: 16, w: 16, c: 3 },
+        layers: vec![
+            Layer {
+                name: "conv1".into(),
+                kind: LayerKind::Conv { cout: 32, kh: 7, kw: 7, stride: 1, groups: 1, padding: 3 },
+                relu: true,
+            },
+            pool("pool1"),
+            conv("conv2", 64, 3, 1, 2),
+            pool("pool2"),
+            fc("fc1", 64, true),
+            fc("fc2", 10, false),
+        ],
+    }
+}
+
 /// Reduced VGG: the same conv/pool/FC topology scaled to a 16×16 input so
 /// the whole network lowers through `compiler::pipeline` into an
 /// *executable* program (every conv is case I/III, every FC fits one PE)
@@ -157,6 +194,7 @@ pub fn by_name(name: &str) -> Option<Network> {
     Some(match name {
         "lenet" | "lenet-300-100" => lenet_300_100(),
         "alexnet" => alexnet(),
+        "alexnet-nano" | "alexnet_nano" => alexnet_nano(),
         "vgg19" | "vgg19-group" => vgg19(true),
         "vgg19-dense" => vgg19(false),
         "resnet50" | "resnet50-group" => resnet50(true),
@@ -165,6 +203,23 @@ pub fn by_name(name: &str) -> Option<Network> {
         "mha" => transformer_mha(8, 512, 64),
         _ => return None,
     })
+}
+
+/// The canonical CLI spellings [`by_name`] accepts — listed in
+/// unknown-network errors so `apu compile --net typo` tells the user
+/// what exists.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "lenet",
+        "alexnet",
+        "alexnet-nano",
+        "vgg19",
+        "vgg19-dense",
+        "resnet50",
+        "resnet50-dense",
+        "vgg-nano",
+        "mha",
+    ]
 }
 
 /// One Transformer multi-head-attention layer (paper §4.4.4): each head's
@@ -277,9 +332,32 @@ mod tests {
 
     #[test]
     fn by_name_covers_the_zoo() {
-        for name in ["lenet", "alexnet", "vgg19", "resnet50", "vgg-nano", "mha"] {
+        for name in ["lenet", "alexnet", "alexnet-nano", "vgg19", "resnet50", "vgg-nano", "mha"] {
             assert!(by_name(name).is_some(), "missing zoo entry {name}");
         }
         assert!(by_name("nope").is_none());
+        // the error-listing helper stays in sync with the lookup
+        for name in names() {
+            assert!(by_name(name).is_some(), "names() lists unknown entry {name}");
+        }
+    }
+
+    #[test]
+    fn alexnet_nano_geometry() {
+        let n = alexnet_nano();
+        let shapes = n.shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().flat(), 10);
+        // conv1's unrolled kernel exceeds the nano instance's 128-wide PE
+        let model = crate::compiler::CostModel::nano_4pe();
+        let d = crate::compiler::decide_layer(&model, &n.layers[0].kind, shapes[0], shapes[1]).unwrap();
+        assert_eq!(d.case, crate::compiler::MappingCase::ConvLarge);
+        assert!(!d.fits_one_pe(), "conv1 must tile across PEs ({}x{})", d.th, d.tw);
+        // fc1 sees the pooled 4×4×64 = 1024 plane (two 128-wide column
+        // tiles per 256-wide structured block)
+        let fc1 = n.layers.iter().position(|l| l.name == "fc1").unwrap();
+        assert_eq!(shapes[fc1].flat(), 1024);
+        // small enough to simulate quickly
+        let macs: u64 = n.macs().unwrap().iter().sum();
+        assert!(macs < 3_000_000, "alexnet-nano macs {macs}");
     }
 }

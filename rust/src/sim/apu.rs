@@ -9,6 +9,18 @@
 //! weight footprint exceeds the PE SRAM residency are *streamed*: their
 //! weight DMA is charged on every inference instead of once at load —
 //! exactly the effect that makes the paper's VGGFC6 speedup dip.
+//!
+//! ## Named partial-sum buffers (§4.4.3-II column tiles)
+//!
+//! A layer whose block/kernel exceeds one PE is tiled; each *column*
+//! tile produces partial sums for the same outputs. Wave scatters with
+//! `buf >= 1` land in named host buffers (with per-element ownership
+//! tracking, so a tile that writes an output twice or never is caught);
+//! the layer's `FoldAdd` host ops then fold each buffer into the
+//! committed stream at one add per element — runtime operands, not
+//! compile-time constants. Bias rides column tile 0 and ReLU/output
+//! quantization run as host ops after the last fold, so they apply
+//! exactly once.
 
 use anyhow::{bail, Context, Result};
 
@@ -99,6 +111,11 @@ pub struct Apu {
     /// Pending layer accumulation (wave scatters land here).
     pending: Vec<f32>,
     pending_owner: Vec<u16>,
+    /// Named runtime partial-sum buffers (§4.4.3-II column tiles):
+    /// scatters with `buf >= 1` land here until a `FoldAdd` host op
+    /// folds them into the activation stream. Values + per-element
+    /// owner PE (for exactly-once tracking).
+    partial: std::collections::BTreeMap<u16, (Vec<f32>, Vec<u16>)>,
     cur: Option<LayerCtx>,
 }
 
@@ -127,6 +144,7 @@ impl Apu {
             act_owner: Vec::new(),
             pending: Vec::new(),
             pending_owner: Vec::new(),
+            partial: std::collections::BTreeMap::new(),
             cur: None,
         }
     }
@@ -198,6 +216,7 @@ impl Apu {
         self.act_owner = vec![u16::MAX; input.len()];
         self.pending.clear();
         self.pending_owner.clear();
+        self.partial.clear();
         self.cur = None;
 
         for insn in &p.insns {
@@ -256,9 +275,9 @@ impl Apu {
                     self.route_phase(routes, *from_input)?;
                 }
                 Insn::Compute { rows } => self.compute_phase(*rows as usize)?,
-                Insn::Scatter { seg } => {
+                Insn::Scatter { seg, buf } => {
                     let perm = p.segment(*seg)?.as_u32()?;
-                    self.scatter_phase(perm)?;
+                    self.scatter_phase(perm, *buf)?;
                 }
                 Insn::HostOp { op, seg } => {
                     self.commit_pending();
@@ -275,6 +294,10 @@ impl Apu {
             }
         }
         self.commit_pending();
+        if !self.partial.is_empty() {
+            let ids: Vec<u16> = self.partial.keys().copied().collect();
+            bail!("program ended with unfolded partial buffer(s) {ids:?} (missing FoldAdd)");
+        }
         self.stats.inferences += 1;
         if self.acts.len() != p.dout {
             bail!("program produced {} outputs, expected {}", self.acts.len(), p.dout);
@@ -370,34 +393,49 @@ impl Apu {
         Ok(())
     }
 
-    /// Publish PE outputs into the pending layer buffer. Segment layout:
+    /// Publish PE outputs into a host output buffer. Segment layout:
     /// `[dout, perm...]` — `perm[g*bh + i]` is the global index of PE g's
-    /// row-i output. Zero extra cycles: outputs physically stay in the PE
-    /// output SRAMs (Fig. 5); this is compile-time knowledge.
-    fn scatter_phase(&mut self, seg: &[u32]) -> Result<()> {
+    /// row-i output. `buf = 0` targets the layer's pending buffer;
+    /// `buf >= 1` a named partial-sum buffer (§4.4.3-II column tiles)
+    /// that a later `FoldAdd` consumes. Zero extra cycles: outputs
+    /// physically stay in the PE output SRAMs (Fig. 5); this is
+    /// compile-time knowledge.
+    fn scatter_phase(&mut self, seg: &[u32], buf: u16) -> Result<()> {
         let ctx = self.cur.clone().context("Scatter before ConfigLayer")?;
         let (dout, perm) = seg.split_first().context("empty scatter segment")?;
         let dout = *dout as usize;
         if perm.len() != ctx.nb * ctx.bh {
             bail!("scatter perm len {} != {}x{}", perm.len(), ctx.nb, ctx.bh);
         }
-        if self.pending.is_empty() {
-            self.pending = vec![0f32; dout];
-            self.pending_owner = vec![u16::MAX; dout];
-        } else if self.pending.len() != dout {
-            bail!("wave scatter dout {dout} != pending {}", self.pending.len());
-        }
+        let (vals, owner) = if buf == 0 {
+            if self.pending.is_empty() {
+                self.pending = vec![0f32; dout];
+                self.pending_owner = vec![u16::MAX; dout];
+            } else if self.pending.len() != dout {
+                bail!("wave scatter dout {dout} != pending {}", self.pending.len());
+            }
+            (&mut self.pending, &mut self.pending_owner)
+        } else {
+            let entry = self
+                .partial
+                .entry(buf)
+                .or_insert_with(|| (vec![0f32; dout], vec![u16::MAX; dout]));
+            if entry.0.len() != dout {
+                bail!("wave scatter dout {dout} != partial buffer {buf} len {}", entry.0.len());
+            }
+            (&mut entry.0, &mut entry.1)
+        };
         for g in 0..ctx.nb {
             for i in 0..ctx.bh {
                 let global = perm[g * ctx.bh + i] as usize;
                 if global >= dout {
                     bail!("scatter index {global} out of range {dout}");
                 }
-                if self.pending_owner[global] != u16::MAX {
-                    bail!("scatter writes activation {global} twice");
+                if owner[global] != u16::MAX {
+                    bail!("scatter writes activation {global} twice (buffer {buf})");
                 }
-                self.pending[global] = self.pes[g].output(i).context("missing PE output")?;
-                self.pending_owner[global] = g as u16;
+                vals[global] = self.pes[g].output(i).context("missing PE output")?;
+                owner[global] = g as u16;
             }
         }
         Ok(())
@@ -429,22 +467,51 @@ impl Apu {
                 let (h, w, c, win, stride) =
                     (*h as usize, *w as usize, *c as usize, *win as usize, *stride as usize);
                 let out = host_maxpool(&self.acts, h, w, c, win, stride)?;
-                self.charge_host(out.len() * win * win);
+                // Per-element charging like every other host op: each
+                // output costs win² window loads plus win²−1 max-combines
+                // (the reduction seed is register init, not a charged
+                // op). The analytic model (`compiler::cost`) charges the
+                // identical figure; the integration tests assert it.
+                self.charge_host(out.len() * (2 * win * win - 1));
                 self.acts = out;
                 self.act_owner = vec![u16::MAX; self.acts.len()];
             }
             HostOpKind::FoldAdd => {
-                if params.len() != self.acts.len() {
-                    bail!("FoldAdd len {} != buffer {}", params.len(), self.acts.len());
+                // Runtime-operand fold (§4.4.3-II): params select which
+                // named partial buffer to fold; the operand values were
+                // scattered by this run's PE tile waves.
+                let &[src] = params else {
+                    bail!("FoldAdd params must be [src_buf]");
+                };
+                if !src.is_finite() || src.fract() != 0.0 || src < 1.0 || src > u16::MAX as f32 {
+                    bail!("FoldAdd buffer id {src} is not a valid partial buffer id");
                 }
-                for (v, p) in self.acts.iter_mut().zip(params) {
+                let (vals, owner) = self
+                    .partial
+                    .remove(&(src as u16))
+                    .with_context(|| format!("FoldAdd of missing partial buffer {src}"))?;
+                if vals.len() != self.acts.len() {
+                    bail!("FoldAdd buffer len {} != activation stream {}", vals.len(), self.acts.len());
+                }
+                if let Some(i) = owner.iter().position(|&o| o == u16::MAX) {
+                    bail!("FoldAdd of incomplete partial buffer {src} (element {i} never scattered)");
+                }
+                for (v, p) in self.acts.iter_mut().zip(&vals) {
                     *v += p;
                 }
-                self.charge_host(params.len());
+                self.charge_host(vals.len());
+                // Folded values live on the host core now: no PE owns them.
+                self.act_owner = vec![u16::MAX; self.acts.len()];
             }
             HostOpKind::Gather => {
                 let mut out = Vec::with_capacity(params.len());
                 for &idx in params {
+                    // A NaN or fractional index would silently truncate
+                    // (NaN casts to 0) and read the wrong element — fail
+                    // loudly instead.
+                    if !idx.is_finite() || idx.fract() != 0.0 {
+                        bail!("Gather index {idx} is not a finite integral value");
+                    }
                     // Negative index = implicit zero: the compiler uses
                     // this to materialize zero-padded conv input planes.
                     if idx < 0.0 {
@@ -650,6 +717,51 @@ mod tests {
         assert!(s1 > 0.0);
         apu.run(&input).unwrap();
         assert!((apu.stats().stream_pj - 2.0 * s1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gather_rejects_non_integral_and_nan_indices() {
+        let run_gather = |idx: Vec<f32>| -> Result<Vec<f32>> {
+            let dout = idx.len();
+            let mut p = Program { name: "g".into(), din: 2, dout, ..Default::default() };
+            let seg = p.push_data(DataSegment::F32(idx));
+            p.insns = vec![Insn::HostOp { op: HostOpKind::Gather, seg }, Insn::Halt];
+            let mut apu = Apu::new(ApuConfig::default());
+            apu.load(&p)?;
+            apu.run(&[3.0, 4.0])
+        };
+        // negative = implicit zero stays supported; integral reads work
+        assert_eq!(run_gather(vec![-1.0, 1.0]).unwrap(), vec![0.0, 4.0]);
+        // fractional / NaN / infinite indices must fail instead of
+        // silently truncating to the wrong element
+        assert!(run_gather(vec![0.5, 1.0]).is_err());
+        assert!(run_gather(vec![f32::NAN, 1.0]).is_err());
+        assert!(run_gather(vec![f32::INFINITY, 1.0]).is_err());
+    }
+
+    #[test]
+    fn maxpool_host_charge_counts_loads_and_combines() {
+        // 4×4×1 plane, 2×2 window stride 2 → 4 outputs, each charged
+        // win² loads + win²−1 max-combines = 7 host cycles.
+        let mut p = Program { name: "mp".into(), din: 16, dout: 4, ..Default::default() };
+        let seg = p.push_data(DataSegment::F32(vec![4.0, 4.0, 1.0, 2.0, 2.0]));
+        p.insns = vec![Insn::HostOp { op: HostOpKind::MaxPool, seg }, Insn::Halt];
+        let mut apu = Apu::new(ApuConfig::default());
+        apu.load(&p).unwrap();
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        apu.run(&x).unwrap();
+        assert_eq!(apu.stats().host_cycles, 4 * 7);
+    }
+
+    #[test]
+    fn foldadd_requires_an_existing_partial_buffer() {
+        let mut p = Program { name: "fa".into(), din: 2, dout: 2, ..Default::default() };
+        let seg = p.push_data(DataSegment::F32(vec![1.0]));
+        p.insns = vec![Insn::HostOp { op: HostOpKind::FoldAdd, seg }, Insn::Halt];
+        let mut apu = Apu::new(ApuConfig::default());
+        apu.load(&p).unwrap();
+        let err = apu.run(&[1.0, 2.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("missing partial buffer"), "{err:#}");
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! coordinator's latency/throughput accounting.
 
 /// Online summary of a stream of f64 observations.
+///
+/// Non-finite observations (a NaN latency from a bad clock, an ∞ from a
+/// zero-interval division) are counted in [`Summary::dropped`] and
+/// otherwise ignored: the serving path's SLO tables must survive bad
+/// samples, not abort a shard on them.
 #[derive(Debug, Clone)]
 pub struct Summary {
     n: u64,
@@ -12,6 +17,7 @@ pub struct Summary {
     max: f64,
     samples: Vec<f64>,
     sorted: bool,
+    dropped: u64,
 }
 
 impl Default for Summary {
@@ -32,10 +38,15 @@ impl Summary {
             max: f64::NEG_INFINITY,
             samples: Vec::new(),
             sorted: false,
+            dropped: 0,
         }
     }
 
     pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.dropped += 1;
+            return;
+        }
         self.n += 1;
         let d = x - self.mean;
         self.mean += d / self.n as f64;
@@ -48,6 +59,11 @@ impl Summary {
 
     pub fn count(&self) -> u64 {
         self.n
+    }
+
+    /// Non-finite observations rejected by [`Summary::add`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
     pub fn mean(&self) -> f64 {
@@ -75,13 +91,17 @@ impl Summary {
     }
 
     /// Percentile with linear interpolation on the retained sample.
+    /// Out-of-range `p` clamps to `[0, 100]` and a non-finite `p` yields
+    /// NaN — never a panic (this runs inside fleet SLO reporting).
     pub fn percentile(&mut self, p: f64) -> f64 {
-        assert!((0.0..=100.0).contains(&p));
-        if self.samples.is_empty() {
+        if !p.is_finite() || self.samples.is_empty() {
             return f64::NAN;
         }
+        let p = p.clamp(0.0, 100.0);
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: no partial_cmp unwrap to abort on (the samples
+            // are finite by construction, but stay panic-free anyway)
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
         let rank = (p / 100.0) * (self.samples.len() - 1) as f64;
@@ -114,6 +134,7 @@ impl Summary {
         for &x in &other.samples {
             self.add(x);
         }
+        self.dropped += other.dropped;
     }
 }
 
@@ -199,6 +220,37 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.median(), 8.0);
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped_not_propagated() {
+        let mut s = Summary::new();
+        for x in [1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.dropped(), 3);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert_eq!(s.median(), 2.0);
+        assert!(s.mean().is_finite());
+        // dropped counts survive a fleet-style merge
+        let mut whole = Summary::new();
+        whole.merge(&s);
+        assert_eq!(whole.count(), 3);
+        assert_eq!(whole.dropped(), 3);
+    }
+
+    #[test]
+    fn out_of_range_percentiles_clamp_instead_of_panicking() {
+        let mut s = Summary::new();
+        for i in 0..10 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.percentile(-5.0), 0.0);
+        assert_eq!(s.percentile(150.0), 9.0);
+        assert!(s.percentile(f64::NAN).is_nan());
+        assert!(s.percentile(f64::INFINITY).is_nan());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use apu::compiler::pipeline::{analyze, compile_network, PipelineOptions};
 use apu::compiler::{CostModel, MappingCase};
 use apu::coordinator::{ApuEngine, BatchPolicy, Engine, Fleet, FleetConfig};
+use apu::isa::artifact;
 use apu::isa::encode::{decode_stream, encode_stream};
 use apu::isa::Program;
 use apu::nn::graph::{Layer, LayerKind, Network, Shape};
@@ -157,11 +158,214 @@ fn fleet_serves_a_compiled_zoo_network() {
 }
 
 #[test]
+fn case_ii_conv_simulates_exactly_and_matches_the_cost_model() {
+    // §4.4.3-II: one ungrouped conv whose 144-column unrolled kernel
+    // exceeds the nano instance's 128-wide PE → two column tiles, the
+    // second folded into the stream by a runtime FoldAdd.
+    let net = Network {
+        name: "big-conv".into(),
+        input: Shape { h: 8, w: 8, c: 16 },
+        layers: vec![Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { cout: 32, kh: 3, kw: 3, stride: 1, groups: 1, padding: 1 },
+            relu: true,
+        }],
+    };
+    let model = CostModel::nano_4pe();
+    let compiled = compile_network(&net, &model, &PipelineOptions::default()).unwrap();
+    let d = compiled.decisions[0];
+    assert_eq!(d.case, MappingCase::ConvLarge);
+    assert!(!d.fits_one_pe(), "must tile: {}x{}", d.th, d.tw);
+    assert_eq!((d.th, d.tw), (1, 2));
+    // the pure-analysis path reports the identical decision
+    assert_eq!(analyze(&net, &model).unwrap().decisions, compiled.decisions);
+
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    let mut rng = Rng::new(77);
+    let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.normal()).collect();
+    let got = apu.run(&x).unwrap();
+    let want = compiled.reference_forward(&x).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-5, "output {i}: {g} vs {w}");
+    }
+    // 64 positions × 2 column tiles on 4 PEs → 32 waves × 32 rows.
+    assert_eq!(compiled.cost.layers[0].compute_cycles, 1024);
+    assert_eq!(apu.stats().compute_cycles, compiled.cost.layers[0].compute_cycles);
+    assert_eq!(apu.stats().macs, compiled.cost.total_macs());
+    // Host-cycle alignment: the analytic model charges the fold + the
+    // deferred ReLU (2048 outputs each, quantizer bypassed on the last
+    // layer); the sim additionally charges the ingress quantizer (din)
+    // and the padding gather (10×10×16 plane).
+    assert_eq!(compiled.cost.layers[0].host_cycles, 2048 + 2048);
+    assert_eq!(apu.stats().host_cycles, 1024 + 1600 + compiled.cost.layers[0].host_cycles);
+}
+
+#[test]
+fn tiled_fc_simulates_exactly_and_matches_the_cost_model() {
+    // A structured FC whose 16×256 blocks exceed the 64×128 PE along
+    // their columns: each block runs as two tiles, partial sums folded
+    // on the host, ReLU applied only after the fold.
+    let net = Network {
+        name: "big-fc".into(),
+        input: Shape { h: 1, w: 1, c: 1024 },
+        layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { dout: 64 }, relu: true }],
+    };
+    let model = CostModel::nano_4pe();
+    let compiled = compile_network(&net, &model, &PipelineOptions::default()).unwrap();
+    let d = compiled.decisions[0];
+    assert_eq!(d.case, MappingCase::FcStructured);
+    assert_eq!((d.th, d.tw), (1, 2));
+    assert_eq!(analyze(&net, &model).unwrap().decisions, compiled.decisions);
+
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.13).sin()).collect();
+    let got = apu.run(&x).unwrap();
+    let want = compiled.reference_forward(&x).unwrap();
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-5, "output {i}: {g} vs {w}");
+    }
+    // 4 blocks × 2 column tiles on 4 PEs → 2 waves × 16 rows.
+    assert_eq!(compiled.cost.layers[0].compute_cycles, 32);
+    assert_eq!(apu.stats().compute_cycles, compiled.cost.layers[0].compute_cycles);
+    assert_eq!(apu.stats().macs, compiled.cost.total_macs());
+    // Host-cycle alignment: fold (64) + deferred ReLU (64); the sim
+    // additionally charges the ingress quantizer (din = 1024).
+    assert_eq!(compiled.cost.layers[0].host_cycles, 64 + 64);
+    assert_eq!(apu.stats().host_cycles, 1024 + compiled.cost.layers[0].host_cycles);
+}
+
+#[test]
+fn alexnet_nano_executes_tiled_end_to_end() {
+    // The zoo's §4.4.3-II reference network: ConvLarge, a tiled group
+    // conv, a column-tiled structured FC, and a dense head, all through
+    // one program.
+    let model = CostModel::nano_4pe();
+    let compiled = compile_network(&zoo::alexnet_nano(), &model, &PipelineOptions::default()).unwrap();
+
+    // analyze and compile report identical mapping decisions per layer
+    let a = analyze(&zoo::alexnet_nano(), &model).unwrap();
+    assert_eq!(a.decisions, compiled.decisions);
+    assert_eq!(compiled.decisions[0].case, MappingCase::ConvLarge);
+    assert_eq!(compiled.decisions[2].case, MappingCase::ConvGroup);
+    assert!(!compiled.decisions[2].fits_one_pe(), "conv2 must tile");
+    assert_eq!(compiled.decisions[4].case, MappingCase::FcStructured);
+    assert_eq!(compiled.decisions[4].tw, 2);
+    assert_eq!(compiled.decisions[5].case, MappingCase::FcDense);
+
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    // the union of tile weights exceeds the nano PE SRAMs: the program
+    // streams weights per run (the AlexNet-flavored Fig. 15 dip)
+    assert!(apu.is_streamed());
+    let mut rng = Rng::new(123);
+    let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.normal()).collect();
+    let got = apu.run(&x).unwrap();
+    let want = compiled.reference_forward(&x).unwrap();
+    assert_eq!(got.len(), 10);
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-5, "output {i}: {g} vs {w}");
+    }
+    // every tiled geometry divides the machine evenly, so emitted waves
+    // match the analytic packing exactly
+    let model_compute: u64 = compiled.cost.layers.iter().map(|l| l.compute_cycles).sum();
+    assert_eq!(apu.stats().compute_cycles, model_compute);
+    assert_eq!(apu.stats().macs, compiled.cost.total_macs());
+}
+
+#[test]
+fn fleet_serves_the_tiled_zoo_network() {
+    // Acceptance path for case II: alexnet-nano behind the sharded
+    // fleet (`apu fleet --model zoo:alexnet-nano`), replies matching
+    // the functional reference.
+    let model = CostModel::nano_4pe();
+    let compiled = compile_network(&zoo::alexnet_nano(), &model, &PipelineOptions::default()).unwrap();
+    let din = compiled.program.din;
+    let mut rng = Rng::new(31337);
+    let inputs: Vec<Vec<f32>> = (0..6).map(|_| (0..din).map(|_| rng.normal()).collect()).collect();
+    let want: Vec<Vec<f32>> =
+        inputs.iter().map(|x| compiled.reference_forward(x).unwrap()).collect();
+
+    let config = FleetConfig {
+        shards: 2,
+        batch: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+        queue_cap: 32,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(config, move |_| {
+        Ok(Box::new(ApuEngine::from_compiled(&compiled)?) as Box<dyn Engine>)
+    })
+    .unwrap();
+    let receivers: Vec<_> = inputs.iter().map(|x| fleet.submit(x.clone()).unwrap()).collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let out = rx.recv().unwrap().output.unwrap();
+        for (j, (&g, &w)) in out.iter().zip(&want[i]).enumerate() {
+            assert!((g - w).abs() < 1e-5, "request {i} output {j}: {g} vs {w}");
+        }
+    }
+    let metrics = fleet.shutdown().unwrap();
+    assert_eq!(metrics.completed(), 6);
+    assert_eq!(metrics.failed(), 0);
+}
+
+#[test]
+fn tiled_program_roundtrips_v2_artifact_and_rejects_v1() {
+    let compiled = compile_network(&zoo::alexnet_nano(), &CostModel::nano_4pe(), &PipelineOptions::default())
+        .unwrap();
+    let bytes = artifact::to_bytes(&compiled.program);
+    assert_eq!(&bytes[..4], b"APU2");
+    let loaded = artifact::from_bytes(&bytes).unwrap();
+    assert_eq!(compiled.program.insns, loaded.insns);
+    assert_eq!(compiled.program.data, loaded.data);
+
+    // execution equivalence of the round-tripped tiled program
+    let model = &compiled.model;
+    let x: Vec<f32> = (0..compiled.program.din).map(|i| (i as f32 * 0.19).cos()).collect();
+    let mut a1 = Apu::new(model.apu_config());
+    let mut a2 = Apu::new(model.apu_config());
+    a1.load(&compiled.program).unwrap();
+    a2.load(&loaded).unwrap();
+    assert_eq!(a1.run(&x).unwrap(), a2.run(&x).unwrap());
+
+    // an old-version blob is refused with a clear error
+    let mut old = bytes.clone();
+    old[..4].copy_from_slice(b"APU1");
+    let msg = format!("{:#}", artifact::from_bytes(&old).unwrap_err());
+    assert!(msg.contains("unsupported artifact version"), "{msg}");
+}
+
+#[test]
+fn maxpool_host_charge_matches_the_cost_model() {
+    let net = Network {
+        name: "pool-only".into(),
+        input: Shape { h: 4, w: 4, c: 2 },
+        layers: vec![Layer {
+            name: "p".into(),
+            kind: LayerKind::MaxPool { window: 2, stride: 2 },
+            relu: false,
+        }],
+    };
+    let model = CostModel::nano_4pe();
+    let compiled = compile_network(&net, &model, &PipelineOptions::default()).unwrap();
+    // per output: win² loads + win²−1 max-combines
+    assert_eq!(compiled.cost.layers[0].host_cycles, 8 * 7);
+    let mut apu = Apu::new(model.apu_config());
+    apu.load(&compiled.program).unwrap();
+    let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.3).sin()).collect();
+    apu.run(&x).unwrap();
+    // the ingress quantizer charges din; the pool charges exactly the
+    // analytic figure
+    assert_eq!(apu.stats().host_cycles, 32 + compiled.cost.layers[0].host_cycles);
+}
+
+#[test]
 fn analysis_covers_the_full_zoo() {
     // Every zoo network flows through the passes + shared mapping, even
     // the ones whose emission is analytic-only.
     let model = CostModel::paper_9pe();
-    for name in ["lenet", "alexnet", "vgg19", "resnet50", "vgg-nano", "mha"] {
+    for name in ["lenet", "alexnet", "alexnet-nano", "vgg19", "resnet50", "vgg-nano", "mha"] {
         let net = zoo::by_name(name).unwrap();
         let a = analyze(&net, &model).unwrap();
         assert!(a.cost.total_cycles() > 0, "{name} costs nothing?");
