@@ -38,6 +38,7 @@ fn saturated_throughput(shards: usize, n: usize) -> f64 {
             policy: DispatchPolicy::JoinShortestQueue,
             batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
             queue_cap: usize::MAX, // scaling run: measure service, not admission
+            ..FleetConfig::default()
         },
         make_engine,
     )
@@ -82,6 +83,7 @@ fn main() {
                 policy,
                 batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
                 queue_cap: 32,
+                ..FleetConfig::default()
             },
             make_engine,
         )

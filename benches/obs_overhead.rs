@@ -1,0 +1,79 @@
+//! Bench: what does observability cost? Three layers, three price tags:
+//!
+//! 1. Metrics hot path — `Counter::inc` / `Histogram::observe` on a
+//!    pre-registered handle (the fleet's per-request cost) vs. going
+//!    through the registry lookup every time.
+//! 2. Trace recording — appending a completed span to a `Tracer`.
+//! 3. Simulator profiling — a full inference on the same machine with
+//!    and without `enable_profiling`, the number that decides whether
+//!    `apu profile` can be left on in CI.
+
+use apu::compiler::{compile_packed_layers, synthetic_packed_network};
+use apu::obs::{Registry, Tracer};
+use apu::sim::{Apu, ApuConfig};
+use apu::util::bench::{bench, budget};
+
+fn main() {
+    let b = budget();
+
+    // 1) Metrics hot path.
+    let reg = Registry::new();
+    let c = reg.counter("bench_ops_total", "bench counter", &[("lane", "hot")]);
+    let r = bench("counter.inc (pre-registered handle)", b, || c.inc());
+    println!("{}", r.report());
+    let r = bench("registry.counter lookup + inc", b, || {
+        reg.counter("bench_ops_total", "bench counter", &[("lane", "hot")]).inc()
+    });
+    println!("{}", r.report());
+    let h = reg.histogram(
+        "bench_latency_us",
+        "bench histogram",
+        &apu::obs::metrics::latency_buckets_us(),
+        &[],
+    );
+    let mut x = 0u64;
+    let r = bench("histogram.observe", b, || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        h.observe((x % 100_000) as f64)
+    });
+    println!("{}", r.report());
+
+    // 2) Trace recording (tracer swapped out periodically so the event
+    //    buffer doesn't grow without bound during the measurement).
+    let mut tracer = Tracer::new();
+    let r = bench("tracer.end_span", b, || {
+        if tracer.len() >= 100_000 {
+            tracer = Tracer::new();
+        }
+        tracer.end_span("op", "bench", 0, 0, 0.0, Vec::new());
+    });
+    println!("{}", r.report());
+
+    // 3) Profiled vs. unprofiled inference. Both lanes reset stats each
+    //    iteration (bounds the profile's record buffer; same work on
+    //    both sides so the delta is the mirroring cost alone).
+    let layers = synthetic_packed_network(&[64, 40, 12], 4, 4, 99).unwrap();
+    let program = compile_packed_layers("obs-bench", &layers, 0.15, 4, 4).unwrap();
+    let input: Vec<f32> = (0..64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+
+    let mut plain = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    plain.load(&program).unwrap();
+    let r_plain = bench("sim.run (profiling off)", b, || {
+        plain.reset_stats();
+        plain.run(&input).unwrap()
+    });
+    println!("{}", r_plain.report());
+
+    let mut profiled = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+    profiled.load(&program).unwrap();
+    profiled.enable_profiling();
+    let r_prof = bench("sim.run (profiling on)", b, || {
+        profiled.reset_stats();
+        profiled.run(&input).unwrap()
+    });
+    println!("{}", r_prof.report());
+    println!(
+        "profiling overhead: {:+.1}% per inference",
+        100.0 * (r_prof.mean_ns - r_plain.mean_ns) / r_plain.mean_ns
+    );
+}

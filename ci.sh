@@ -5,6 +5,9 @@ set -euo pipefail
 cargo build --release
 # Examples are part of the contract (ROADMAP demos); rot fails the build.
 cargo build --release --examples
+# Observability smoke: per-layer profile must check exactly against
+# SimStats (the command fails if the invariant breaks).
+./target/release/apu profile --net vgg-nano --machine nano
 cargo test -q
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings

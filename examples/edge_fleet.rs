@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
                 policy: DispatchPolicy::JoinShortestQueue,
                 batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
                 queue_cap: usize::MAX,
+                ..FleetConfig::default()
             },
             make_engine,
         )?;
@@ -72,6 +73,7 @@ fn main() -> anyhow::Result<()> {
                 policy,
                 batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
                 queue_cap: 16,
+                ..FleetConfig::default()
             },
             make_engine,
         )?;

@@ -1,0 +1,99 @@
+//! Observability tour: one tracer and one metrics registry watching all
+//! three layers of the stack.
+//!
+//! 1. The compiler records a span per pass while lowering a zoo network.
+//! 2. The simulator records a per-layer cycle/energy profile whose totals
+//!    are checked (exactly) against `SimStats`.
+//! 3. A small fleet serves the compiled network with a private registry;
+//!    at shutdown the SLO report is exported as gauges and the registry
+//!    is rendered in Prometheus text format.
+//!
+//! Self-contained (synthetic weights — no artifacts):
+//!
+//! ```bash
+//! cargo run --release --example observability
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use apu::compiler::{pipeline, CostModel, PipelineOptions};
+use apu::coordinator::{
+    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, SloReport, SyntheticLoad,
+};
+use apu::nn::zoo;
+use apu::obs::{Registry, Tracer};
+use apu::sim::Apu;
+use apu::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let net = zoo::vgg_nano();
+    let model = CostModel::nano_4pe();
+    let tracer = Tracer::new();
+
+    // 1) Compile with per-pass spans.
+    let opts = PipelineOptions { tracer: Some(tracer.clone()), ..Default::default() };
+    let compiled = pipeline::compile_network(&net, &model, &opts)?;
+    println!(
+        "== compiler: {} pass span(s) recorded while lowering {} ==",
+        tracer.len(),
+        net.name
+    );
+
+    // 2) Profiled simulation: every cycle and pJ attributed to a layer,
+    //    totals provably equal to the live stats.
+    let cfg = model.apu_config();
+    let clock_ghz = cfg.clock_ghz;
+    let mut sim = Apu::new(cfg);
+    sim.load(&compiled.program)?;
+    sim.enable_profiling();
+    let mut rng = Rng::new(0x0b5e);
+    for _ in 0..2 {
+        let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        sim.run(&x)?;
+    }
+    let stats = sim.stats().clone();
+    let profile = sim.take_profile().expect("profiling enabled");
+    profile.check_against(&stats)?;
+    let names: Vec<String> = compiled.cost.layers.iter().map(|l| l.name.clone()).collect();
+    println!("\n== simulator: per-layer profile (totals == SimStats, checked) ==");
+    print!("{}", profile.table(&names));
+
+    // 3) Fleet with a private registry (the CLI uses the global one).
+    let registry = Arc::new(Registry::new());
+    let din = compiled.program.din;
+    let fleet = Fleet::start(
+        FleetConfig {
+            shards: 2,
+            policy: DispatchPolicy::JoinShortestQueue,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+            queue_cap: 64,
+            metrics: registry.clone(),
+            tracer: Some(tracer.clone()),
+            ..FleetConfig::default()
+        },
+        move |_| Ok(Box::new(ApuEngine::from_compiled(&compiled)?) as Box<dyn Engine>),
+    )?;
+    let mut load = SyntheticLoad::new(1e6, 3);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..64).map(|_| fleet.submit(load.next_input(din)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let elapsed = t0.elapsed();
+    let fleet_metrics = fleet.shutdown()?;
+    SloReport::from_metrics(&fleet_metrics, elapsed).export(&registry);
+
+    println!("\n== fleet: Prometheus exposition (histogram buckets elided) ==");
+    for line in registry.render_prometheus().lines() {
+        if !line.contains("_bucket{") {
+            println!("{line}");
+        }
+    }
+    println!(
+        "\ntracer holds {} event(s) across compiler + fleet lanes; \
+         `apu profile --trace-out t.json` writes the merged Chrome trace.",
+        tracer.len()
+    );
+    Ok(())
+}

@@ -65,9 +65,11 @@ use crate::compiler::emit::{emit_fold_epilogue, emit_packed_fc, input_chunks};
 use crate::isa::{DataSegment, HostOpKind, Insn, Program};
 use crate::nn::graph::{LayerKind, Network};
 use crate::nn::passes::{normalize, LayerFate, Normalized};
+use crate::obs::trace::{Tracer, PID_COMPILER};
 use crate::pruning::{BlockStructure, PackedLayer, Quantizer};
 use crate::sched::{build_demand, schedule_routes};
 use crate::sim::host_maxpool;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Emission budget: total routed activation values across the program. A
@@ -83,11 +85,14 @@ pub struct PipelineOptions {
     pub seed: u64,
     /// Ingress quantizer scale (host `Quantize` op at program start).
     pub in_scale: f32,
+    /// When set, each pass (`normalize`, `decide_layer`, `compress`,
+    /// `emit`) records a span for Chrome trace-event export.
+    pub tracer: Option<Tracer>,
 }
 
 impl Default for PipelineOptions {
     fn default() -> Self {
-        PipelineOptions { seed: 7, in_scale: 0.5 }
+        PipelineOptions { seed: 7, in_scale: 0.5, tracer: None }
     }
 }
 
@@ -593,11 +598,27 @@ pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions)
     if opts.in_scale <= 0.0 {
         bail!("in_scale must be positive, got {}", opts.in_scale);
     }
+    let tr = opts.tracer.as_ref();
+    let pass_span = |name: &str, t0: Option<f64>, args: Vec<(String, Json)>| {
+        if let (Some(t), Some(t0)) = (tr, t0) {
+            t.end_span(name, "compiler", PID_COMPILER, 0, t0, args);
+        }
+    };
     // Pass 1: graph normalization.
+    let t0 = tr.map(|t| t.begin());
     let norm = normalize(net)?;
+    pass_span(
+        "normalize",
+        t0,
+        vec![
+            ("layers_in".into(), Json::Int(net.layers.len() as i64)),
+            ("layers_out".into(), Json::Int(norm.net.layers.len() as i64)),
+        ],
+    );
     // Pass 3 pre-flight (before materializing weights — an ImageNet-scale
     // network carries hundreds of MB of synthetic parameters): every
     // layer must be executable and the route schedule affordable.
+    let t0 = tr.map(|t| t.begin());
     let shapes = norm.net.shapes()?;
     let mut decisions = Vec::with_capacity(norm.net.layers.len());
     let mut items = 0u64;
@@ -622,14 +643,26 @@ pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions)
             net.name
         );
     }
-    // Pass 2: weights + numeric batch-norm fold.
+    pass_span(
+        "decide_layer",
+        t0,
+        vec![
+            ("layers".into(), Json::Int(decisions.len() as i64)),
+            ("route_items".into(), Json::Int(items as i64)),
+        ],
+    );
+    // Passes 2 + 4: weights + numeric batch-norm fold, then per-layer
+    // compression (structured pruning + INT-k quantization) onto the
+    // shared decisions.
+    let t0 = tr.map(|t| t.begin());
     let weights = NetworkWeights::synthetic(net, opts.seed)?.fold(&norm)?;
-    // Pass 4: compression + lowering onto the shared decisions.
     let lowered = lower_layers(&norm, &weights, &decisions, model, opts)?;
+    pass_span("compress", t0, vec![("layers".into(), Json::Int(lowered.len() as i64))]);
     // Pass 5: emission + the analytic view over the same decisions.
     // decide_layer is pure, so cost_network's internal decisions must
     // equal ours; verify rather than assume, so a future stateful
     // decision can't silently split the two paths.
+    let t0 = tr.map(|t| t.begin());
     let cost = cost_network(model, &norm.net)?;
     for (d, lc) in decisions.iter().zip(&cost.layers) {
         if d.case != lc.case {
@@ -644,6 +677,14 @@ pub fn compile_network(net: &Network, model: &CostModel, opts: &PipelineOptions)
         model,
         opts,
     )?;
+    pass_span(
+        "emit",
+        t0,
+        vec![
+            ("insns".into(), Json::Int(program.insns.len() as i64)),
+            ("data_segments".into(), Json::Int(program.data.len() as i64)),
+        ],
+    );
     Ok(CompiledNetwork {
         name: net.name.clone(),
         model: model.clone(),
@@ -1119,6 +1160,19 @@ mod tests {
         let mha = zoo::transformer_mha(4, 64, 8);
         assert!(compile_network(&mha, &model, &PipelineOptions::default()).is_err());
         assert!(analyze(&mha, &model).is_ok());
+    }
+
+    #[test]
+    fn tracer_records_one_span_per_pass() {
+        let tracer = Tracer::new();
+        let opts = PipelineOptions { tracer: Some(tracer.clone()), ..Default::default() };
+        let model = CostModel::nano_4pe();
+        compile_network(&zoo::vgg_nano(), &model, &opts).unwrap();
+        let events = tracer.events();
+        for want in ["normalize", "decide_layer", "compress", "emit"] {
+            let n = events.iter().filter(|e| e.name == want && e.cat == "compiler").count();
+            assert_eq!(n, 1, "expected exactly one {want} span");
+        }
     }
 
     #[test]

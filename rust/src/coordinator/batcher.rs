@@ -21,6 +21,16 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Why a batch was released (the batcher's two dials — observability
+/// counts these per shard to show which dial a workload is riding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The batch filled to `max_batch`.
+    Full,
+    /// The oldest request waited out `max_wait`.
+    Deadline,
+}
+
 /// A pending request in the queue.
 #[derive(Debug)]
 pub struct Pending<T> {
@@ -55,12 +65,19 @@ impl<T> Batcher<T> {
 
     /// Should a batch be released `now`?
     pub fn ready(&self, now: Instant) -> bool {
+        self.flush_reason(now).is_some()
+    }
+
+    /// Why a batch would be released `now` (`None`: not ready yet).
+    pub fn flush_reason(&self, now: Instant) -> Option<FlushReason> {
         if self.queue.len() >= self.policy.max_batch {
-            return true;
+            return Some(FlushReason::Full);
         }
         match self.queue.front() {
-            Some(p) => now.duration_since(p.enqueued) >= self.policy.max_wait,
-            None => false,
+            Some(p) if now.duration_since(p.enqueued) >= self.policy.max_wait => {
+                Some(FlushReason::Deadline)
+            }
+            _ => None,
         }
     }
 
@@ -125,6 +142,20 @@ mod tests {
         let first: Vec<i32> = b.take_batch().into_iter().map(|p| p.payload).collect();
         let second: Vec<i32> = b.take_batch().into_iter().map(|p| p.payload).collect();
         assert_eq!((first, second), (vec![0, 1], vec![2, 3]));
+    }
+
+    #[test]
+    fn flush_reason_distinguishes_full_from_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        assert_eq!(b.flush_reason(Instant::now()), None);
+        b.push(1);
+        assert_eq!(b.flush_reason(Instant::now()), None);
+        b.push(2);
+        assert_eq!(b.flush_reason(Instant::now()), Some(FlushReason::Full));
+        b.take_batch();
+        b.push(3);
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(b.flush_reason(Instant::now()), Some(FlushReason::Deadline));
     }
 
     #[test]

@@ -21,10 +21,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, FlushReason};
 use super::dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 use super::engine::Engine;
 use super::server::{Reply, ServeError, ServerMetrics};
+use crate::obs::metrics::{self, Counter, Gauge, Histogram, Registry};
+use crate::obs::trace::{Tracer, PID_FLEET};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One inference request riding through a shard worker.
@@ -32,6 +35,15 @@ pub(super) struct Request {
     pub(super) input: Vec<f32>,
     pub(super) submitted: Instant,
     pub(super) reply: mpsc::Sender<Reply>,
+    /// Lifecycle trace context (present when the fleet has a tracer).
+    pub(super) trace: Option<ReqTrace>,
+}
+
+/// Per-request lifecycle timestamps, µs on the fleet tracer's clock.
+pub(super) struct ReqTrace {
+    pub(super) id: u64,
+    pub(super) enqueue_us: f64,
+    pub(super) dequeue_us: Option<f64>,
 }
 
 /// Fleet sizing and policy knobs.
@@ -46,6 +58,14 @@ pub struct FleetConfig {
     /// Per-shard bound on admitted-but-unbatched requests; a submit that
     /// lands on a shard at this depth is rejected, not buffered.
     pub queue_cap: usize,
+    /// Metrics registry the shards register their counters/histograms
+    /// into (defaults to the process-global registry; tests pass private
+    /// ones).
+    pub metrics: Arc<Registry>,
+    /// When set, every request records its
+    /// enqueue→dequeue→batch-assembly→engine-run→reply lifecycle as
+    /// Chrome trace spans on this tracer.
+    pub tracer: Option<Tracer>,
 }
 
 impl Default for FleetConfig {
@@ -55,6 +75,8 @@ impl Default for FleetConfig {
             policy: DispatchPolicy::JoinShortestQueue,
             batch: BatchPolicy::default(),
             queue_cap: 256,
+            metrics: metrics::global(),
+            tracer: None,
         }
     }
 }
@@ -86,9 +108,88 @@ impl ShardState {
     }
 }
 
+/// One shard's handles into the metrics registry. Registered once at
+/// fleet start; the worker thread and the submit path clone the handles
+/// and update lock-free.
+#[derive(Clone)]
+pub(super) struct ShardInstruments {
+    pub(super) enqueued: Counter,
+    pub(super) completed: Counter,
+    pub(super) engine_errors: Counter,
+    pub(super) rejected: Counter,
+    pub(super) queue_depth: Gauge,
+    pub(super) latency_us: Histogram,
+    pub(super) batch_size: Histogram,
+    pub(super) full_flushes: Counter,
+    pub(super) deadline_flushes: Counter,
+    pub(super) drain_flushes: Counter,
+}
+
+impl ShardInstruments {
+    pub(super) fn register(reg: &Registry, shard: usize) -> ShardInstruments {
+        let s = shard.to_string();
+        let l: &[(&str, &str)] = &[("shard", s.as_str())];
+        ShardInstruments {
+            enqueued: reg.counter(
+                "apu_fleet_enqueued_total",
+                "requests admitted past admission control",
+                l,
+            ),
+            completed: reg.counter(
+                "apu_fleet_completed_total",
+                "requests answered successfully",
+                l,
+            ),
+            engine_errors: reg.counter(
+                "apu_fleet_engine_errors_total",
+                "requests answered with an engine error",
+                l,
+            ),
+            rejected: reg.counter(
+                "apu_fleet_rejected_total",
+                "requests refused by admission control",
+                l,
+            ),
+            queue_depth: reg.gauge(
+                "apu_fleet_queue_depth",
+                "admitted-but-unbatched requests at batch release",
+                l,
+            ),
+            latency_us: reg.histogram(
+                "apu_fleet_request_latency_us",
+                "submit-to-reply latency, microseconds",
+                &metrics::latency_buckets_us(),
+                l,
+            ),
+            batch_size: reg.histogram(
+                "apu_fleet_batch_size",
+                "requests per released batch",
+                &metrics::batch_buckets(),
+                l,
+            ),
+            full_flushes: reg.counter(
+                "apu_fleet_batch_full_flush_total",
+                "batches released because they filled",
+                l,
+            ),
+            deadline_flushes: reg.counter(
+                "apu_fleet_batch_deadline_flush_total",
+                "batches released by the batching deadline",
+                l,
+            ),
+            drain_flushes: reg.counter(
+                "apu_fleet_batch_drain_flush_total",
+                "batches released by the shutdown drain",
+                l,
+            ),
+        }
+    }
+}
+
 struct Shard {
     tx: Option<mpsc::Sender<Request>>,
     state: Arc<ShardState>,
+    ins: ShardInstruments,
     worker: Option<JoinHandle<ServerMetrics>>,
 }
 
@@ -199,6 +300,9 @@ impl Fleet {
             let factory = Arc::clone(&factory);
             let batch = config.batch.clone();
             let worker_state = Arc::clone(&state);
+            let ins = ShardInstruments::register(&config.metrics, id);
+            let worker_ins = ins.clone();
+            let tracer = config.tracer.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("apu-shard-{id}"))
                 .spawn(move || {
@@ -213,12 +317,13 @@ impl Fleet {
                             return ServerMetrics::default();
                         }
                     };
-                    let metrics = serve_loop(id, engine, batch, rx, &worker_state);
+                    let tr = tracer.as_ref();
+                    let metrics = serve_loop(id, engine, batch, rx, &worker_state, &worker_ins, tr);
                     worker_state.alive.store(false, Ordering::Relaxed);
                     metrics
                 })
                 .with_context(|| format!("spawning shard {id}"))?;
-            shards.push(Shard { tx: Some(tx), state, worker: Some(worker) });
+            shards.push(Shard { tx: Some(tx), state, ins, worker: Some(worker) });
             ready.push(ready_rx);
         }
         let mut dead = Vec::new();
@@ -268,6 +373,9 @@ impl Fleet {
         loop {
             if depth >= cap {
                 state.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shards[i].ins.rejected.inc();
+                // The rejection carries shard id and observed queue depth
+                // so callers can log actionable admission-control context.
                 return Err(SubmitError::Rejected { shard: i, depth, cap });
             }
             match state.queued.compare_exchange_weak(
@@ -282,11 +390,19 @@ impl Fleet {
         }
         state.outstanding.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        let req = Request { input, submitted: Instant::now(), reply: rtx };
+        let trace = self
+            .config
+            .tracer
+            .as_ref()
+            .map(|t| ReqTrace { id: t.next_id(), enqueue_us: t.now_us(), dequeue_us: None });
+        let req = Request { input, submitted: Instant::now(), reply: rtx, trace };
         let sent = match self.shards[i].tx.as_ref() {
             Some(tx) => tx.send(req).is_ok(),
             None => false,
         };
+        if sent {
+            self.shards[i].ins.enqueued.inc();
+        }
         if !sent {
             // Worker exited underneath us: roll the reservation back and
             // surface unavailability instead of hanging the caller.
@@ -333,6 +449,55 @@ impl Drop for Fleet {
     }
 }
 
+/// Stamp the dequeue timestamp the moment the worker pulls a request off
+/// its channel.
+fn mark_dequeue(mut r: Request, tracer: Option<&Tracer>) -> Request {
+    if let Some(tr) = tracer {
+        if let Some(t) = r.trace.as_mut() {
+            t.dequeue_us = Some(tr.now_us());
+        }
+    }
+    r
+}
+
+/// Record one request's whole-lifecycle span (enqueue → reply), with the
+/// intermediate timestamps in `args` for the trace viewer's detail pane.
+#[allow(clippy::too_many_arguments)]
+fn record_request_span(
+    tracer: &Tracer,
+    shard: usize,
+    req: &Request,
+    ok: bool,
+    batch_size: usize,
+    assembly_us: f64,
+    engine_start_us: f64,
+    engine_end_us: f64,
+) {
+    let Some(t) = req.trace.as_ref() else {
+        return;
+    };
+    let reply_us = tracer.now_us();
+    tracer.span(
+        "request",
+        "fleet",
+        PID_FLEET,
+        shard as u64,
+        t.enqueue_us,
+        (reply_us - t.enqueue_us).max(0.0),
+        vec![
+            ("req".to_string(), Json::Int(t.id as i64)),
+            ("ok".to_string(), Json::Bool(ok)),
+            ("batch".to_string(), Json::Int(batch_size as i64)),
+            ("enqueue_us".to_string(), Json::num(t.enqueue_us)),
+            ("dequeue_us".to_string(), t.dequeue_us.map(Json::num).unwrap_or(Json::Null)),
+            ("assembly_us".to_string(), Json::num(assembly_us)),
+            ("engine_start_us".to_string(), Json::num(engine_start_us)),
+            ("engine_end_us".to_string(), Json::num(engine_end_us)),
+            ("reply_us".to_string(), Json::num(reply_us)),
+        ],
+    );
+}
+
 /// The shard worker: drain the channel into the batcher, release batches
 /// by the batching policy, run the engine, reply per request. Shared by
 /// the fleet shards and the single-engine `Server` (its 1-shard case).
@@ -342,6 +507,8 @@ pub(super) fn serve_loop(
     policy: BatchPolicy,
     rx: mpsc::Receiver<Request>,
     state: &ShardState,
+    ins: &ShardInstruments,
+    tracer: Option<&Tracer>,
 ) -> ServerMetrics {
     let mut metrics = ServerMetrics::default();
     let mut batcher: Batcher<Request> = Batcher::new(policy);
@@ -351,7 +518,7 @@ pub(super) fn serve_loop(
         // drain whatever is already queued.
         if batcher.is_empty() && open {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(r) => batcher.push(r),
+                Ok(r) => batcher.push(mark_dequeue(r, tracer)),
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     open = false;
@@ -361,7 +528,7 @@ pub(super) fn serve_loop(
         }
         loop {
             match rx.try_recv() {
-                Ok(r) => batcher.push(r),
+                Ok(r) => batcher.push(mark_dequeue(r, tracer)),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     open = false;
@@ -374,7 +541,7 @@ pub(super) fn serve_loop(
             if let Some(d) = batcher.next_deadline(now) {
                 // Wait out the batching window (or a new arrival).
                 match rx.recv_timeout(d.min(Duration::from_millis(5))) {
-                    Ok(r) => batcher.push(r),
+                    Ok(r) => batcher.push(mark_dequeue(r, tracer)),
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                 }
@@ -382,22 +549,50 @@ pub(super) fn serve_loop(
             }
             continue;
         }
+        let reason = batcher.flush_reason(now);
         let batch = batcher.take_batch();
         if batch.is_empty() {
             continue;
         }
+        // `None` here means the loop fell through the `open` check: the
+        // channel closed and the remainder is being drained at shutdown.
+        match reason {
+            Some(FlushReason::Full) => ins.full_flushes.inc(),
+            Some(FlushReason::Deadline) => ins.deadline_flushes.inc(),
+            None => ins.drain_flushes.inc(),
+        }
+        let assembly_us = tracer.map(|t| t.now_us()).unwrap_or(0.0);
         // Depth at release time (the batch members are still counted —
         // the decrement below is what frees their admission slots).
-        metrics.queue_depth.add(state.queued.load(Ordering::Relaxed) as f64);
+        let depth = state.queued.load(Ordering::Relaxed);
+        metrics.queue_depth.add(depth as f64);
+        ins.queue_depth.set(depth as f64);
         state.queued.fetch_sub(batch.len(), Ordering::Relaxed);
         let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.input.clone()).collect();
         let t0 = Instant::now();
+        let engine_start_us = tracer.map(|t| t.now_us()).unwrap_or(0.0);
         let result = engine.infer_batch(&inputs);
         let engine_time = t0.elapsed();
+        let engine_end_us = tracer.map(|t| t.now_us()).unwrap_or(0.0);
         metrics.engine_us.add(engine_time.as_secs_f64() * 1e6);
         metrics.batches += 1;
         metrics.batch_sizes.add(batch.len() as f64);
+        ins.batch_size.observe(batch.len() as f64);
         let batch_size = batch.len();
+        if let Some(tr) = tracer {
+            tr.span(
+                "engine-run",
+                "fleet",
+                PID_FLEET,
+                shard as u64,
+                engine_start_us,
+                engine_time.as_secs_f64() * 1e6,
+                vec![
+                    ("shard".to_string(), Json::Int(shard as i64)),
+                    ("batch".to_string(), Json::Int(batch_size as i64)),
+                ],
+            );
+        }
         let done = Instant::now();
         match result {
             Ok(outputs) => {
@@ -405,7 +600,21 @@ pub(super) fn serve_loop(
                     let latency = done.duration_since(pending.payload.submitted);
                     metrics.completed += 1;
                     metrics.latency_us.add(latency.as_secs_f64() * 1e6);
+                    ins.completed.inc();
+                    ins.latency_us.observe(latency.as_secs_f64() * 1e6);
                     state.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(tr) = tracer {
+                        record_request_span(
+                            tr,
+                            shard,
+                            &pending.payload,
+                            true,
+                            batch_size,
+                            assembly_us,
+                            engine_start_us,
+                            engine_end_us,
+                        );
+                    }
                     let _ = pending.payload.reply.send(Reply {
                         output: Ok(output),
                         latency,
@@ -417,12 +626,26 @@ pub(super) fn serve_loop(
             Err(e) => {
                 // A failed batch must not strand its callers: every
                 // request gets an explicit error reply, and the failure
-                // is counted instead of silently dropped.
+                // is counted and logged instead of silently dropped.
                 let msg = format!("{e:#}");
                 metrics.failed += batch_size as u64;
+                ins.engine_errors.add(batch_size as u64);
+                eprintln!("shard {shard}: engine error on batch of {batch_size}: {msg}");
                 for pending in batch {
                     let latency = done.duration_since(pending.payload.submitted);
                     state.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(tr) = tracer {
+                        record_request_span(
+                            tr,
+                            shard,
+                            &pending.payload,
+                            false,
+                            batch_size,
+                            assembly_us,
+                            engine_start_us,
+                            engine_end_us,
+                        );
+                    }
                     let _ = pending.payload.reply.send(Reply {
                         output: Err(ServeError::Engine(msg.clone())),
                         latency,
@@ -458,6 +681,9 @@ mod tests {
             policy,
             batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
             queue_cap: cap,
+            // private registry: unit tests must not race on the global one
+            metrics: Arc::new(Registry::new()),
+            ..FleetConfig::default()
         }
     }
 
@@ -509,6 +735,8 @@ mod tests {
                 policy: DispatchPolicy::JoinShortestQueue,
                 batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
                 queue_cap: cap,
+                metrics: Arc::new(Registry::new()),
+                ..FleetConfig::default()
             },
             move |_| Ok(Box::new(Stalled(gate.lock().unwrap().take().unwrap())) as Box<dyn Engine>),
         )
@@ -563,12 +791,15 @@ mod tests {
                 Ok(inputs.to_vec())
             }
         }
+        let reg = Arc::new(Registry::new());
         let fleet = Fleet::start(
             FleetConfig {
                 shards: 1,
                 policy: DispatchPolicy::RoundRobin,
                 batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
                 queue_cap: 1024,
+                metrics: Arc::clone(&reg),
+                ..FleetConfig::default()
             },
             |_| Ok(Box::new(Flaky(0)) as Box<dyn Engine>),
         )
@@ -591,6 +822,11 @@ mod tests {
         let m = fleet.shutdown().unwrap();
         assert_eq!(m.completed(), ok as u64);
         assert_eq!(m.failed(), failed as u64);
+        // the registry's view must agree with the dispatcher accounting
+        assert_eq!(reg.counter_total("apu_fleet_engine_errors_total"), failed as u64);
+        assert_eq!(reg.counter_total("apu_fleet_completed_total"), ok as u64);
+        assert_eq!(reg.counter_total("apu_fleet_enqueued_total"), n as u64);
+        assert_eq!(reg.counter_total("apu_fleet_rejected_total"), 0);
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //! per-shard queues (admission control) and [`slo`] reporting
 //! (p50/p95/p99, queue depth, rejection rate). The single-engine
 //! [`Server`] is the 1-shard special case of the fleet.
+//!
+//! Every shard also registers per-shard counters/gauges/histograms in a
+//! [`crate::obs::metrics::Registry`] (the process-global one by default;
+//! inject a private registry through [`FleetConfig::metrics`] for tests),
+//! and — when [`FleetConfig::tracer`] is set — records per-request spans
+//! (enqueue → dequeue → batch assembly → engine run → reply) plus one
+//! "engine-run" span per batch into a [`crate::obs::trace::Tracer`] for
+//! Chrome trace-event export.
 
 pub mod batcher;
 pub mod dispatch;
@@ -20,7 +28,7 @@ pub mod fleet;
 pub mod server;
 pub mod slo;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, FlushReason};
 pub use dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 pub use engine::{ApuEngine, Engine, GoldenEngine};
 pub use fleet::{Fleet, FleetConfig, FleetMetrics, SubmitError};

@@ -103,6 +103,7 @@ impl Server {
                 policy: DispatchPolicy::RoundRobin,
                 batch: policy,
                 queue_cap: usize::MAX,
+                ..FleetConfig::default()
             },
             move |_shard| {
                 let f = cell.lock().unwrap().take().context("single-shard factory reused")?;

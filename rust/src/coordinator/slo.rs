@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use super::fleet::FleetMetrics;
 use super::server::ServerMetrics;
+use crate::obs::metrics::Registry;
 use crate::util::table::Table;
 
 /// One row of SLO numbers (a shard, or the whole fleet).
@@ -93,6 +94,39 @@ impl SloReport {
             dead: m.dead.clone(),
             elapsed,
             throughput_rps: m.throughput_rps(elapsed),
+        }
+    }
+
+    /// Export the report as `apu_slo_*` gauges (one series per shard
+    /// plus a `shard="fleet"` aggregate) so percentiles and rejection
+    /// rates ride the same registry dump as the live shard counters.
+    /// Shards with no completed requests are skipped — their
+    /// percentiles are undefined, and a NaN gauge would poison the
+    /// Prometheus exposition.
+    pub fn export(&self, reg: &Registry) {
+        let mut rows: Vec<(String, &SloSnapshot)> =
+            self.per_shard.iter().enumerate().map(|(i, s)| (i.to_string(), s)).collect();
+        rows.push(("fleet".to_string(), &self.fleet));
+        for (label, s) in rows {
+            if s.completed == 0 {
+                continue;
+            }
+            let l: &[(&str, &str)] = &[("shard", label.as_str())];
+            for (name, help, v) in [
+                ("apu_slo_p50_us", "latency p50 over the run, microseconds", s.p50_us),
+                ("apu_slo_p95_us", "latency p95 over the run, microseconds", s.p95_us),
+                ("apu_slo_p99_us", "latency p99 over the run, microseconds", s.p99_us),
+                ("apu_slo_mean_us", "mean latency over the run, microseconds", s.mean_us),
+                ("apu_slo_rejection_rate", "rejected / all arrivals", s.rejection_rate()),
+            ] {
+                if v.is_finite() {
+                    reg.gauge(name, help, l).set(v);
+                }
+            }
+        }
+        if self.throughput_rps.is_finite() {
+            reg.gauge("apu_slo_throughput_rps", "completed requests per second", &[])
+                .set(self.throughput_rps);
         }
     }
 
@@ -187,6 +221,26 @@ mod tests {
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         // 60 completed + 20 failed + 20 rejected → 20% rejected
         assert!((r.fleet.rejection_rate() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn export_writes_gauges_and_skips_empty_shards() {
+        let fm = FleetMetrics {
+            shards: vec![shard_metrics(&[100.0, 200.0, 300.0], 0, 1), ServerMetrics::default()],
+            dead: vec![],
+            policy: DispatchPolicy::RoundRobin,
+        };
+        let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
+        let reg = Registry::new();
+        r.export(&reg);
+        let p50 = reg.gauge_value("apu_slo_p50_us", &[("shard", "0")]).unwrap();
+        assert!((p50 - 200.0).abs() < 1e-9);
+        assert!(reg.gauge_value("apu_slo_p50_us", &[("shard", "fleet")]).is_some());
+        // the idle shard has no latency stream → no series for it
+        assert!(reg.gauge_value("apu_slo_p50_us", &[("shard", "1")]).is_none());
+        assert!(reg.gauge_value("apu_slo_throughput_rps", &[]).unwrap() > 0.0);
+        let rate = reg.gauge_value("apu_slo_rejection_rate", &[("shard", "0")]).unwrap();
+        assert!((rate - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod generator;
 pub mod hwmodel;
 pub mod isa;
 pub mod nn;
+pub mod obs;
 pub mod pruning;
 pub mod routing;
 pub mod runtime;

@@ -6,9 +6,12 @@
 //!               [--machine paper|nano] [--seed S] [--out FILE] [--emit-asm]
 //!               [--pes N] [--artifacts DIR]
 //! apu simulate  [--pes N] [--n N] [--artifacts DIR]
+//! apu profile   [--net <zoo>] [--machine paper|nano] [--seed S] [--runs N]
+//!               [--trace-out FILE]
 //! apu serve     [--engine sim|golden] [--requests N] [--rate RPS] [--batch B]
 //! apu fleet     [--shards N] [--policy rr|lo|jsq] [--requests N] [--rate RPS]
 //!               [--batch B] [--queue-cap Q] [--model synthetic|artifact|zoo:<name>]
+//!               [--metrics-out FILE] [--trace-out FILE]
 //! apu dse       [--sweep block|precision]
 //! apu netlist   [--pes N] [--block S] [--bits B]
 //! ```
@@ -25,10 +28,13 @@ use apu::coordinator::{
 };
 use apu::figures;
 use apu::generator::{DesignInstance, GeneratorConfig};
+use apu::obs::metrics;
+use apu::obs::trace::Tracer;
 use apu::runtime::Manifest;
 use apu::sim::{Apu, ApuConfig};
 use apu::util::bundle::Bundle;
 use apu::util::cli::{parse, usage, Opt};
+use apu::util::rng::Rng;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +51,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "figures" => cmd_figures(rest),
         "compile" => cmd_compile(rest),
         "simulate" => cmd_simulate(rest),
+        "profile" => cmd_profile(rest),
         "serve" => cmd_serve(rest),
         "fleet" => cmd_fleet(rest),
         "dse" => cmd_dse(rest),
@@ -56,6 +63,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                  \x20 figures <id|all>   regenerate paper tables/figures\n\
                  \x20 compile            compile a network (zoo or trained artifact) to an APU program\n\
                  \x20 simulate           run the cycle-accurate simulator on the test vectors\n\
+                 \x20 profile            per-layer cycle/energy breakdown of a zoo network\n\
                  \x20 serve              run the edge-serving coordinator demo\n\
                  \x20 fleet              run the sharded multi-engine serving fleet\n\
                  \x20 dse                design-space exploration sweeps (Figs. 10/11)\n\
@@ -265,9 +273,79 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     println!(
         "  energy/inference  {:.1} nJ  |  effective {:.2} GOPS @1GHz, {:.1} TOPS/W (datapath)",
         st.total_pj() / n as f64 / 1000.0,
-        st.normalized_ops() / n as f64 / (st.total_cycles() as f64 / n as f64),
-        st.normalized_ops() / st.total_pj()
+        st.effective_gops(1.0),
+        st.tops_per_watt()
     );
+    Ok(())
+}
+
+fn cmd_profile(argv: &[String]) -> Result<()> {
+    let opts = vec![
+        Opt { name: "net", default: Some("vgg-nano"), help: "zoo network (e.g. vgg-nano, alexnet-nano)" },
+        Opt { name: "machine", default: Some("nano"), help: "mapping target: paper (9×513×513) | nano (4×64×128)" },
+        Opt { name: "seed", default: Some("7"), help: "synthetic weight seed" },
+        Opt { name: "runs", default: Some("2"), help: "inferences to profile" },
+        Opt { name: "trace-out", default: Some(""), help: "write a Chrome trace-event JSON (compiler passes + sim phases)" },
+    ];
+    let args = parse(argv, &opts)?;
+    if args.has_flag("help") {
+        println!("{}", usage("profile", "Per-layer cycle/energy breakdown of a zoo network", &opts));
+        return Ok(());
+    }
+    let net_name = args.get("net").unwrap().to_string();
+    let net = apu::nn::zoo::by_name(&net_name).with_context(|| {
+        format!("unknown zoo network {net_name} (available: {})", apu::nn::zoo::names().join(", "))
+    })?;
+    let model = match args.get("machine").unwrap() {
+        "paper" => CostModel::paper_9pe(),
+        "nano" => CostModel::nano_4pe(),
+        other => bail!("unknown --machine {other} (want paper | nano)"),
+    };
+    let runs = args.get_usize("runs")?.max(1);
+    let trace_out = args.get("trace-out").unwrap().to_string();
+
+    let tracer = Tracer::new();
+    let popts = PipelineOptions {
+        seed: args.get_usize("seed")? as u64,
+        tracer: Some(tracer.clone()),
+        ..Default::default()
+    };
+    let compiled = pipeline::compile_network(&net, &model, &popts)?;
+    let cfg = model.apu_config();
+    let clock_ghz = cfg.clock_ghz;
+    let mut sim = Apu::new(cfg);
+    sim.load(&compiled.program)?;
+    sim.enable_profiling();
+    let mut rng = Rng::new(popts.seed ^ 0xda7a);
+    for _ in 0..runs {
+        let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        sim.run(&x)?;
+    }
+    let st = sim.stats().clone();
+    let profile = sim.take_profile().context("profiling was enabled but no profile recorded")?;
+    // The profiler's invariant, enforced rather than assumed: its
+    // per-phase records sum to exactly the figures SimStats reports.
+    profile.check_against(&st)?;
+
+    let names: Vec<String> = compiled.cost.layers.iter().map(|l| l.name.clone()).collect();
+    println!(
+        "{} on {} PEs of {}×{} @ INT{} — {runs} inference(s), profile == SimStats (checked):",
+        net.name, model.n_pes, model.pe_h, model.pe_w, model.bits
+    );
+    print!("{}", profile.table(&names));
+    println!(
+        "effective {:.2} GOPS @{:.1}GHz, {:.2} TOPS/W (datapath)",
+        st.effective_gops(clock_ghz),
+        clock_ghz,
+        st.tops_per_watt()
+    );
+    if !trace_out.is_empty() {
+        // One file, two lanes: compiler passes (wall clock) and the
+        // simulator's cycle timeline mapped through the clock.
+        tracer.extend(profile.trace_events(clock_ghz));
+        tracer.write_chrome_trace(&trace_out)?;
+        println!("wrote Chrome trace to {trace_out} (open via chrome://tracing or Perfetto)");
+    }
     Ok(())
 }
 
@@ -346,6 +424,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact | zoo:<name> (e.g. zoo:vgg-nano, zoo:alexnet-nano)" },
         Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
         Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
+        Opt {
+            name: "metrics-out",
+            default: Some(""),
+            help: "dump the metrics registry at shutdown (.json = JSON, else Prometheus text)",
+        },
+        Opt { name: "trace-out", default: Some(""), help: "write per-request spans as Chrome trace-event JSON" },
     ];
     let args = parse(argv, &opts)?;
     if args.has_flag("help") {
@@ -357,6 +441,10 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         .context("unknown --policy (want rr | lo | jsq)")?;
     let n = args.get_usize("requests")?;
     let rate = args.get_f64("rate")?;
+    let metrics_out = args.get("metrics-out").unwrap().to_string();
+    let trace_out = args.get("trace-out").unwrap().to_string();
+    let registry = metrics::global();
+    let tracer = (!trace_out.is_empty()).then(Tracer::new);
     let config = FleetConfig {
         shards,
         policy,
@@ -365,6 +453,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             max_wait: std::time::Duration::from_millis(2),
         },
         queue_cap: args.get_usize("queue-cap")?,
+        metrics: registry.clone(),
+        tracer: tracer.clone(),
     };
     let n_pes = args.get_usize("pes")?;
     let (din, fleet) = match args.get("model").unwrap() {
@@ -434,10 +524,29 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         rx.recv()?;
     }
     let elapsed = t0.elapsed();
-    let metrics = fleet.shutdown()?;
-    println!("{}", SloReport::from_metrics(&metrics, elapsed).render());
+    let fleet_metrics = fleet.shutdown()?;
+    let report = SloReport::from_metrics(&fleet_metrics, elapsed);
+    println!("{}", report.render());
     if rejected_at_submit > 0 {
         println!("({rejected_at_submit} of {n} arrivals rejected by admission control)");
+    }
+    if !metrics_out.is_empty() {
+        // Fold the end-of-run SLO gauges into the same dump as the live
+        // shard counters, then export in the format the path implies.
+        report.export(&registry);
+        let body = if metrics_out.ends_with(".json") {
+            registry.to_json().pretty()
+        } else {
+            registry.render_prometheus()
+        };
+        std::fs::write(&metrics_out, body)
+            .with_context(|| format!("writing metrics to {metrics_out}"))?;
+        println!("wrote metrics to {metrics_out}");
+    }
+    if let Some(t) = tracer {
+        t.write_chrome_trace(&trace_out)
+            .with_context(|| format!("writing trace to {trace_out}"))?;
+        println!("wrote Chrome trace to {trace_out} ({} spans)", t.len());
     }
     Ok(())
 }

@@ -1,0 +1,563 @@
+//! Process-wide metrics registry: counters, gauges, and fixed-bucket
+//! histograms over plain atomics (no external deps, no background
+//! threads).
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc` clones
+//! of the registered slot, so hot paths (shard workers, the batcher) hold
+//! their handles and update lock-free; the [`Registry`] mutex is touched
+//! only at registration and exposition time. Exposition comes in two
+//! flavors: Prometheus text format ([`Registry::render_prometheus`],
+//! spec-shaped HELP/TYPE headers, escaped label values, cumulative `le`
+//! buckets) and a JSON dump ([`Registry::to_json`]) for offline diffing.
+//! Series are keyed by sorted label sets in `BTreeMap`s, so both
+//! expositions are deterministic.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count. Cloning shares the underlying
+/// atomic cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written f64 value (stored as bits in an `AtomicU64`).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, d: f64) {
+        atomic_f64_add(&self.0, d);
+    }
+}
+
+/// Lock-free compare-exchange add on an f64 stored as bits.
+fn atomic_f64_add(cell: &AtomicU64, d: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + d).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct HistogramCore {
+    /// Inclusive upper bounds, ascending; an implicit `+Inf` bucket
+    /// follows (`counts.len() == bounds.len() + 1`).
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket histogram. Like [`crate::util::stats::Summary`], non-finite
+/// observations are dropped rather than propagated.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    fn with_bounds(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly ascending"
+        );
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistogramCore {
+            bounds: bounds.to_vec(),
+            counts,
+            sum_bits: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        // Number of bounds strictly below v == index of the first bucket
+        // whose `le` bound admits v.
+        let idx = self.0.bounds.partition_point(|&b| v > b);
+        self.0.counts[idx].fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.0.sum_bits, v);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative `(le, count)` pairs, Prometheus-style: the final entry is
+    /// `(+Inf, total)`.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.0.counts.len());
+        for (i, c) in self.0.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            let le = self.0.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, acc));
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Slot {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Counter(_) => "counter",
+            Slot::Gauge(_) => "gauge",
+            Slot::Histogram(_) => "histogram",
+        }
+    }
+}
+
+type LabelSet = Vec<(String, String)>;
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: &'static str,
+    series: BTreeMap<LabelSet, Slot>,
+}
+
+/// Registry of metric families. Registration is idempotent: asking for the
+/// same `(name, labels)` returns a handle onto the same slot, so modules
+/// can re-register without coordinating. Registering an existing name with
+/// a different metric kind panics — that is a naming bug, not a runtime
+/// condition.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.slot(name, help, "counter", labels, || Slot::Counter(Counter::default())) {
+            Slot::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.slot(name, help, "gauge", labels, || Slot::Gauge(Gauge::default())) {
+            Slot::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        let make = || Slot::Histogram(Histogram::with_bounds(bounds));
+        match self.slot(name, help, "histogram", labels, make) {
+            Slot::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    fn slot(
+        &self,
+        name: &str,
+        help: &str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Slot,
+    ) -> Slot {
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams
+            .entry(name.to_string())
+            .or_insert_with(|| Family { help: help.to_string(), kind, series: BTreeMap::new() });
+        assert_eq!(
+            fam.kind, kind,
+            "metric {name} already registered as a {} (asked for {kind})",
+            fam.kind
+        );
+        let slot = fam.series.entry(label_set(labels)).or_insert_with(make);
+        debug_assert_eq!(slot.kind(), kind);
+        slot.clone()
+    }
+
+    /// Read back a counter series; 0 if the series was never registered.
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        let fams = self.families.lock().unwrap();
+        match fams.get(name).and_then(|f| f.series.get(&label_set(labels))) {
+            Some(Slot::Counter(c)) => c.get(),
+            _ => 0,
+        }
+    }
+
+    /// Sum of a counter family across all label sets.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        let fams = self.families.lock().unwrap();
+        fams.get(name)
+            .map(|f| {
+                f.series
+                    .values()
+                    .map(|s| match s {
+                        Slot::Counter(c) => c.get(),
+                        _ => 0,
+                    })
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Read back a gauge series.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let fams = self.families.lock().unwrap();
+        match fams.get(name).and_then(|f| f.series.get(&label_set(labels))) {
+            Some(Slot::Gauge(g)) => Some(g.get()),
+            _ => None,
+        }
+    }
+
+    /// Prometheus text exposition format (one HELP/TYPE header per family,
+    /// escaped label values, cumulative `le` buckets ending at `+Inf`).
+    pub fn render_prometheus(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            out.push_str("# HELP ");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(&escape_help(&fam.help));
+            out.push('\n');
+            out.push_str("# TYPE ");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(fam.kind);
+            out.push('\n');
+            for (labels, slot) in &fam.series {
+                match slot {
+                    Slot::Counter(c) => {
+                        out.push_str(name);
+                        push_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&c.get().to_string());
+                        out.push('\n');
+                    }
+                    Slot::Gauge(g) => {
+                        out.push_str(name);
+                        push_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&fmt_value(g.get()));
+                        out.push('\n');
+                    }
+                    Slot::Histogram(h) => {
+                        for (le, n) in h.cumulative_buckets() {
+                            out.push_str(name);
+                            out.push_str("_bucket");
+                            push_labels(&mut out, labels, Some(("le", &fmt_bound(le))));
+                            out.push(' ');
+                            out.push_str(&n.to_string());
+                            out.push('\n');
+                        }
+                        out.push_str(name);
+                        out.push_str("_sum");
+                        push_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&fmt_value(h.sum()));
+                        out.push('\n');
+                        out.push_str(name);
+                        out.push_str("_count");
+                        push_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&h.count().to_string());
+                        out.push('\n');
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON dump of every family and series (for `--metrics-out x.json`
+    /// and offline diffing).
+    pub fn to_json(&self) -> Json {
+        let fams = self.families.lock().unwrap();
+        let mut top = BTreeMap::new();
+        for (name, fam) in fams.iter() {
+            let mut series = Vec::new();
+            for (labels, slot) in &fam.series {
+                let lbl = Json::Obj(
+                    labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+                );
+                series.push(match slot {
+                    Slot::Counter(c) => {
+                        Json::obj(vec![("labels", lbl), ("value", Json::Int(c.get() as i64))])
+                    }
+                    Slot::Gauge(g) => {
+                        Json::obj(vec![("labels", lbl), ("value", Json::num(g.get()))])
+                    }
+                    Slot::Histogram(h) => Json::obj(vec![
+                        ("labels", lbl),
+                        ("count", Json::Int(h.count() as i64)),
+                        ("sum", Json::num(h.sum())),
+                        (
+                            "buckets",
+                            Json::arr(h.cumulative_buckets().into_iter().map(|(le, n)| {
+                                Json::obj(vec![
+                                    ("le", Json::str(fmt_bound(le))),
+                                    ("count", Json::Int(n as i64)),
+                                ])
+                            })),
+                        ),
+                    ]),
+                });
+            }
+            top.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("help", Json::str(fam.help.clone())),
+                    ("kind", Json::str(fam.kind)),
+                    ("series", Json::Arr(series)),
+                ]),
+            );
+        }
+        Json::Obj(top)
+    }
+}
+
+fn label_set(labels: &[(&str, &str)]) -> LabelSet {
+    let mut ls: LabelSet = labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    ls.sort();
+    ls
+}
+
+fn push_labels(out: &mut String, labels: &LabelSet, extra: Option<(&str, &str)>) {
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).chain(extra) {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Format a bucket bound the way Prometheus clients do: integral bounds
+/// without a trailing `.0`, `+Inf` for the overflow bucket.
+fn fmt_bound(b: f64) -> String {
+    if b.is_infinite() {
+        "+Inf".to_string()
+    } else if b.fract() == 0.0 && b.abs() < 1e15 {
+        format!("{b:.0}")
+    } else {
+        format!("{b}")
+    }
+}
+
+/// The process-wide registry (what `apu fleet --metrics-out` dumps).
+/// Library code takes `&Registry`/`Arc<Registry>` so tests can use private
+/// registries; binaries default to this one.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
+}
+
+/// Default request-latency buckets, microseconds (50µs … 100ms).
+pub fn latency_buckets_us() -> Vec<f64> {
+    vec![50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0, 10000.0, 25000.0, 50000.0, 100000.0]
+}
+
+/// Default batch-size buckets (powers of two up to the fleet's max batch).
+pub fn batch_buckets() -> Vec<f64> {
+    vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("reqs_total", "requests", &[("shard", "0")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // re-registration returns a handle onto the same cell
+        let c2 = r.counter("reqs_total", "requests", &[("shard", "0")]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        assert_eq!(r.counter_value("reqs_total", &[("shard", "0")]), 6);
+        assert_eq!(r.counter_value("reqs_total", &[("shard", "1")]), 0);
+
+        let g = r.gauge("depth", "queue depth", &[]);
+        g.set(3.5);
+        g.add(1.0);
+        assert_eq!(g.get(), 4.5);
+        assert_eq!(r.gauge_value("depth", &[]), Some(4.5));
+    }
+
+    #[test]
+    fn counter_total_sums_label_sets() {
+        let r = Registry::new();
+        r.counter("done", "d", &[("shard", "0")]).add(2);
+        r.counter("done", "d", &[("shard", "1")]).add(3);
+        assert_eq!(r.counter_total("done"), 5);
+        assert_eq!(r.counter_total("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let h = Histogram::with_bounds(&[1.0, 5.0, 10.0]);
+        for v in [0.5, 1.0, 2.0, 7.0, 100.0, f64::NAN, f64::INFINITY] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5); // non-finite dropped
+        assert!((h.sum() - 110.5).abs() < 1e-9);
+        let b = h.cumulative_buckets();
+        // le=1 admits 0.5 and 1.0 (inclusive bound); cumulative thereafter
+        assert_eq!(b, vec![(1.0, 2), (5.0, 3), (10.0, 4), (f64::INFINITY, 5)]);
+        // cumulative counts never decrease and +Inf equals the total
+        assert!(b.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(b.last().unwrap().1, h.count());
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("m", "m", &[]);
+        r.gauge("m", "m", &[]);
+    }
+
+    #[test]
+    fn prometheus_exposition_format() {
+        let r = Registry::new();
+        r.counter("apu_reqs_total", "total requests", &[("shard", "0")]).add(7);
+        r.gauge("apu_depth", "queue depth", &[]).set(2.0);
+        let h = r.histogram("apu_lat_us", "latency", &[10.0, 100.0], &[("shard", "0")]);
+        h.observe(5.0);
+        h.observe(50.0);
+        h.observe(500.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("# HELP apu_reqs_total total requests\n"));
+        assert!(text.contains("# TYPE apu_reqs_total counter\n"));
+        assert!(text.contains("apu_reqs_total{shard=\"0\"} 7\n"));
+        assert!(text.contains("apu_depth 2\n"));
+        assert!(text.contains("apu_lat_us_bucket{shard=\"0\",le=\"10\"} 1\n"));
+        assert!(text.contains("apu_lat_us_bucket{shard=\"0\",le=\"100\"} 2\n"));
+        assert!(text.contains("apu_lat_us_bucket{shard=\"0\",le=\"+Inf\"} 3\n"));
+        assert!(text.contains("apu_lat_us_sum{shard=\"0\"} 555\n"));
+        assert!(text.contains("apu_lat_us_count{shard=\"0\"} 3\n"));
+        // HELP/TYPE emitted once per family, not per series
+        assert_eq!(text.matches("# TYPE apu_lat_us histogram").count(), 1);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = Registry::new();
+        r.counter("m", "help with \\ backslash\nand newline", &[("k", "a\"b\\c\nd")]).inc();
+        let text = r.render_prometheus();
+        assert!(text.contains("# HELP m help with \\\\ backslash\\nand newline\n"));
+        assert!(text.contains("m{k=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+
+    #[test]
+    fn json_dump_parses_back() {
+        let r = Registry::new();
+        r.counter("c", "counter", &[("shard", "1")]).add(3);
+        r.gauge("g", "gauge", &[]).set(1.25);
+        r.histogram("h", "hist", &[2.0], &[]).observe(1.0);
+        let dump = r.to_json();
+        let back = Json::parse(&dump.pretty()).unwrap();
+        assert_eq!(back.path("c/series/0/value").and_then(Json::as_i64), Some(3));
+        assert_eq!(back.path("c/series/0/labels/shard").and_then(Json::as_str), Some("1"));
+        assert_eq!(back.path("g/series/0/value").and_then(Json::as_f64), Some(1.25));
+        assert_eq!(back.path("h/series/0/buckets/1/le").and_then(Json::as_str), Some("+Inf"));
+        assert_eq!(back.path("h/series/0/count").and_then(Json::as_i64), Some(1));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let a = global();
+        let b = global();
+        a.counter("obs_selftest_total", "self test", &[]).inc();
+        assert!(b.counter_total("obs_selftest_total") >= 1);
+    }
+
+    #[test]
+    fn default_bucket_sets_are_ascending() {
+        for b in [latency_buckets_us(), batch_buckets()] {
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

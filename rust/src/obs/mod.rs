@@ -1,0 +1,29 @@
+//! Unified observability layer: metrics, tracing, and (together with
+//! [`crate::sim::SimProfile`]) cycle/energy profiling.
+//!
+//! Three cooperating layers make the stack's behavior visible without
+//! changing it:
+//!
+//! * [`metrics`] — a process-wide registry of counters, gauges, and
+//!   fixed-bucket histograms (atomics only, no deps) with Prometheus text
+//!   exposition and a JSON dump. The fleet's shard workers, batcher, and
+//!   SLO reporter register into it; `apu fleet --metrics-out` dumps it at
+//!   shutdown.
+//! * [`trace`] — span/event tracing exported as Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto loadable). Fleet requests record
+//!   their enqueue→dequeue→batch-assembly→engine-run→reply lifecycle,
+//!   and compiler passes record per-pass spans.
+//! * simulator profiling — `Apu::enable_profiling` mirrors every cycle
+//!   and picojoule charge into a per-layer [`crate::sim::SimProfile`]
+//!   whose totals are provably identical to `SimStats`; `apu profile`
+//!   prints the breakdown and writes the Chrome trace.
+//!
+//! The paper's headline (18 TOPS/W from minimized data movement) is only
+//! auditable with this substrate: per-layer profiles show where cycles
+//! and pJ actually go, and per-request traces show where latency goes.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::{chrome_trace_json, TraceEvent, Tracer, PID_COMPILER, PID_FLEET, PID_SIM};

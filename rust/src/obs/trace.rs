@@ -1,0 +1,254 @@
+//! Span/event tracing with Chrome trace-event export.
+//!
+//! A [`Tracer`] is a clock epoch plus a shared event buffer; producers
+//! stamp microsecond timestamps with [`Tracer::now_us`] and push complete
+//! `ph:"X"` duration spans. Fleet requests record their
+//! enqueue→dequeue→batch-assembly→engine-run→reply lifecycle, compiler
+//! passes record one span each, and the simulator's
+//! [`crate::sim::SimProfile`] converts cycle records into the same event
+//! shape. [`chrome_trace_json`] serializes any event list into the JSON
+//! object format that `chrome://tracing` / Perfetto load directly, with
+//! events sorted by timestamp. Process lanes: [`PID_FLEET`],
+//! [`PID_COMPILER`], [`PID_SIM`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Trace-viewer process lane for fleet/serving spans.
+pub const PID_FLEET: u32 = 0;
+/// Trace-viewer process lane for compiler pass spans.
+pub const PID_COMPILER: u32 = 1;
+/// Trace-viewer process lane for simulator cycle records.
+pub const PID_SIM: u32 = 2;
+
+/// One complete-duration span (`ph:"X"` in the trace-event format).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: String,
+    pub pid: u32,
+    pub tid: u64,
+    /// Start timestamp, microseconds since the tracer epoch.
+    pub ts_us: f64,
+    /// Duration, microseconds.
+    pub dur_us: f64,
+    /// Extra `args` shown in the viewer's detail pane.
+    pub args: Vec<(String, Json)>,
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    epoch: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+    next_id: AtomicU64,
+}
+
+/// Shared handle onto one trace buffer; clones record into the same
+/// buffer with timestamps off the same epoch.
+#[derive(Debug, Clone)]
+pub struct Tracer(Arc<TracerInner>);
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer(Arc::new(TracerInner {
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+        }))
+    }
+
+    /// Microseconds since this tracer's epoch.
+    pub fn now_us(&self) -> f64 {
+        self.0.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Fresh id for correlating spans of one logical request.
+    pub fn next_id(&self) -> u64 {
+        self.0.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn record(&self, ev: TraceEvent) {
+        self.0.events.lock().unwrap().push(ev);
+    }
+
+    /// Record a complete span with explicit start/duration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        name: &str,
+        cat: &str,
+        pid: u32,
+        tid: u64,
+        ts_us: f64,
+        dur_us: f64,
+        args: Vec<(String, Json)>,
+    ) {
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            ts_us,
+            dur_us,
+            args,
+        });
+    }
+
+    /// Start timestamp for an [`Tracer::end_span`] pair.
+    pub fn begin(&self) -> f64 {
+        self.now_us()
+    }
+
+    /// Record a span from `t0_us` (from [`Tracer::begin`]) to now.
+    pub fn end_span(
+        &self,
+        name: &str,
+        cat: &str,
+        pid: u32,
+        tid: u64,
+        t0_us: f64,
+        args: Vec<(String, Json)>,
+    ) {
+        let now = self.now_us();
+        self.span(name, cat, pid, tid, t0_us, (now - t0_us).max(0.0), args);
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the recorded events.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.0.events.lock().unwrap().clone()
+    }
+
+    /// Append externally produced events (e.g. simulator cycle records)
+    /// into this trace.
+    pub fn extend(&self, evs: Vec<TraceEvent>) {
+        self.0.events.lock().unwrap().extend(evs);
+    }
+
+    pub fn chrome_trace(&self) -> Json {
+        chrome_trace_json(&self.events())
+    }
+
+    pub fn write_chrome_trace(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace().pretty())
+    }
+}
+
+/// Serialize events as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`), sorted by start
+/// timestamp so the output is deterministic for a given event set.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut evs: Vec<&TraceEvent> = events.iter().collect();
+    evs.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us).then(a.name.cmp(&b.name)));
+    let arr = evs.into_iter().map(|e| {
+        let mut pairs = vec![
+            ("name", Json::str(e.name.clone())),
+            ("cat", Json::str(e.cat.clone())),
+            ("ph", Json::str("X")),
+            ("pid", Json::Int(e.pid as i64)),
+            ("tid", Json::Int(e.tid as i64)),
+            ("ts", Json::num(e.ts_us)),
+            ("dur", Json::num(e.dur_us)),
+        ];
+        if !e.args.is_empty() {
+            let obj = e.args.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+            pairs.push(("args", Json::Obj(obj)));
+        }
+        Json::obj(pairs)
+    });
+    Json::obj(vec![("traceEvents", Json::arr(arr)), ("displayTimeUnit", Json::str("ms"))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate_and_snapshot() {
+        let tr = Tracer::new();
+        assert!(tr.is_empty());
+        let t0 = tr.begin();
+        tr.end_span("work", "test", PID_FLEET, 3, t0, vec![("k".to_string(), Json::Int(1))]);
+        tr.span("fixed", "test", PID_SIM, 0, 10.0, 5.0, Vec::new());
+        assert_eq!(tr.len(), 2);
+        let evs = tr.events();
+        assert_eq!(evs[0].name, "work");
+        assert_eq!(evs[0].tid, 3);
+        assert!(evs[0].dur_us >= 0.0);
+    }
+
+    #[test]
+    fn clones_share_the_buffer_and_ids() {
+        let tr = Tracer::new();
+        let tr2 = tr.clone();
+        assert_eq!(tr.next_id(), 0);
+        assert_eq!(tr2.next_id(), 1);
+        tr2.span("a", "c", 0, 0, 0.0, 1.0, Vec::new());
+        assert_eq!(tr.len(), 1);
+    }
+
+    #[test]
+    fn chrome_trace_sorts_by_timestamp() {
+        let tr = Tracer::new();
+        tr.span("late", "c", 0, 0, 30.0, 1.0, Vec::new());
+        tr.span("early", "c", 0, 0, 10.0, 1.0, Vec::new());
+        tr.span("mid", "c", 0, 0, 20.0, 1.0, Vec::new());
+        let j = tr.chrome_trace();
+        let evs = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let names: Vec<&str> =
+            evs.iter().map(|e| e.get("name").and_then(Json::as_str).unwrap()).collect();
+        assert_eq!(names, vec!["early", "mid", "late"]);
+        let ts: Vec<f64> =
+            evs.iter().map(|e| e.get("ts").and_then(Json::as_f64).unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_with_escaping() {
+        let tr = Tracer::new();
+        tr.span(
+            "quote \" backslash \\ newline \n",
+            "cat",
+            PID_COMPILER,
+            7,
+            1.5,
+            2.25,
+            vec![("detail".to_string(), Json::str("a\"b"))],
+        );
+        let text = tr.chrome_trace().pretty();
+        let back = Json::parse(&text).unwrap();
+        let ev = &back.get("traceEvents").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(ev.get("name").and_then(Json::as_str), Some("quote \" backslash \\ newline \n"));
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(ev.get("pid").and_then(Json::as_i64), Some(PID_COMPILER as i64));
+        assert_eq!(ev.get("ts").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(ev.get("dur").and_then(Json::as_f64), Some(2.25));
+        assert_eq!(ev.path("args/detail").and_then(Json::as_str), Some("a\"b"));
+        assert_eq!(back.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    }
+
+    #[test]
+    fn empty_args_are_omitted() {
+        let tr = Tracer::new();
+        tr.span("bare", "c", 0, 0, 0.0, 1.0, Vec::new());
+        let j = tr.chrome_trace();
+        let ev = &j.get("traceEvents").and_then(Json::as_arr).unwrap()[0];
+        assert!(ev.get("args").is_none());
+    }
+}

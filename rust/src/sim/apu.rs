@@ -25,6 +25,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::pe::PeUnit;
+use super::profile::{Phase, SimProfile};
 use crate::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
 use crate::isa::{DataSegment, HostOpKind, Insn, Program};
 use crate::pruning::Quantizer;
@@ -75,8 +76,13 @@ impl SimStats {
         self.route_pj + self.compute_pj + self.host_pj + self.stream_pj
     }
 
-    /// Wall-clock seconds at the configured clock.
+    /// Wall-clock seconds at the configured clock. A zero/negative or
+    /// non-finite clock yields 0.0 instead of ±inf/NaN (which would
+    /// poison every derived TOPS/W figure downstream).
     pub fn seconds(&self, clock_ghz: f64) -> f64 {
+        if clock_ghz <= 0.0 || !clock_ghz.is_finite() {
+            return 0.0;
+        }
         self.total_cycles() as f64 / (clock_ghz * 1e9)
     }
 
@@ -84,6 +90,26 @@ impl SimStats {
     /// mixed-precision tree + quantize, re-expressed at base precision).
     pub fn normalized_ops(&self) -> f64 {
         4.0 * self.macs as f64
+    }
+
+    /// Effective throughput in GOPS at the configured clock; 0.0 when
+    /// nothing ran or the clock is invalid — never inf/NaN.
+    pub fn effective_gops(&self, clock_ghz: f64) -> f64 {
+        let s = self.seconds(clock_ghz);
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.normalized_ops() / s / 1e9
+    }
+
+    /// Energy efficiency, TOPS/W ≡ normalized ops per pJ; 0.0 when no
+    /// energy was charged — never inf/NaN.
+    pub fn tops_per_watt(&self) -> f64 {
+        let pj = self.total_pj();
+        if pj <= 0.0 || !pj.is_finite() {
+            return 0.0;
+        }
+        self.normalized_ops() / pj
     }
 }
 
@@ -117,6 +143,9 @@ pub struct Apu {
     /// owner PE (for exactly-once tracking).
     partial: std::collections::BTreeMap<u16, (Vec<f32>, Vec<u16>)>,
     cur: Option<LayerCtx>,
+    /// Optional per-charge profile mirror (see [`SimProfile`]); `None`
+    /// keeps the hot path allocation-free.
+    profile: Option<SimProfile>,
 }
 
 #[derive(Debug, Clone)]
@@ -146,6 +175,7 @@ impl Apu {
             pending_owner: Vec::new(),
             partial: std::collections::BTreeMap::new(),
             cur: None,
+            profile: None,
         }
     }
 
@@ -153,8 +183,67 @@ impl Apu {
         &self.stats
     }
 
+    /// Zero the accumulated stats; an enabled profile is cleared too so
+    /// the two never disagree.
     pub fn reset_stats(&mut self) {
         self.stats = SimStats::default();
+        if let Some(p) = self.profile.as_mut() {
+            *p = SimProfile::default();
+        }
+    }
+
+    /// Start mirroring every charge into a [`SimProfile`] (idempotent).
+    pub fn enable_profiling(&mut self) {
+        if self.profile.is_none() {
+            self.profile = Some(SimProfile::default());
+        }
+    }
+
+    pub fn profile(&self) -> Option<&SimProfile> {
+        self.profile.as_ref()
+    }
+
+    /// Detach the recorded profile (disables further profiling).
+    pub fn take_profile(&mut self) -> Option<SimProfile> {
+        self.profile.take()
+    }
+
+    /// Lifetime rows computed per PE (utilization accounting).
+    pub fn pe_rows_computed(&self) -> Vec<u64> {
+        self.pes.iter().map(|pe| pe.rows_computed()).collect()
+    }
+
+    /// Book `cycles`/`pj`/`macs` into `phase`, mirroring the identical
+    /// increments into the profile (same values, same order — so profile
+    /// totals stay bitwise equal to `self.stats`).
+    fn charge(&mut self, phase: Phase, detail: &'static str, cycles: u64, pj: f64, macs: u64) {
+        if cycles == 0 && pj == 0.0 && macs == 0 {
+            return;
+        }
+        if let Some(p) = self.profile.as_mut() {
+            let layer = self.cur.as_ref().map(|c| c.layer_id);
+            let start = self.stats.total_cycles();
+            p.charge(layer, phase, detail, start, cycles, pj, macs);
+        }
+        match phase {
+            Phase::Route => {
+                self.stats.route_cycles += cycles;
+                self.stats.route_pj += pj;
+            }
+            Phase::Compute => {
+                self.stats.compute_cycles += cycles;
+                self.stats.compute_pj += pj;
+            }
+            Phase::Host => {
+                self.stats.host_cycles += cycles;
+                self.stats.host_pj += pj;
+            }
+            Phase::Stream => {
+                self.stats.stream_cycles += cycles;
+                self.stats.stream_pj += pj;
+            }
+        }
+        self.stats.macs += macs;
     }
 
     /// Validate and load a program; charges the one-time weight DMA when
@@ -238,9 +327,10 @@ impl Apu {
                         // weights streamed from DRAM each run (folding dip)
                         let ctx = self.cur.as_ref().context("LoadWeights before ConfigLayer")?;
                         let bits = codes.len() * ctx.bits as usize;
-                        self.stats.stream_pj += self.tech.dram_pj(bits)
+                        let pj = self.tech.dram_pj(bits)
                             + self.tech.sram_write_pj(bits, self.cfg.pe_sram_bits);
-                        self.stats.stream_cycles += (bits as u64).div_ceil(64); // 64-bit DMA bus
+                        // 64-bit DMA bus
+                        self.charge(Phase::Stream, "weight-stream", (bits as u64).div_ceil(64), pj, 0);
                     }
                     let n = self.pes.len();
                     self.pes
@@ -299,6 +389,9 @@ impl Apu {
             bail!("program ended with unfolded partial buffer(s) {ids:?} (missing FoldAdd)");
         }
         self.stats.inferences += 1;
+        if let Some(pr) = self.profile.as_mut() {
+            pr.count_inference();
+        }
         if self.acts.len() != p.dout {
             bail!("program produced {} outputs, expected {}", self.acts.len(), p.dout);
         }
@@ -334,6 +427,7 @@ impl Apu {
         let pj_per_route =
             src_read + self.tech.mux_pj_per_bit * bits as f64 + bits as f64 * self.tech.latch_pj_per_bit;
         let mut n_cycles = 0u32;
+        let mut phase_pj = 0.0f64;
         let mut i = 0usize;
         // dst → slot scratch, tagged by cycle to avoid clearing (n_pes is small).
         let mut slot_of = vec![(u32::MAX, 0u32); self.cfg.n_pes];
@@ -359,7 +453,7 @@ impl Apu {
                 slot_of[a.dst as usize] = (cycle, a.dst_slot);
                 j += 1;
             }
-            self.stats.route_pj += pj_per_route * (j - i) as f64;
+            phase_pj += pj_per_route * (j - i) as f64;
             for (dst, value) in self.crossbar.end_cycle()? {
                 let (tag, slot) = slot_of[dst];
                 if tag != cycle {
@@ -370,7 +464,7 @@ impl Apu {
             n_cycles += 1;
             i = j;
         }
-        self.stats.route_cycles += n_cycles as u64;
+        self.charge(Phase::Route, "route", n_cycles as u64, phase_pj, 0);
         Ok(())
     }
 
@@ -387,9 +481,13 @@ impl Apu {
                 pe.compute_row(row)?;
             }
         }
-        self.stats.compute_cycles += rows as u64;
-        self.stats.compute_pj += per_cycle * rows as f64 * ctx.nb as f64;
-        self.stats.macs += (ctx.nb * ctx.bh * ctx.bw) as u64;
+        self.charge(
+            Phase::Compute,
+            "compute",
+            rows as u64,
+            per_cycle * rows as f64 * ctx.nb as f64,
+            (ctx.nb * ctx.bh * ctx.bw) as u64,
+        );
         Ok(())
     }
 
@@ -448,7 +546,7 @@ impl Apu {
                 for v in &mut self.acts {
                     *v = v.max(0.0);
                 }
-                self.charge_host(self.acts.len());
+                self.charge_host("relu", self.acts.len());
             }
             HostOpKind::Quantize => {
                 let scale = *params.first().context("Quantize needs [scale]")?;
@@ -458,7 +556,7 @@ impl Apu {
                     *v = q.fake(*v);
                 }
                 self.act_owner = vec![u16::MAX; self.acts.len()];
-                self.charge_host(self.acts.len());
+                self.charge_host("quantize", self.acts.len());
             }
             HostOpKind::MaxPool => {
                 let [h, w, c, win, stride] = params else {
@@ -472,7 +570,7 @@ impl Apu {
                 // (the reduction seed is register init, not a charged
                 // op). The analytic model (`compiler::cost`) charges the
                 // identical figure; the integration tests assert it.
-                self.charge_host(out.len() * (2 * win * win - 1));
+                self.charge_host("maxpool", out.len() * (2 * win * win - 1));
                 self.acts = out;
                 self.act_owner = vec![u16::MAX; self.acts.len()];
             }
@@ -499,7 +597,7 @@ impl Apu {
                 for (v, p) in self.acts.iter_mut().zip(&vals) {
                     *v += p;
                 }
-                self.charge_host(vals.len());
+                self.charge_host("fold-add", vals.len());
                 // Folded values live on the host core now: no PE owns them.
                 self.act_owner = vec![u16::MAX; self.acts.len()];
             }
@@ -524,7 +622,7 @@ impl Apu {
                     }
                     out.push(self.acts[i]);
                 }
-                self.charge_host(params.len());
+                self.charge_host("gather", params.len());
                 self.acts = out;
                 self.act_owner = vec![u16::MAX; self.acts.len()];
             }
@@ -548,17 +646,15 @@ impl Apu {
             }
             *o = if relu { (acc + b[r]).max(0.0) } else { acc + b[r] };
         }
-        self.stats.host_cycles += (dout * din) as u64;
-        self.stats.host_pj += (dout * din) as f64 * self.tech.host_pj_per_op;
-        self.stats.macs += (dout * din) as u64;
+        let ops = dout * din;
+        self.charge(Phase::Host, "dense", ops as u64, ops as f64 * self.tech.host_pj_per_op, ops as u64);
         self.acts = out;
         self.act_owner = vec![u16::MAX; self.acts.len()];
         Ok(())
     }
 
-    fn charge_host(&mut self, ops: usize) {
-        self.stats.host_cycles += ops as u64;
-        self.stats.host_pj += ops as f64 * self.tech.host_pj_per_op;
+    fn charge_host(&mut self, detail: &'static str, ops: usize) {
+        self.charge(Phase::Host, detail, ops as u64, ops as f64 * self.tech.host_pj_per_op, 0);
     }
 
     /// Resident weight footprint of the loaded program, bits.
@@ -762,6 +858,63 @@ mod tests {
         apu.load(&p).unwrap();
         let err = apu.run(&[1.0, 2.0]).unwrap_err();
         assert!(format!("{err:#}").contains("missing partial buffer"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_clock_and_empty_stats_never_produce_non_finite_figures() {
+        let st = SimStats::default();
+        assert_eq!(st.seconds(1.0), 0.0);
+        assert_eq!(st.effective_gops(1.0), 0.0);
+        assert_eq!(st.tops_per_watt(), 0.0);
+        let mut busy = SimStats { compute_cycles: 100, macs: 50, ..Default::default() };
+        assert_eq!(busy.seconds(0.0), 0.0);
+        assert_eq!(busy.seconds(-1.0), 0.0);
+        assert_eq!(busy.seconds(f64::NAN), 0.0);
+        assert_eq!(busy.effective_gops(0.0), 0.0);
+        assert_eq!(busy.tops_per_watt(), 0.0); // no energy charged yet
+        busy.compute_pj = 25.0;
+        assert!((busy.tops_per_watt() - 8.0).abs() < 1e-12); // 200 ops / 25 pJ
+        assert!(busy.effective_gops(1.0).is_finite() && busy.effective_gops(1.0) > 0.0);
+    }
+
+    #[test]
+    fn profile_mirrors_stats_exactly() {
+        let (layers, input) = two_layer_fixture(33);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 2).unwrap();
+        // tiny SRAM: streamed mode, so weight-stream charges profile too
+        let mut apu = Apu::new(ApuConfig { n_pes: 2, pe_sram_bits: 100, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        assert!(apu.profile().is_none()); // off by default
+        apu.enable_profiling();
+        apu.run(&input).unwrap();
+        apu.run(&input).unwrap();
+        let profile = apu.profile().unwrap();
+        profile.check_against(apu.stats()).unwrap();
+        assert!(profile.records().iter().any(|r| r.detail == "weight-stream"));
+        assert_eq!(profile.totals().inferences, 2);
+        // per-layer cycle totals partition the machine total exactly
+        let cycle_sum: u64 = profile.by_layer().values().map(|a| a.total_cycles()).sum();
+        assert_eq!(cycle_sum, apu.stats().total_cycles());
+    }
+
+    #[test]
+    fn reset_stats_clears_profile_with_stats() {
+        let (layers, input) = two_layer_fixture(37);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 4).unwrap();
+        let mut apu = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+        apu.load(&program).unwrap();
+        apu.enable_profiling();
+        apu.run(&input).unwrap();
+        assert!(!apu.profile().unwrap().is_empty());
+        apu.reset_stats();
+        assert!(apu.profile().unwrap().is_empty());
+        apu.run(&input).unwrap();
+        apu.profile().unwrap().check_against(apu.stats()).unwrap();
+        // taking the profile detaches it and disables further mirroring
+        let taken = apu.take_profile().unwrap();
+        assert!(!taken.is_empty());
+        assert!(apu.profile().is_none());
+        assert!(apu.pe_rows_computed().iter().sum::<u64>() > 0);
     }
 
     #[test]

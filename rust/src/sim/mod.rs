@@ -12,6 +12,8 @@
 
 pub mod apu;
 pub mod pe;
+pub mod profile;
 
 pub use apu::{host_maxpool, Apu, ApuConfig, SimStats};
 pub use pe::PeUnit;
+pub use profile::{Phase, PhaseRecord, SimProfile};

@@ -35,6 +35,9 @@ pub struct PeUnit {
     latch_filled: Vec<bool>,
     /// Output SRAM: one activation per computed row.
     out: Vec<f32>,
+    /// Lifetime rows computed (utilization accounting — survives
+    /// `configure`, cleared only when the PE is rebuilt).
+    rows_computed: u64,
 }
 
 impl PeUnit {
@@ -52,6 +55,7 @@ impl PeUnit {
             latch: Vec::new(),
             latch_filled: Vec::new(),
             out: Vec::new(),
+            rows_computed: 0,
         }
     }
 
@@ -153,7 +157,13 @@ impl PeUnit {
             o = Quantizer::new(self.bits, self.out_scale).fake(o);
         }
         self.out[row] = o;
+        self.rows_computed += 1;
         Ok(o)
+    }
+
+    /// Lifetime rows computed by this PE (per-PE utilization metric).
+    pub fn rows_computed(&self) -> u64 {
+        self.rows_computed
     }
 
     /// Reset latch-filled flags for the next layer (outputs persist — they
@@ -256,6 +266,22 @@ mod tests {
         assert!(pe.compute_row(0).is_err()); // slot 1 missing
         pe.latch_input(1, 1.0).unwrap();
         assert!(pe.compute_row(0).is_ok());
+    }
+
+    #[test]
+    fn rows_computed_counts_across_configures() {
+        let mut pe = ready_pe();
+        assert_eq!(pe.rows_computed(), 0);
+        pe.compute_row(0).unwrap();
+        pe.compute_row(1).unwrap();
+        assert_eq!(pe.rows_computed(), 2);
+        // reconfiguring starts a new layer but keeps the lifetime count
+        pe.configure(1, 1, 4, false).unwrap();
+        pe.load_weights(&[1]).unwrap();
+        pe.load_bias(&[0.0]).unwrap();
+        pe.latch_input(0, 1.0).unwrap();
+        pe.compute_row(0).unwrap();
+        assert_eq!(pe.rows_computed(), 3);
     }
 
     #[test]

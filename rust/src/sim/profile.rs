@@ -1,0 +1,394 @@
+//! Per-layer, per-phase cycle/energy profile of a simulation.
+//!
+//! [`SimProfile`] is the observability view of [`super::SimStats`]: every
+//! charge the simulator books (route, compute, host op, weight stream)
+//! is mirrored here as a [`PhaseRecord`] keyed by the active layer id,
+//! *and* accumulated into an internal `SimStats` by the exact same
+//! sequence of additions the live stats receive. Because f64 addition is
+//! deterministic for a fixed order of operands, the profile's totals are
+//! bitwise identical to the machine's stats — [`SimProfile::check_against`]
+//! asserts this, so a profile that drifts from the ground truth is a bug,
+//! not a rounding artifact. (`load_pj` is excluded: it is charged at
+//! `Apu::load`, outside any profiled run.)
+//!
+//! Attribution caveat: host ops are keyed by the most recent
+//! `ConfigLayer` context. Ops emitted before the first spatial layer
+//! (e.g. a conv front-end's input Gather) land on `layer: None`, shown
+//! as `(ingress)`; pooling host ops ride the preceding layer's id. The
+//! per-op breakdown keeps those costs visible by kind regardless of
+//! layer attribution.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::apu::SimStats;
+use crate::obs::trace::{chrome_trace_json, TraceEvent, PID_SIM};
+use crate::util::json::Json;
+use crate::util::table::{eng, Table};
+
+/// Which accounting bucket a charge lands in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Route,
+    Compute,
+    Host,
+    Stream,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Route => "route",
+            Phase::Compute => "compute",
+            Phase::Host => "host",
+            Phase::Stream => "stream",
+        }
+    }
+}
+
+/// One booked charge: `cycles`/`pj`/`macs` attributed to `layer` starting
+/// at machine cycle `start_cycle` (cumulative across runs).
+#[derive(Debug, Clone)]
+pub struct PhaseRecord {
+    /// Active layer id, `None` before the first `ConfigLayer` (ingress
+    /// host ops).
+    pub layer: Option<u16>,
+    pub phase: Phase,
+    /// Operation kind: `"route"`, `"compute"`, `"weight-stream"`, or the
+    /// host-op name (`"relu"`, `"maxpool"`, `"fold-add"`, `"gather"`,
+    /// `"quantize"`, `"dense"`).
+    pub detail: &'static str,
+    pub start_cycle: u64,
+    pub cycles: u64,
+    pub pj: f64,
+    pub macs: u64,
+}
+
+/// Recorded profile of one or more `Apu::run` calls.
+#[derive(Debug, Clone, Default)]
+pub struct SimProfile {
+    /// Mirror of the machine's stats, accumulated charge-by-charge in the
+    /// identical order (see module docs).
+    stats: SimStats,
+    records: Vec<PhaseRecord>,
+}
+
+impl SimProfile {
+    /// Profile totals — bitwise equal to the machine's [`SimStats`]
+    /// except `load_pj`/fields charged outside `run`.
+    pub fn totals(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn records(&self) -> &[PhaseRecord] {
+        &self.records
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub(crate) fn charge(
+        &mut self,
+        layer: Option<u16>,
+        phase: Phase,
+        detail: &'static str,
+        start_cycle: u64,
+        cycles: u64,
+        pj: f64,
+        macs: u64,
+    ) {
+        match phase {
+            Phase::Route => {
+                self.stats.route_cycles += cycles;
+                self.stats.route_pj += pj;
+            }
+            Phase::Compute => {
+                self.stats.compute_cycles += cycles;
+                self.stats.compute_pj += pj;
+            }
+            Phase::Host => {
+                self.stats.host_cycles += cycles;
+                self.stats.host_pj += pj;
+            }
+            Phase::Stream => {
+                self.stats.stream_cycles += cycles;
+                self.stats.stream_pj += pj;
+            }
+        }
+        self.stats.macs += macs;
+        self.records.push(PhaseRecord { layer, phase, detail, start_cycle, cycles, pj, macs });
+    }
+
+    pub(crate) fn count_inference(&mut self) {
+        self.stats.inferences += 1;
+    }
+
+    /// Aggregate records per layer id (insertion order of charges within
+    /// a layer is preserved in the aggregation).
+    pub fn by_layer(&self) -> BTreeMap<Option<u16>, SimStats> {
+        let mut out: BTreeMap<Option<u16>, SimStats> = BTreeMap::new();
+        for r in &self.records {
+            let agg = out.entry(r.layer).or_default();
+            match r.phase {
+                Phase::Route => {
+                    agg.route_cycles += r.cycles;
+                    agg.route_pj += r.pj;
+                }
+                Phase::Compute => {
+                    agg.compute_cycles += r.cycles;
+                    agg.compute_pj += r.pj;
+                }
+                Phase::Host => {
+                    agg.host_cycles += r.cycles;
+                    agg.host_pj += r.pj;
+                }
+                Phase::Stream => {
+                    agg.stream_cycles += r.cycles;
+                    agg.stream_pj += r.pj;
+                }
+            }
+            agg.macs += r.macs;
+        }
+        out
+    }
+
+    /// Aggregate cycles/pJ per operation kind (`detail`), across layers.
+    pub fn detail_totals(&self) -> BTreeMap<&'static str, (u64, f64)> {
+        let mut out: BTreeMap<&'static str, (u64, f64)> = BTreeMap::new();
+        for r in &self.records {
+            let e = out.entry(r.detail).or_insert((0, 0.0));
+            e.0 += r.cycles;
+            e.1 += r.pj;
+        }
+        out
+    }
+
+    /// Assert the mirrored totals equal the machine's stats exactly
+    /// (bitwise on the f64 energy fields). `load_pj` is excluded — it is
+    /// charged at program load, before profiling sees any run.
+    pub fn check_against(&self, stats: &SimStats) -> Result<()> {
+        let p = &self.stats;
+        let ints: [(&str, u64, u64); 6] = [
+            ("route_cycles", p.route_cycles, stats.route_cycles),
+            ("compute_cycles", p.compute_cycles, stats.compute_cycles),
+            ("host_cycles", p.host_cycles, stats.host_cycles),
+            ("stream_cycles", p.stream_cycles, stats.stream_cycles),
+            ("macs", p.macs, stats.macs),
+            ("inferences", p.inferences, stats.inferences),
+        ];
+        for (name, a, b) in ints {
+            if a != b {
+                bail!("profile {name} = {a} but SimStats has {b}");
+            }
+        }
+        let floats: [(&str, f64, f64); 4] = [
+            ("route_pj", p.route_pj, stats.route_pj),
+            ("compute_pj", p.compute_pj, stats.compute_pj),
+            ("host_pj", p.host_pj, stats.host_pj),
+            ("stream_pj", p.stream_pj, stats.stream_pj),
+        ];
+        for (name, a, b) in floats {
+            if a.to_bits() != b.to_bits() {
+                bail!("profile {name} = {a} but SimStats has {b} (not bitwise equal)");
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the per-layer breakdown (and a per-op-kind appendix) as
+    /// aligned console tables. `layer_names` indexes by layer id (the
+    /// compiler's `NetworkCost` layer order); missing names fall back to
+    /// `layer<N>`.
+    pub fn table(&self, layer_names: &[String]) -> String {
+        let mut t = Table::new(&[
+            "layer", "route", "compute", "host", "stream", "cycles", "share", "pJ", "MACs",
+        ]);
+        let grand = self.stats.total_cycles();
+        for (layer, agg) in self.by_layer() {
+            let name = match layer {
+                None => "(ingress)".to_string(),
+                Some(l) => layer_names
+                    .get(l as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("layer{l}")),
+            };
+            let share =
+                if grand > 0 { 100.0 * agg.total_cycles() as f64 / grand as f64 } else { 0.0 };
+            t.row(&[
+                name,
+                agg.route_cycles.to_string(),
+                agg.compute_cycles.to_string(),
+                agg.host_cycles.to_string(),
+                agg.stream_cycles.to_string(),
+                agg.total_cycles().to_string(),
+                format!("{share:.1}%"),
+                eng(agg.total_pj()),
+                agg.macs.to_string(),
+            ]);
+        }
+        t.row(&[
+            "TOTAL".to_string(),
+            self.stats.route_cycles.to_string(),
+            self.stats.compute_cycles.to_string(),
+            self.stats.host_cycles.to_string(),
+            self.stats.stream_cycles.to_string(),
+            grand.to_string(),
+            "100.0%".to_string(),
+            eng(self.stats.total_pj()),
+            self.stats.macs.to_string(),
+        ]);
+        let mut out = t.render();
+        let details = self.detail_totals();
+        if !details.is_empty() {
+            out.push_str("\nper-op breakdown:\n");
+            let mut d = Table::new(&["op", "cycles", "pJ"]);
+            for (detail, (cycles, pj)) in details {
+                d.row(&[detail.to_string(), cycles.to_string(), eng(pj)]);
+            }
+            out.push_str(&d.render());
+        }
+        out
+    }
+
+    /// Convert the cycle records to Chrome trace events on the simulator
+    /// lane ([`PID_SIM`]): one thread row per layer (`tid = layer + 1`,
+    /// ingress on `tid 0`), cycle timestamps converted to µs at
+    /// `clock_ghz` (1 GHz assumed if the clock is invalid).
+    pub fn trace_events(&self, clock_ghz: f64) -> Vec<TraceEvent> {
+        let clk = if clock_ghz > 0.0 && clock_ghz.is_finite() { clock_ghz } else { 1.0 };
+        let to_us = |cyc: u64| cyc as f64 / (clk * 1e3);
+        self.records
+            .iter()
+            .map(|r| TraceEvent {
+                name: r.detail.to_string(),
+                cat: r.phase.name().to_string(),
+                pid: PID_SIM,
+                tid: r.layer.map(|l| l as u64 + 1).unwrap_or(0),
+                ts_us: to_us(r.start_cycle),
+                dur_us: to_us(r.cycles),
+                args: vec![
+                    (
+                        "layer".to_string(),
+                        match r.layer {
+                            Some(l) => Json::Int(l as i64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("cycles".to_string(), Json::Int(r.cycles as i64)),
+                    ("pj".to_string(), Json::num(r.pj)),
+                    ("macs".to_string(), Json::Int(r.macs as i64)),
+                ],
+            })
+            .collect()
+    }
+
+    pub fn chrome_trace(&self, clock_ghz: f64) -> Json {
+        chrome_trace_json(&self.trace_events(clock_ghz))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimProfile {
+        let mut p = SimProfile::default();
+        p.charge(None, Phase::Host, "gather", 0, 10, 1.5, 0);
+        p.charge(Some(0), Phase::Route, "route", 10, 4, 0.25, 0);
+        p.charge(Some(0), Phase::Compute, "compute", 14, 8, 2.0, 64);
+        p.charge(Some(1), Phase::Stream, "weight-stream", 22, 3, 0.5, 0);
+        p.charge(Some(1), Phase::Compute, "compute", 25, 6, 1.25, 32);
+        p.count_inference();
+        p
+    }
+
+    #[test]
+    fn totals_mirror_charges() {
+        let p = sample();
+        let t = p.totals();
+        assert_eq!(t.route_cycles, 4);
+        assert_eq!(t.compute_cycles, 14);
+        assert_eq!(t.host_cycles, 10);
+        assert_eq!(t.stream_cycles, 3);
+        assert_eq!(t.macs, 96);
+        assert_eq!(t.inferences, 1);
+        assert_eq!(t.total_cycles(), 31);
+    }
+
+    #[test]
+    fn check_against_is_exact() {
+        let p = sample();
+        let mut stats = p.totals().clone();
+        assert!(p.check_against(&stats).is_ok());
+        // load_pj differences are ignored (charged outside run)
+        stats.load_pj += 123.0;
+        assert!(p.check_against(&stats).is_ok());
+        stats.compute_pj += 1e-12;
+        let err = p.check_against(&stats).unwrap_err();
+        assert!(format!("{err:#}").contains("compute_pj"), "{err:#}");
+    }
+
+    #[test]
+    fn by_layer_partitions_every_charge() {
+        let p = sample();
+        let by = p.by_layer();
+        assert_eq!(by.len(), 3);
+        assert_eq!(by[&None].host_cycles, 10);
+        assert_eq!(by[&Some(0)].compute_cycles, 8);
+        assert_eq!(by[&Some(0)].macs, 64);
+        assert_eq!(by[&Some(1)].stream_cycles, 3);
+        let cycle_sum: u64 = by.values().map(|a| a.total_cycles()).sum();
+        assert_eq!(cycle_sum, p.totals().total_cycles());
+        let pj_sum: f64 = by.values().map(|a| a.total_pj()).sum();
+        assert!((pj_sum - p.totals().total_pj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detail_totals_key_by_op_kind() {
+        let p = sample();
+        let d = p.detail_totals();
+        assert_eq!(d["compute"], (14, 3.25));
+        assert_eq!(d["gather"], (10, 1.5));
+        assert_eq!(d["weight-stream"], (3, 0.5));
+    }
+
+    #[test]
+    fn table_lists_layers_and_total() {
+        let p = sample();
+        let out = p.table(&["fc1".to_string()]);
+        assert!(out.contains("(ingress)"));
+        assert!(out.contains("fc1"));
+        assert!(out.contains("layer1")); // fallback name for unnamed layer 1
+        assert!(out.contains("TOTAL"));
+        assert!(out.contains("per-op breakdown"));
+    }
+
+    #[test]
+    fn trace_events_convert_cycles_to_us() {
+        let p = sample();
+        let evs = p.trace_events(1.0); // 1 GHz: 1000 cycles per µs
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].tid, 0); // ingress lane
+        assert_eq!(evs[1].tid, 1); // layer 0 lane
+        assert!((evs[1].ts_us - 0.010).abs() < 1e-12);
+        assert!((evs[2].dur_us - 0.008).abs() < 1e-12);
+        // timestamps non-decreasing in record order (cycles are serial)
+        assert!(evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        // invalid clock falls back instead of producing NaN
+        let evs0 = p.trace_events(0.0);
+        assert!(evs0.iter().all(|e| e.ts_us.is_finite()));
+    }
+
+    #[test]
+    fn chrome_trace_round_trips() {
+        let p = sample();
+        let text = p.chrome_trace(1.0).pretty();
+        let back = Json::parse(&text).unwrap();
+        let evs = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].get("cat").and_then(Json::as_str), Some("host"));
+        assert_eq!(evs[0].path("args/layer"), Some(&Json::Null));
+    }
+}

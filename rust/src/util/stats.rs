@@ -2,6 +2,8 @@
 //! percentiles over a retained sample. Used by the bench harness and the
 //! coordinator's latency/throughput accounting.
 
+use crate::util::json::Json;
+
 /// Online summary of a stream of f64 observations.
 ///
 /// Non-finite observations (a NaN latency from a bad clock, an ∞ from a
@@ -136,6 +138,23 @@ impl Summary {
         }
         self.dropped += other.dropped;
     }
+
+    /// The summary as a JSON object (count/mean/min/max/p50/p95/p99).
+    /// `&mut self` because percentiles sort the retained sample; on an
+    /// empty summary the non-finite fields serialize as `null`.
+    pub fn to_json(&mut self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Int(self.n as i64)),
+            ("dropped", Json::Int(self.dropped as i64)),
+            ("mean", Json::num(self.mean())),
+            ("stddev", Json::num(self.stddev())),
+            ("min", Json::num(self.min())),
+            ("max", Json::num(self.max())),
+            ("p50", Json::num(self.p50())),
+            ("p95", Json::num(self.p95())),
+            ("p99", Json::num(self.p99())),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -251,6 +270,23 @@ mod tests {
         assert_eq!(s.percentile(150.0), 9.0);
         assert!(s.percentile(f64::NAN).is_nan());
         assert!(s.percentile(f64::INFINITY).is_nan());
+    }
+
+    #[test]
+    fn to_json_round_trips_even_when_empty() {
+        let mut s = Summary::new();
+        for i in 1..=4 {
+            s.add(i as f64);
+        }
+        let parsed = Json::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("count"), Some(&Json::Int(4)));
+        assert_eq!(parsed.get("p50"), Some(&Json::Num(2.5)));
+        // empty summary: ±inf extrema and NaN percentiles must become
+        // null, not invalid JSON
+        let empty = Summary::new().to_json().pretty();
+        let parsed = Json::parse(&empty).unwrap();
+        assert_eq!(parsed.get("min"), Some(&Json::Null));
+        assert_eq!(parsed.get("p99"), Some(&Json::Null));
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn config(shards: usize, policy: DispatchPolicy, queue_cap: usize) -> FleetConfi
         policy,
         batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
         queue_cap,
+        ..FleetConfig::default()
     }
 }
 

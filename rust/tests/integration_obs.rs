@@ -1,0 +1,288 @@
+//! Observability acceptance: the simulator's per-phase profile must sum
+//! to exactly the figures `SimStats` reports, the fleet's metrics
+//! registry must agree with the dispatcher's own accounting, and both
+//! export formats (Prometheus text, Chrome trace-event JSON) must be
+//! well-formed enough to round-trip through a parser.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+use apu::compiler::{pipeline, CostModel, PipelineOptions};
+use apu::coordinator::{
+    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, SloReport, SubmitError,
+    SyntheticLoad,
+};
+use apu::nn::zoo;
+use apu::obs::metrics::Registry;
+use apu::obs::trace::Tracer;
+use apu::sim::{Apu, ApuConfig, SimProfile, SimStats};
+use apu::util::json::Json;
+use apu::util::rng::Rng;
+
+/// Compile a zoo network, run it with profiling, and return the profile
+/// plus the simulator's own stats and the per-layer names.
+fn profiled_run(
+    net: &apu::nn::Network,
+    model: &CostModel,
+    runs: usize,
+) -> (SimProfile, SimStats, Vec<String>) {
+    let compiled = pipeline::compile_network(net, model, &PipelineOptions::default()).unwrap();
+    let mut sim = Apu::new(model.apu_config());
+    sim.load(&compiled.program).unwrap();
+    sim.enable_profiling();
+    let mut rng = Rng::new(99);
+    for _ in 0..runs {
+        let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        sim.run(&x).unwrap();
+    }
+    let stats = sim.stats().clone();
+    let profile = sim.take_profile().unwrap();
+    let names = compiled.cost.layers.iter().map(|l| l.name.clone()).collect();
+    (profile, stats, names)
+}
+
+/// The acceptance invariant: profile totals are *exactly* (bitwise, for
+/// the f64 energy fields) the stats the simulator reports — for both
+/// reference networks, including alexnet-nano's §4.4.3-II host folds.
+#[test]
+fn profile_totals_equal_simstats_exactly() {
+    let model = CostModel::nano_4pe();
+    for (net, runs) in [(zoo::alexnet_nano(), 2), (zoo::vgg_nano(), 3)] {
+        let (profile, stats, _) = profiled_run(&net, &model, runs);
+        profile.check_against(&stats).unwrap_or_else(|e| {
+            panic!("{}: profile diverged from SimStats: {e:#}", net.name);
+        });
+        assert_eq!(profile.totals().inferences, runs as u64, "{}", net.name);
+        // the per-layer decomposition also covers every cycle
+        let by_layer = profile.by_layer();
+        let cycles: u64 = by_layer.values().map(|s| s.total_cycles()).sum();
+        assert_eq!(cycles, stats.total_cycles(), "{}: per-layer cycle sum", net.name);
+        let pj: f64 = by_layer.values().map(|s| s.total_pj()).sum();
+        assert!((pj - stats.total_pj()).abs() < 1e-6 * stats.total_pj().max(1.0), "{}", net.name);
+    }
+}
+
+#[test]
+fn profile_table_names_layers_and_round_trips_as_chrome_trace() {
+    let model = CostModel::nano_4pe();
+    let (profile, stats, names) = profiled_run(&zoo::vgg_nano(), &model, 1);
+    let table = profile.table(&names);
+    for name in &names {
+        assert!(table.contains(name.as_str()), "table missing layer {name}:\n{table}");
+    }
+    assert!(table.contains("TOTAL"), "{table}");
+
+    let clock = model.apu_config().clock_ghz;
+    let json = profile.chrome_trace(clock).pretty();
+    let parsed = Json::parse(&json).unwrap();
+    let events = match parsed.path("traceEvents") {
+        Some(Json::Arr(evs)) => evs,
+        other => panic!("traceEvents missing: {other:?}"),
+    };
+    assert!(!events.is_empty());
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in events {
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap();
+        assert!(ts >= last_ts, "trace not sorted by ts");
+        last_ts = ts;
+        assert!(ev.get("dur").and_then(|d| d.as_f64()).unwrap() >= 0.0);
+        assert_eq!(ev.get("ph"), Some(&Json::Str("X".into())));
+    }
+    // total simulated time appears on the trace's clock mapping: the
+    // last event must end within the run's total cycles
+    let end_us = stats.total_cycles() as f64 / (clock * 1e3);
+    assert!(last_ts <= end_us + 1e-6);
+}
+
+/// An engine that blocks until released (to force rejections) — the
+/// registry's counters must match the dispatcher's accounting exactly.
+#[test]
+fn fleet_registry_agrees_with_dispatcher_accounting() {
+    struct Stalled(mpsc::Receiver<()>);
+    impl Engine for Stalled {
+        fn name(&self) -> &str {
+            "stalled"
+        }
+        fn input_dim(&self) -> usize {
+            1
+        }
+        fn output_dim(&self) -> usize {
+            1
+        }
+        fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            let _ = self.0.recv();
+            Ok(inputs.to_vec())
+        }
+    }
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let gate = Mutex::new(Some(gate_rx));
+    let reg = Arc::new(Registry::new());
+    let fleet = Fleet::start(
+        FleetConfig {
+            shards: 1,
+            policy: DispatchPolicy::JoinShortestQueue,
+            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
+            queue_cap: 4,
+            metrics: Arc::clone(&reg),
+            ..FleetConfig::default()
+        },
+        move |_| Ok(Box::new(Stalled(gate.lock().unwrap().take().unwrap())) as Box<dyn Engine>),
+    )
+    .unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..32 {
+        match fleet.submit(vec![0.25]) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::Rejected { shard, depth, cap }) => {
+                assert_eq!(shard, 0);
+                assert_eq!(cap, 4);
+                assert!(depth >= cap);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(rejected > 0, "saturation must reject");
+    for _ in 0..accepted.len() {
+        let _ = gate_tx.send(());
+    }
+    for rx in &accepted {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.completed(), accepted.len() as u64);
+    assert_eq!(m.rejected(), rejected);
+    // registry == dispatcher, counter for counter
+    assert_eq!(reg.counter_total("apu_fleet_completed_total"), m.completed());
+    assert_eq!(reg.counter_total("apu_fleet_rejected_total"), m.rejected());
+    assert_eq!(reg.counter_total("apu_fleet_enqueued_total"), accepted.len() as u64);
+    assert_eq!(reg.counter_total("apu_fleet_engine_errors_total"), 0);
+}
+
+/// A healthy multi-shard run: per-shard registry counters sum to the
+/// fleet totals, the SLO export lands in the same registry, and the
+/// Prometheus exposition is structurally valid (cumulative buckets).
+#[test]
+fn fleet_metrics_export_prometheus_and_json() {
+    let reg = Arc::new(Registry::new());
+    let fleet = Fleet::start(
+        FleetConfig {
+            shards: 2,
+            policy: DispatchPolicy::RoundRobin,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            queue_cap: 1024,
+            metrics: Arc::clone(&reg),
+            ..FleetConfig::default()
+        },
+        |shard| {
+            let layers = synthetic_packed_network(&[64, 40, 12], 4, 4, 300 + shard as u64)?;
+            let program = compile_packed_layers("obs-it", &layers, 0.15, 4, 4)?;
+            let sim = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
+            Ok(Box::new(ApuEngine::new(sim, &program)?) as Box<dyn Engine>)
+        },
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let mut load = SyntheticLoad::new(1e6, 31);
+    let n = 40u64;
+    let rxs: Vec<_> = (0..n).map(|_| fleet.submit(load.next_input(64)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.completed(), n);
+    assert_eq!(reg.counter_total("apu_fleet_completed_total"), n);
+    // per-shard series match per-shard dispatcher accounting
+    for (i, sh) in m.shards.iter().enumerate() {
+        let s = i.to_string();
+        let got = reg.counter_value("apu_fleet_completed_total", &[("shard", s.as_str())]);
+        assert_eq!(got, sh.completed, "shard {i}");
+    }
+    let report = SloReport::from_metrics(&m, t0.elapsed());
+    report.export(&reg);
+
+    let text = reg.render_prometheus();
+    assert!(text.contains("# TYPE apu_fleet_completed_total counter"), "{text}");
+    assert!(text.contains("# TYPE apu_fleet_request_latency_us histogram"), "{text}");
+    assert!(text.contains("apu_slo_p99_us{shard=\"fleet\"}"), "{text}");
+    // bucket cumulativity for shard 0's latency histogram: counts never
+    // decrease and the +Inf bucket equals the series count
+    let prefix = "apu_fleet_request_latency_us_bucket{shard=\"0\",le=\"";
+    let mut prev = 0u64;
+    let mut last = 0u64;
+    let mut saw_inf = false;
+    for line in text.lines().filter(|l| l.starts_with(prefix)) {
+        let (le, count) = line[prefix.len()..].split_once("\"} ").unwrap();
+        let count: u64 = count.parse().unwrap();
+        assert!(count >= prev, "bucket le={le} went backwards: {count} < {prev}");
+        prev = count;
+        last = count;
+        saw_inf |= le == "+Inf";
+    }
+    assert!(saw_inf, "no +Inf bucket:\n{text}");
+    let count_line = format!("apu_fleet_request_latency_us_count{{shard=\"0\"}} {last}");
+    assert!(text.contains(&count_line), "count != +Inf bucket:\n{text}");
+
+    // the JSON dump parses back and carries the same totals
+    let parsed = Json::parse(&reg.to_json().pretty()).unwrap();
+    let fam = parsed.get("apu_fleet_completed_total").expect("family in JSON dump");
+    assert_eq!(fam.path("kind"), Some(&Json::Str("counter".into())));
+}
+
+/// Compiler pass spans and fleet request spans land in one tracer and
+/// export as a single, sorted, parseable Chrome trace.
+#[test]
+fn compiler_and_fleet_spans_share_one_chrome_trace() {
+    let tracer = Tracer::new();
+    let model = CostModel::nano_4pe();
+    let opts = PipelineOptions { tracer: Some(tracer.clone()), ..Default::default() };
+    let compiled = pipeline::compile_network(&zoo::vgg_nano(), &model, &opts).unwrap();
+    let din = compiled.program.din;
+
+    let reg = Arc::new(Registry::new());
+    let fleet = Fleet::start(
+        FleetConfig {
+            shards: 1,
+            policy: DispatchPolicy::RoundRobin,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            queue_cap: 1024,
+            metrics: reg,
+            tracer: Some(tracer.clone()),
+            ..FleetConfig::default()
+        },
+        move |_| Ok(Box::new(ApuEngine::from_compiled(&compiled)?) as Box<dyn Engine>),
+    )
+    .unwrap();
+    let mut load = SyntheticLoad::new(1e6, 17);
+    let rxs: Vec<_> = (0..8).map(|_| fleet.submit(load.next_input(din)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    fleet.shutdown().unwrap();
+
+    let events = tracer.events();
+    for want in ["normalize", "decide_layer", "compress", "emit", "request", "engine-run"] {
+        assert!(events.iter().any(|e| e.name == want), "missing span {want}");
+    }
+    let parsed = Json::parse(&tracer.chrome_trace().pretty()).unwrap();
+    let Some(Json::Arr(evs)) = parsed.path("traceEvents") else {
+        panic!("traceEvents missing");
+    };
+    assert_eq!(evs.len(), events.len());
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in evs {
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap();
+        assert!(ts >= last_ts, "events must be ts-sorted");
+        last_ts = ts;
+    }
+    // request spans carry the enqueue→reply pipeline timestamps
+    let req = evs
+        .iter()
+        .find(|e| e.get("name") == Some(&Json::Str("request".into())))
+        .expect("a request span");
+    for key in ["enqueue_us", "dequeue_us", "engine_start_us", "engine_end_us", "reply_us"] {
+        assert!(req.path(&format!("args/{key}")).is_some(), "request span missing {key}");
+    }
+}
