@@ -1,17 +1,24 @@
 //! Bench: the simulator + coordinator hot paths (the §Perf targets).
 //! Not a paper figure — this is the performance-optimization harness.
+//!
+//! `--json <path>` writes the results as a machine-readable report
+//! (via `util::bench::write_report`) so CI can track the perf trajectory.
 
 use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
 use apu::pruning::Quantizer;
 use apu::sim::{Apu, ApuConfig};
-use apu::util::bench::{bench, budget};
+use apu::util::bench::{bench, budget, write_report, BenchResult};
 
 fn main() {
+    let json_path = json_arg();
+    let mut results: Vec<BenchResult> = Vec::new();
+
     // LeNet-class network (the e2e artifact shape).
     let layers = synthetic_packed_network(&[800, 300, 100, 10], 10, 4, 7).unwrap();
     let program = compile_packed_layers("lenet-shape", &layers, 0.15, 4, 10).unwrap();
     let mut apu = Apu::new(ApuConfig::default());
     apu.load(&program).unwrap();
+    assert!(apu.is_planned(), "lenet-shape should take the planned path");
     let input: Vec<f32> = (0..800).map(|i| ((i % 15) as f32 - 7.0) * 0.1).collect();
 
     let r = bench("sim/lenet_inference", budget(), || apu.run(&input).unwrap()[0]);
@@ -20,6 +27,15 @@ fn main() {
     println!("  {:.0} sim cycles/inference -> {:.1} M sim-cycles/s", cycles, r.per_second(cycles) / 1e6);
     let macs = apu.stats().macs as f64 / apu.stats().inferences as f64;
     println!("  {:.1} M MACs/s simulated", r.per_second(macs) / 1e6);
+    results.push(r);
+
+    // Same network through the batched executor: one plan walk per layer-step,
+    // 32 inferences per call. ns/iter here divided by 32 is the per-inference cost.
+    let batch: Vec<&[f32]> = vec![input.as_slice(); 32];
+    let r = bench("sim/lenet_inference_batch32", budget(), || apu.run_batch(&batch).unwrap().len());
+    println!("{}", r.report());
+    println!("  {:.0} ns/inference amortized over batch of 32", r.mean_ns / 32.0);
+    results.push(r);
 
     // big-block single layer (PE inner loop dominated)
     let layers = synthetic_packed_network(&[4000, 4000], 10, 4, 3).unwrap();
@@ -30,11 +46,38 @@ fn main() {
     let r = bench("sim/fc4000_inference", budget(), || apu.run(&big).unwrap()[0]);
     println!("{}", r.report());
     println!("  {:.1} M MACs/s simulated", r.per_second(1_600_000.0) / 1e6);
+    results.push(r);
 
-    // quantizer kernel
+    // quantizer kernel: scalar call per value vs. the vectorized slice path
     let q = Quantizer::new(4, 0.1);
     let xs: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.37).sin()).collect();
     let r = bench("quant/4096_values", budget(), || xs.iter().map(|&x| q.fake(x)).sum::<f32>());
     println!("{}", r.report());
     println!("  {:.1} M quants/s", r.per_second(4096.0) / 1e6);
+    results.push(r);
+
+    let mut buf = xs.clone();
+    let r = bench("quant/4096_values_slice", budget(), || {
+        buf.copy_from_slice(&xs);
+        q.fake_slice(&mut buf);
+        buf[0]
+    });
+    println!("{}", r.report());
+    println!("  {:.1} M quants/s (slice path, incl. refill copy)", r.per_second(4096.0) / 1e6);
+    results.push(r);
+
+    if let Some(path) = json_path {
+        write_report(&path, &results).unwrap();
+        println!("wrote {path}");
+    }
+}
+
+fn json_arg() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return Some(args.next().expect("--json requires a path"));
+        }
+    }
+    None
 }

@@ -9,5 +9,10 @@ cargo build --release --examples
 # SimStats (the command fails if the invariant breaks).
 ./target/release/apu profile --net vgg-nano --machine nano
 cargo test -q
+# Perf smoke: the hot-path benches must run, and the machine-readable
+# report tracks the perf trajectory from PR 5 onward (short budget —
+# this guards against rot, not noise-free numbers).
+APU_BENCH_MS=60 cargo bench --bench sim_hotpath -- --json BENCH_7.json
+test -s BENCH_7.json
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings

@@ -1,5 +1,7 @@
 //! Code emission: packed layers → executable APU program.
 
+use std::borrow::Cow;
+
 use anyhow::{bail, Result};
 
 use crate::isa::{DataSegment, HostOpKind, Insn, Program};
@@ -23,16 +25,17 @@ pub(crate) fn input_chunks(din: usize, n: usize) -> Vec<Vec<u32>> {
 }
 
 /// Merge producer groups onto `n_pes` crossbar wires (folded layers own
-/// more blocks than wires; wire = block mod n_pes).
-pub(crate) fn merge_by_wire(groups: &[Vec<u32>], n_pes: usize) -> Vec<Vec<u32>> {
+/// more blocks than wires; wire = block mod n_pes). Borrows when the
+/// groups already fit the wires — no copy on the common path.
+pub(crate) fn merge_by_wire(groups: &[Vec<u32>], n_pes: usize) -> Cow<'_, [Vec<u32>]> {
     if groups.len() <= n_pes {
-        return groups.to_vec();
+        return Cow::Borrowed(groups);
     }
     let mut merged = vec![Vec::new(); n_pes];
     for (g, grp) in groups.iter().enumerate() {
         merged[g % n_pes].extend_from_slice(grp);
     }
-    merged
+    Cow::Owned(merged)
 }
 
 /// Compile a stack of packed FC layers into an executable program.
@@ -70,7 +73,7 @@ pub fn compile_packed_layers(
     let q_seg = p.push_data(DataSegment::F32(vec![in_scale, bits as f32]));
     p.insns.push(Insn::HostOp { op: crate::isa::HostOpKind::Quantize, seg: q_seg });
 
-    let mut producers = input_chunks(layers[0].structure.din, n_pes);
+    let mut producers: Cow<'_, [Vec<u32>]> = Cow::Owned(input_chunks(layers[0].structure.din, n_pes));
     for (li, layer) in layers.iter().enumerate() {
         // Imported bundles are packed to fit one PE by construction:
         // unbounded tile caps keep this path untiled.
@@ -101,20 +104,21 @@ pub fn compile_packed_layers(
 /// both apply exactly once. Pass caps at least as large as the block
 /// (e.g. `usize::MAX`) for the untiled fast path.
 ///
-/// Returns this layer's producer groups for the next layer. Shared by
-/// [`compile_packed_layers`] and the graph pipeline
-/// (`compiler::pipeline`).
+/// Returns this layer's producer groups for the next layer — borrowed
+/// straight from the layer's block structure on the untiled path (no
+/// per-layer copy). Shared by [`compile_packed_layers`] and the graph
+/// pipeline (`compiler::pipeline`).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn emit_packed_fc(
+pub(crate) fn emit_packed_fc<'a>(
     p: &mut Program,
     layer_id: u16,
-    layer: &PackedLayer,
+    layer: &'a PackedLayer,
     producers: &[Vec<u32>],
     from_input: bool,
     n_pes: usize,
     pe_h: usize,
     pe_w: usize,
-) -> Result<Vec<Vec<u32>>> {
+) -> Result<Cow<'a, [Vec<u32>]>> {
     let s = &layer.structure;
     let producers = merge_by_wire(producers, n_pes);
     let (bh, bw) = (s.bh(), s.bw());
@@ -190,9 +194,9 @@ pub(crate) fn emit_packed_fc(
     if tw > 1 {
         emit_fold_epilogue(p, tw, layer.relu, layer.out_scale[0], layer.bits);
         // Folded outputs are host-owned: chunk them across wires.
-        return Ok(input_chunks(s.dout, n_pes));
+        return Ok(Cow::Owned(input_chunks(s.dout, n_pes)));
     }
-    Ok(s.row_groups.clone())
+    Ok(Cow::Borrowed(s.row_groups.as_slice()))
 }
 
 /// Emit the §4.4.3-II layer epilogue: fold each named partial buffer

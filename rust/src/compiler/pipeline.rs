@@ -840,7 +840,8 @@ fn emit_program(
     let q_seg = p.push_data(DataSegment::F32(vec![opts.in_scale, model.bits as f32]));
     p.insns.push(Insn::HostOp { op: HostOpKind::Quantize, seg: q_seg });
 
-    let mut producers = input_chunks(din, n_pes);
+    let mut producers: std::borrow::Cow<'_, [Vec<u32>]> =
+        std::borrow::Cow::Owned(input_chunks(din, n_pes));
     let mut from_input = true;
     for (li, low) in lowered.iter().enumerate() {
         match low {
@@ -857,7 +858,7 @@ fn emit_program(
                 )?;
             }
             Lowered::Conv(cv) => {
-                producers = emit_conv(&mut p, li as u16, cv, n_pes)?;
+                producers = std::borrow::Cow::Owned(emit_conv(&mut p, li as u16, cv, n_pes)?);
             }
             Lowered::Pool { h, w, c, window, stride } => {
                 let seg = p.push_data(DataSegment::F32(vec![
@@ -870,7 +871,7 @@ fn emit_program(
                 p.insns.push(Insn::HostOp { op: HostOpKind::MaxPool, seg });
                 let oh = (h - window) / stride + 1;
                 let ow = (w - window) / stride + 1;
-                producers = input_chunks(oh * ow * c, n_pes);
+                producers = std::borrow::Cow::Owned(input_chunks(oh * ow * c, n_pes));
             }
         }
         from_input = false;

@@ -25,8 +25,9 @@ pub struct ApuEngine {
 }
 
 impl ApuEngine {
-    pub fn new(mut apu: Apu, program: &crate::isa::Program) -> Result<ApuEngine> {
-        apu.load(program)?;
+    pub fn new(mut apu: Apu, program: impl crate::sim::IntoProgramArc) -> Result<ApuEngine> {
+        let program = program.into_program_arc();
+        apu.load(std::sync::Arc::clone(&program))?;
         Ok(ApuEngine { apu, din: program.din, dout: program.dout, name: format!("apu-sim:{}", program.name) })
     }
 
@@ -57,7 +58,11 @@ impl Engine for ApuEngine {
     }
 
     fn infer_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        inputs.iter().map(|x| self.apu.run(x)).collect()
+        // One planned run_batch call per flushed batch: the plan's
+        // layer-steps execute across all lanes (falls back to sequential
+        // interpretation when the program has no plan).
+        let refs: Vec<&[f32]> = inputs.iter().map(|x| x.as_slice()).collect();
+        self.apu.run_batch(&refs)
     }
 }
 

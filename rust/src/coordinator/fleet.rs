@@ -120,6 +120,7 @@ pub(super) struct ShardInstruments {
     pub(super) queue_depth: Gauge,
     pub(super) latency_us: Histogram,
     pub(super) batch_size: Histogram,
+    pub(super) engine_calls: Counter,
     pub(super) full_flushes: Counter,
     pub(super) deadline_flushes: Counter,
     pub(super) drain_flushes: Counter,
@@ -165,6 +166,11 @@ impl ShardInstruments {
                 "apu_fleet_batch_size",
                 "requests per released batch",
                 &metrics::batch_buckets(),
+                l,
+            ),
+            engine_calls: reg.counter(
+                "apu_fleet_engine_calls_total",
+                "engine invocations (one run_batch per flushed batch)",
                 l,
             ),
             full_flushes: reg.counter(
@@ -571,6 +577,7 @@ pub(super) fn serve_loop(
         let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.input.clone()).collect();
         let t0 = Instant::now();
         let engine_start_us = tracer.map(|t| t.now_us()).unwrap_or(0.0);
+        ins.engine_calls.inc();
         let result = engine.infer_batch(&inputs);
         let engine_time = t0.elapsed();
         let engine_end_us = tracer.map(|t| t.now_us()).unwrap_or(0.0);

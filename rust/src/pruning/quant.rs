@@ -42,10 +42,27 @@ impl Quantizer {
         code as f32 * self.scale
     }
 
-    /// Quantize-dequantize: snap to the INT-k grid.
+    /// Quantize-dequantize: snap to the INT-k grid. Stays in the float
+    /// domain (round, clamp, rescale — no int round-trip), which is the
+    /// form the compiler auto-vectorizes; for every finite input the
+    /// result is bitwise identical to `dequantize(quantize(x))` because
+    /// the clamped code is an integer ≤ 32767, exact in f32 either way.
     #[inline]
     pub fn fake(&self, x: f32) -> f32 {
-        self.dequantize(self.quantize(x))
+        let q = Self::qmax(self.bits) as f32;
+        round_half_even_f32(x / self.scale).clamp(-q, q) * self.scale
+    }
+
+    /// Snap a whole buffer to the INT-k grid in place — the hot-loop form
+    /// of [`Quantizer::fake`] (PE output quantizers, host `Quantize`
+    /// ops). One round/clamp/mul lane per element, no data dependence
+    /// between lanes, so LLVM vectorizes it; elementwise it is the exact
+    /// same expression as the scalar path.
+    pub fn fake_slice(&self, xs: &mut [f32]) {
+        let q = Self::qmax(self.bits) as f32;
+        for x in xs.iter_mut() {
+            *x = round_half_even_f32(*x / self.scale).clamp(-q, q) * self.scale;
+        }
     }
 }
 
@@ -64,6 +81,29 @@ fn round_half_even(x: f32) -> i32 {
         f
     } else {
         f + 1
+    }
+}
+
+/// [`round_half_even`] without the int round-trip: same tie-to-even
+/// semantics, result kept in f32 so the caller can clamp/rescale in the
+/// float domain. Agrees with the int path on every finite input: ties
+/// (`diff == 0.5`) only exist below 2^23 where `floor as i64` is exact,
+/// and NaN maps to 0 exactly like the saturating `as i32` cast.
+#[inline]
+fn round_half_even_f32(x: f32) -> f32 {
+    if x.is_nan() {
+        return 0.0;
+    }
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
     }
 }
 
@@ -124,6 +164,38 @@ mod tests {
     fn all_zero_calibration_is_safe() {
         let q = Quantizer::calibrate(4, &[0.0; 8]);
         assert_eq!(q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn fake_agrees_with_int_round_trip_bitwise() {
+        // `fake` now stays in the float domain; it must still equal the
+        // int-path reference on a dense sweep that crosses every tie.
+        for bits in [2u32, 4, 8, 16] {
+            for &scale in &[0.1f32, 0.25, 0.37, 1.0] {
+                let q = Quantizer::new(bits, scale);
+                let mut x = -9.0f32;
+                while x < 9.0 {
+                    let via_int = q.dequantize(q.quantize(x));
+                    assert_eq!(q.fake(x).to_bits(), via_int.to_bits(), "bits={bits} scale={scale} x={x}");
+                    x += 0.001953125; // 2^-9: hits exact .5/scale ties
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fake_slice_matches_scalar_fake_bitwise() {
+        let mut rng = Rng::new(13);
+        let q = Quantizer::new(4, 0.37);
+        let mut xs: Vec<f32> = (0..4096).map(|_| rng.normal() * 2.0).collect();
+        xs.extend([0.5 * 0.37, -0.5 * 0.37, 1.5 * 0.37, 100.0, -100.0, 0.0, f32::NAN]);
+        let want: Vec<f32> = xs.iter().map(|&x| q.fake(x)).collect();
+        q.fake_slice(&mut xs);
+        for (i, (&g, &w)) in xs.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "element {i}");
+        }
+        // NaN input snaps to code 0, same as the saturating int cast
+        assert_eq!(q.fake(f32::NAN), 0.0);
     }
 
     #[test]

@@ -21,10 +21,39 @@
 //! compile-time constants. Bias rides column tile 0 and ReLU/output
 //! quantization run as host ops after the last fold, so they apply
 //! exactly once.
+//!
+//! ## Plan/execute split (what is amortized vs. charged per inference)
+//!
+//! `load` does the work that is identical for every inference exactly
+//! once: program validation, residency analysis, and — via
+//! [`super::plan::ExecPlan::build`] — segment decoding (routes, perms,
+//! weight codes, bias, scales), crossbar conflict/latch/ownership
+//! checking, per-layer PE configuration images, and the *charge tape*:
+//! the exact cycle/energy/MAC sequence one inference books (possible
+//! because every simulator charge depends only on program structure,
+//! never on activation values). `run`/`run_batch` then execute the
+//! pre-decoded steps over reusable scratch buffers (cleared, never
+//! reallocated) and replay the tape per inference, producing
+//! [`SimStats`]/[`SimProfile`] accumulations bitwise identical to the
+//! reference interpreter ([`Apu::run_reference`]).
+//!
+//! Still charged per inference, exactly as before: route/compute/host
+//! cycles and energy, and — for *streamed* programs whose weights
+//! exceed PE SRAM residency — the per-run weight DMA (the VGGFC6
+//! folding dip), which rides the tape's `weight-stream` entries. The
+//! one-time resident weight DMA stays charged at `load` (`load_pj`).
+//!
+//! Programs whose shape the planner does not support (including any
+//! program that would fail at run time) fall back to the interpreter
+//! transparently: `load` keeps `exec = None` and `run` behaves — errors,
+//! charges, and all — exactly as it always did.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use super::pe::PeUnit;
+use super::plan::{ExecPlan, ExecStep, StreamState, WaveScratch};
 use super::profile::{Phase, SimProfile};
 use crate::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
 use crate::isa::{DataSegment, HostOpKind, Insn, Program};
@@ -114,12 +143,45 @@ impl SimStats {
 }
 
 #[derive(Debug, Clone)]
-struct Plan {
-    program: Program,
+struct LoadedProgram {
+    program: Arc<Program>,
     /// Total resident weight bits (one-time DMA).
     weight_bits: u64,
     /// True if weights exceed residency: stream per run.
     streamed: bool,
+    /// Pre-decoded execution plan; `None` falls back to the interpreter.
+    exec: Option<ExecPlan>,
+}
+
+/// Program handles [`Apu::load`] accepts: an owned or shared program is
+/// taken without copying; `&Program` clones once (the historical
+/// behavior, kept so existing call sites stay source-compatible).
+pub trait IntoProgramArc {
+    fn into_program_arc(self) -> Arc<Program>;
+}
+
+impl IntoProgramArc for Arc<Program> {
+    fn into_program_arc(self) -> Arc<Program> {
+        self
+    }
+}
+
+impl IntoProgramArc for &Arc<Program> {
+    fn into_program_arc(self) -> Arc<Program> {
+        Arc::clone(self)
+    }
+}
+
+impl IntoProgramArc for Program {
+    fn into_program_arc(self) -> Arc<Program> {
+        Arc::new(self)
+    }
+}
+
+impl IntoProgramArc for &Program {
+    fn into_program_arc(self) -> Arc<Program> {
+        Arc::new(self.clone())
+    }
 }
 
 /// The simulated machine.
@@ -129,7 +191,7 @@ pub struct Apu {
     tech: Tech,
     pes: Vec<PeUnit>,
     crossbar: MuxCrossbar,
-    plan: Option<Plan>,
+    plan: Option<LoadedProgram>,
     stats: SimStats,
     /// Committed activations (the routing phase's source stream).
     acts: Vec<f32>,
@@ -146,6 +208,14 @@ pub struct Apu {
     /// Optional per-charge profile mirror (see [`SimProfile`]); `None`
     /// keeps the hot path allocation-free.
     profile: Option<SimProfile>,
+    /// Per-element value state for the planned executor (one per batch
+    /// lane, grown on demand, buffers reused across runs).
+    streams: Vec<StreamState>,
+    /// Shared latch/output scratch for planned waves.
+    scratch: WaveScratch,
+    /// Rows computed by the planned executor, per PE (the interpreter's
+    /// counterpart lives in each [`PeUnit`]).
+    planned_rows: Vec<u64>,
 }
 
 #[derive(Debug, Clone)]
@@ -162,6 +232,7 @@ impl Apu {
     pub fn new(cfg: ApuConfig) -> Apu {
         let pes = (0..cfg.n_pes).map(|_| PeUnit::new(cfg.pe_sram_bits)).collect();
         let crossbar = MuxCrossbar::new(cfg.n_pes);
+        let planned_rows = vec![0u64; cfg.n_pes];
         Apu {
             cfg,
             tech: Tech::tsmc16(),
@@ -176,6 +247,9 @@ impl Apu {
             partial: std::collections::BTreeMap::new(),
             cur: None,
             profile: None,
+            streams: Vec::new(),
+            scratch: WaveScratch::default(),
+            planned_rows,
         }
     }
 
@@ -208,20 +282,40 @@ impl Apu {
         self.profile.take()
     }
 
-    /// Lifetime rows computed per PE (utilization accounting).
+    /// Lifetime rows computed per PE (utilization accounting). Sums the
+    /// interpreter's per-PE counters with the planned executor's.
     pub fn pe_rows_computed(&self) -> Vec<u64> {
-        self.pes.iter().map(|pe| pe.rows_computed()).collect()
+        self.pes
+            .iter()
+            .zip(&self.planned_rows)
+            .map(|(pe, &planned)| pe.rows_computed() + planned)
+            .collect()
     }
 
-    /// Book `cycles`/`pj`/`macs` into `phase`, mirroring the identical
-    /// increments into the profile (same values, same order — so profile
-    /// totals stay bitwise equal to `self.stats`).
+    /// Book `cycles`/`pj`/`macs` into `phase`, attributing to the current
+    /// layer context (interpreter path).
     fn charge(&mut self, phase: Phase, detail: &'static str, cycles: u64, pj: f64, macs: u64) {
+        let layer = self.cur.as_ref().map(|c| c.layer_id);
+        self.charge_at(layer, phase, detail, cycles, pj, macs);
+    }
+
+    /// Book a charge against an explicit layer, mirroring the identical
+    /// increments into the profile (same values, same order — so profile
+    /// totals stay bitwise equal to `self.stats`). Tape replay calls this
+    /// directly with the plan-time layer attribution.
+    fn charge_at(
+        &mut self,
+        layer: Option<u16>,
+        phase: Phase,
+        detail: &'static str,
+        cycles: u64,
+        pj: f64,
+        macs: u64,
+    ) {
         if cycles == 0 && pj == 0.0 && macs == 0 {
             return;
         }
         if let Some(p) = self.profile.as_mut() {
-            let layer = self.cur.as_ref().map(|c| c.layer_id);
             let start = self.stats.total_cycles();
             p.charge(layer, phase, detail, start, cycles, pj, macs);
         }
@@ -247,8 +341,14 @@ impl Apu {
     }
 
     /// Validate and load a program; charges the one-time weight DMA when
-    /// the network fits residency, else marks it streamed.
-    pub fn load(&mut self, program: &Program) -> Result<()> {
+    /// the network fits residency, else marks it streamed. Compiles the
+    /// program into a resident [`ExecPlan`] for the fast path; programs
+    /// the planner rejects run on the reference interpreter instead.
+    ///
+    /// Accepts `&Program` (clones once, as before), or an owned /
+    /// `Arc<Program>` to load without copying.
+    pub fn load(&mut self, program: impl IntoProgramArc) -> Result<()> {
+        let program = program.into_program_arc();
         program.validate()?;
         let mut per_pe_bits = vec![0u64; self.cfg.n_pes];
         let mut weight_bits = 0u64;
@@ -284,19 +384,117 @@ impl Apu {
             self.stats.load_pj += self.tech.dram_pj(weight_bits as usize)
                 + self.tech.sram_write_pj(weight_bits as usize, self.cfg.pe_sram_bits);
         }
-        self.plan = Some(Plan { program: program.clone(), weight_bits, streamed });
+        let exec = ExecPlan::build(&program, &self.cfg, &self.tech, streamed).ok();
+        self.plan = Some(LoadedProgram { program, weight_bits, streamed, exec });
         Ok(())
     }
 
     /// Execute one inference over the loaded program.
     pub fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
         let plan = self.plan.take().context("no program loaded")?;
+        let result = if plan.exec.is_some() {
+            self.run_planned(&plan, &[input])
+                .map(|mut outs| outs.pop().expect("one output per input"))
+        } else {
+            self.run_inner(&plan, input)
+        };
+        self.plan = Some(plan);
+        result
+    }
+
+    /// Execute a whole batch, layer-step by layer-step: each pre-decoded
+    /// plan step runs across all lanes before the next (weights are
+    /// resident or, when streamed, charged per inference via the tape —
+    /// identical to `inputs.len()` sequential `run` calls, bitwise, in
+    /// outputs, [`SimStats`] and [`SimProfile`]). Without a plan this
+    /// falls back to exactly those sequential runs.
+    ///
+    /// One difference from sequential runs on the planned path: inputs
+    /// are validated up front, so a bad length anywhere in the batch
+    /// fails the whole batch before any charge.
+    pub fn run_batch(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let plan = self.plan.take().context("no program loaded")?;
+        let result = if plan.exec.is_some() {
+            self.run_planned(&plan, inputs)
+        } else {
+            inputs.iter().map(|&input| self.run_inner(&plan, input)).collect()
+        };
+        self.plan = Some(plan);
+        result
+    }
+
+    /// Execute one inference on the reference interpreter, bypassing the
+    /// execution plan. The planner is cross-checked against this path.
+    pub fn run_reference(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let plan = self.plan.take().context("no program loaded")?;
         let result = self.run_inner(&plan, input);
         self.plan = Some(plan);
         result
     }
 
-    fn run_inner(&mut self, plan: &Plan, input: &[f32]) -> Result<Vec<f32>> {
+    /// Whether the loaded program runs on the pre-decoded plan (vs. the
+    /// interpreter fallback).
+    pub fn is_planned(&self) -> bool {
+        self.plan.as_ref().is_some_and(|p| p.exec.is_some())
+    }
+
+    /// Planned executor: run every batch lane through the pre-decoded
+    /// steps, then replay the charge tape once per inference.
+    fn run_planned(&mut self, plan: &LoadedProgram, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let exec = plan.exec.as_ref().expect("run_planned without exec plan");
+        let p = &plan.program;
+        for input in inputs {
+            if input.len() != p.din {
+                bail!("input len {} != program din {}", input.len(), p.din);
+            }
+        }
+        let n = inputs.len();
+        if self.streams.len() < n {
+            self.streams.resize_with(n, StreamState::default);
+        }
+        for (st, input) in self.streams.iter_mut().zip(inputs) {
+            st.acts.clear();
+            st.acts.extend_from_slice(input);
+            st.pending.clear();
+            if st.partial.len() < exec.n_partial_slots {
+                st.partial.resize_with(exec.n_partial_slots, Vec::new);
+            }
+        }
+        for step in &exec.steps {
+            match step {
+                ExecStep::Commit => {
+                    for st in self.streams.iter_mut().take(n) {
+                        std::mem::swap(&mut st.acts, &mut st.pending);
+                        st.pending.clear();
+                    }
+                }
+                ExecStep::Wave(w) => {
+                    for st in self.streams.iter_mut().take(n) {
+                        w.apply(st, &mut self.scratch, &mut self.planned_rows);
+                    }
+                }
+                ExecStep::Host(h) => {
+                    for st in self.streams.iter_mut().take(n) {
+                        h.apply(st);
+                    }
+                }
+            }
+        }
+        // Replay the charge tape per inference: same values, same order
+        // as the interpreter, so stats/profile stay bitwise identical.
+        for _ in 0..n {
+            for e in &exec.tape {
+                self.charge_at(e.layer, e.phase, e.detail, e.cycles, e.pj, e.macs);
+            }
+            self.stats.inferences += 1;
+            if let Some(pr) = self.profile.as_mut() {
+                pr.count_inference();
+            }
+        }
+        Ok(self.streams.iter_mut().take(n).map(|st| std::mem::take(&mut st.acts)).collect())
+    }
+
+    fn run_inner(&mut self, plan: &LoadedProgram, input: &[f32]) -> Result<Vec<f32>> {
         let p = &plan.program;
         if input.len() != p.din {
             bail!("input len {} != program din {}", input.len(), p.din);
@@ -395,7 +593,7 @@ impl Apu {
         if self.acts.len() != p.dout {
             bail!("program produced {} outputs, expected {}", self.acts.len(), p.dout);
         }
-        Ok(self.acts.clone())
+        Ok(std::mem::take(&mut self.acts))
     }
 
     /// Commit accumulated wave scatters into the visible stream.
@@ -915,6 +1113,110 @@ mod tests {
         assert!(!taken.is_empty());
         assert!(apu.profile().is_none());
         assert!(apu.pe_rows_computed().iter().sum::<u64>() > 0);
+    }
+
+    /// Planned execution must be indistinguishable from the interpreter:
+    /// bitwise-equal outputs, equal stats, equal profile records.
+    fn assert_planned_matches_reference(cfg: ApuConfig, program: &Program, input: &[f32]) {
+        let mut fast = Apu::new(cfg.clone());
+        let mut refr = Apu::new(cfg);
+        fast.load(program).unwrap();
+        refr.load(program).unwrap();
+        assert!(fast.is_planned(), "planner rejected a supported program");
+        fast.enable_profiling();
+        refr.enable_profiling();
+        let got = fast.run(input).unwrap();
+        let want = refr.run_reference(input).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "output {i}: {g} vs {w}");
+        }
+        assert_eq!(fast.stats(), refr.stats());
+        assert_eq!(fast.profile().unwrap().records(), refr.profile().unwrap().records());
+        fast.profile().unwrap().check_against(fast.stats()).unwrap();
+        assert_eq!(fast.pe_rows_computed(), refr.pe_rows_computed());
+    }
+
+    #[test]
+    fn planned_run_matches_reference_bitwise() {
+        let (layers, input) = two_layer_fixture(41);
+        let in_scale = Quantizer::calibrate(4, &input).scale;
+        let program = compile_packed_layers("fixture", &layers, in_scale, 4, 4).unwrap();
+        let cfg = ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 };
+        assert_planned_matches_reference(cfg, &program, &input);
+    }
+
+    #[test]
+    fn planned_folded_and_streamed_match_reference_bitwise() {
+        let (layers, input) = two_layer_fixture(42);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 2).unwrap();
+        // folded waves, resident
+        let cfg = ApuConfig { n_pes: 2, pe_sram_bits: 1 << 16, clock_ghz: 1.0 };
+        assert_planned_matches_reference(cfg, &program, &input);
+        // streamed: weight DMA charged per inference via the tape
+        let cfg = ApuConfig { n_pes: 2, pe_sram_bits: 100, clock_ghz: 1.0 };
+        let mut apu = Apu::new(cfg.clone());
+        apu.load(&program).unwrap();
+        assert!(apu.is_streamed() && apu.is_planned());
+        assert_planned_matches_reference(cfg, &program, &input);
+    }
+
+    #[test]
+    fn run_batch_equals_sequential_runs_bitwise() {
+        let (layers, input) = two_layer_fixture(43);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 4).unwrap();
+        let mk = || {
+            let mut a = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+            a.load(&program).unwrap();
+            a.enable_profiling();
+            a
+        };
+        let inputs: Vec<Vec<f32>> = (0..5)
+            .map(|k| input.iter().map(|&x| x * (1.0 + k as f32 * 0.1)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut batched = mk();
+        let got = batched.run_batch(&refs).unwrap();
+        let mut seq = mk();
+        let want: Vec<Vec<f32>> = refs.iter().map(|&x| seq.run(x).unwrap()).collect();
+        assert_eq!(got, want);
+        assert_eq!(batched.stats(), seq.stats());
+        assert_eq!(batched.stats().inferences, 5);
+        assert_eq!(batched.profile().unwrap().records(), seq.profile().unwrap().records());
+        // empty batch: no charges, no outputs
+        let before = batched.stats().clone();
+        assert!(batched.run_batch(&[]).unwrap().is_empty());
+        assert_eq!(batched.stats(), &before);
+    }
+
+    #[test]
+    fn planner_falls_back_to_interpreter_on_unsupported_programs() {
+        // FoldAdd of a never-created buffer: plan build fails, load still
+        // succeeds, and run reports the interpreter's original error.
+        let mut p = Program { name: "fa".into(), din: 2, dout: 2, ..Default::default() };
+        let seg = p.push_data(DataSegment::F32(vec![1.0]));
+        p.insns = vec![Insn::HostOp { op: HostOpKind::FoldAdd, seg }, Insn::Halt];
+        let mut apu = Apu::new(ApuConfig::default());
+        apu.load(&p).unwrap();
+        assert!(!apu.is_planned());
+        assert!(apu.run(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn load_accepts_owned_and_shared_programs() {
+        let (layers, input) = two_layer_fixture(44);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 4).unwrap();
+        let cfg = ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 };
+        let shared = std::sync::Arc::new(program.clone());
+        let mut a = Apu::new(cfg.clone());
+        a.load(std::sync::Arc::clone(&shared)).unwrap(); // Arc: no copy
+        let mut b = Apu::new(cfg.clone());
+        b.load(&shared).unwrap(); // &Arc
+        let mut c = Apu::new(cfg);
+        c.load(program).unwrap(); // owned: no copy
+        let x = a.run(&input).unwrap();
+        assert_eq!(x, b.run(&input).unwrap());
+        assert_eq!(x, c.run(&input).unwrap());
     }
 
     #[test]

@@ -12,8 +12,9 @@
 
 pub mod apu;
 pub mod pe;
+mod plan;
 pub mod profile;
 
-pub use apu::{host_maxpool, Apu, ApuConfig, SimStats};
+pub use apu::{host_maxpool, Apu, ApuConfig, IntoProgramArc, SimStats};
 pub use pe::PeUnit;
 pub use profile::{Phase, PhaseRecord, SimProfile};

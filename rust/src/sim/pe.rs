@@ -71,9 +71,14 @@ impl PeUnit {
         self.relu = relu;
         self.codes.clear();
         self.bias.clear();
-        self.latch = vec![0.0; bw];
-        self.latch_filled = vec![false; bw];
-        self.out = vec![0.0; bh];
+        // clear+resize keeps each buffer's capacity across layers —
+        // reconfiguring never reallocates once warmed up
+        self.latch.clear();
+        self.latch.resize(bw, 0.0);
+        self.latch_filled.clear();
+        self.latch_filled.resize(bw, false);
+        self.out.clear();
+        self.out.resize(bh, 0.0);
         Ok(())
     }
 
@@ -81,11 +86,12 @@ impl PeUnit {
         if codes.len() != self.bh * self.bw {
             bail!("weight segment {} != {}x{}", codes.len(), self.bh, self.bw);
         }
-        let q = Quantizer::qmax(self.bits) as i32;
+        let q = Quantizer::qmax(self.bits);
         if let Some(&c) = codes.iter().find(|&&c| (c as i32).abs() > q) {
             bail!("weight code {c} exceeds INT{} range", self.bits);
         }
-        self.codes = codes.to_vec();
+        self.codes.clear();
+        self.codes.extend_from_slice(codes);
         Ok(())
     }
 
@@ -93,7 +99,8 @@ impl PeUnit {
         if bias.len() != self.bh {
             bail!("bias segment {} != bh {}", bias.len(), self.bh);
         }
-        self.bias = bias.to_vec();
+        self.bias.clear();
+        self.bias.extend_from_slice(bias);
         Ok(())
     }
 

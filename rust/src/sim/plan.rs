@@ -1,0 +1,813 @@
+//! Pre-decoded execution plans: the load-time compile step behind
+//! [`super::Apu`]'s hot path.
+//!
+//! [`ExecPlan::build`] runs a *symbolic* pass over the program — the same
+//! control flow as the reference interpreter (`Apu::run_reference`), but
+//! over buffer lengths and ownership tags instead of values. Everything
+//! the interpreter validates per run (segment types and shapes, crossbar
+//! drive/select conflicts, latch coverage, scatter ownership,
+//! partial-buffer completeness, the final output length) is checked once
+//! here; everything it decodes per run (routes, permutations, weight
+//! codes, biases, scales, host-op parameters) is resolved into a flat
+//! [`ExecStep`] list the executor replays with no per-run decoding or
+//! checks.
+//!
+//! Because every cycle/energy charge in the simulator depends only on
+//! program structure — never on activation values — the builder also
+//! records the exact charge sequence one inference books as a
+//! [`TapeEntry`] tape, computed with the interpreter's own f64
+//! expressions in the interpreter's order. Replaying the tape per
+//! inference produces `SimStats`/`SimProfile` accumulations bitwise
+//! identical to the interpreter's.
+//!
+//! The builder is deliberately conservative: any program shape it does
+//! not recognize (including every shape the interpreter would reject at
+//! run time) makes `build` fail, and `Apu::load` falls back to the
+//! reference interpreter for that program — behavior, including error
+//! messages and their timing, stays exactly what it always was.
+
+use anyhow::{bail, Context, Result};
+
+use super::apu::{host_maxpool, ApuConfig};
+use super::profile::Phase;
+use crate::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
+use crate::isa::{HostOpKind, Insn, Program};
+use crate::pruning::Quantizer;
+
+/// One charge the interpreter would book for a single inference,
+/// replayed verbatim through `Apu::charge_at` (all-zero charges are
+/// elided at build time, mirroring the live `charge` early-out).
+#[derive(Debug, Clone)]
+pub(crate) struct TapeEntry {
+    pub layer: Option<u16>,
+    pub phase: Phase,
+    pub detail: &'static str,
+    pub cycles: u64,
+    pub pj: f64,
+    pub macs: u64,
+}
+
+/// One latch write of the routing phase: committed activation `act`
+/// lands in flattened latch slot `dst` (= `pe * bw + slot`).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RouteMove {
+    pub act: u32,
+    pub dst: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum ScatterTarget {
+    /// The layer's pending buffer (`buf == 0`).
+    Pending,
+    /// Named partial-sum buffer, densely remapped to a scratch slot.
+    Partial(usize),
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ScatterExec {
+    pub target: ScatterTarget,
+    /// First scatter into this incarnation of the buffer: zero-fill it.
+    pub init: bool,
+    pub dout: usize,
+    /// `perm[g*bh + i]` = global output index of PE g's row i.
+    pub perm: Vec<u32>,
+}
+
+/// Per-PE decoded state for one wave (weight codes, bias, scales applied
+/// from the plan image — no per-run segment decode or range checks).
+#[derive(Debug, Clone)]
+pub(crate) struct WavePe {
+    pub codes: Vec<i8>,
+    /// May be shorter than `bh` (column tiles carry no bias); missing
+    /// rows read as 0.0, same as the PE datapath.
+    pub bias: Vec<f32>,
+    pub w_scale: f32,
+    /// `None` bypasses the output quantizer (`out_scale == 0`).
+    pub quant: Option<Quantizer>,
+}
+
+/// One ConfigLayer wave: route moves, the MAC phase, and its scatters.
+#[derive(Debug, Clone)]
+pub(crate) struct WaveExec {
+    pub nb: usize,
+    pub bh: usize,
+    pub bw: usize,
+    pub relu: bool,
+    pub pes: Vec<WavePe>,
+    pub moves: Vec<RouteMove>,
+    pub scatters: Vec<ScatterExec>,
+}
+
+/// Pre-decoded host-core op (parameters resolved at plan time).
+#[derive(Debug, Clone)]
+pub(crate) enum HostStep {
+    Relu,
+    Quantize(Quantizer),
+    MaxPool { h: usize, w: usize, c: usize, win: usize, stride: usize },
+    /// Fold partial-sum scratch slot into the activation stream.
+    FoldAdd(usize),
+    /// Gather indices; `-1` = implicit zero (padded conv planes).
+    Gather(Vec<i64>),
+    Dense { w: Vec<f32>, b: Vec<f32>, din: usize, relu: bool },
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum ExecStep {
+    /// Commit pending wave scatters into the visible stream (emitted
+    /// only where the pending buffer is provably non-empty).
+    Commit,
+    Wave(Box<WaveExec>),
+    Host(HostStep),
+}
+
+/// Per-inference value state of one planned stream. A batch keeps one
+/// per element; buffers are cleared between runs, never reallocated.
+#[derive(Debug, Default)]
+pub(crate) struct StreamState {
+    pub acts: Vec<f32>,
+    pub pending: Vec<f32>,
+    pub partial: Vec<Vec<f32>>,
+}
+
+/// Flat latch/output scratch shared by all streams (reset per wave).
+#[derive(Debug, Default)]
+pub(crate) struct WaveScratch {
+    pub latch: Vec<f32>,
+    pub out: Vec<f32>,
+}
+
+/// A program compiled for repeated execution: flat steps + charge tape.
+#[derive(Debug, Clone)]
+pub(crate) struct ExecPlan {
+    pub steps: Vec<ExecStep>,
+    pub tape: Vec<TapeEntry>,
+    pub n_partial_slots: usize,
+}
+
+impl ExecPlan {
+    /// Compile `program` (already `validate()`d) into an execution plan,
+    /// or fail if the program's shape is unsupported / would error at
+    /// run time — the caller then falls back to the interpreter.
+    pub(crate) fn build(
+        program: &Program,
+        cfg: &ApuConfig,
+        tech: &Tech,
+        streamed: bool,
+    ) -> Result<ExecPlan> {
+        Builder {
+            program,
+            cfg,
+            tech,
+            streamed,
+            steps: Vec::new(),
+            tape: Vec::new(),
+            acts: SymBuf::fresh(program.din),
+            pending: None,
+            partial: std::collections::BTreeMap::new(),
+            slot_of_buf: std::collections::BTreeMap::new(),
+            cur: None,
+            wave: None,
+            pe_scales: vec![(1.0, 1.0); cfg.n_pes],
+        }
+        .run()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builder (symbolic interpreter)
+// ---------------------------------------------------------------------------
+
+/// Symbolic per-layer context — mirrors the interpreter's `LayerCtx`.
+struct Ctx {
+    layer: u16,
+    nb: usize,
+    bh: usize,
+    bw: usize,
+    bits: u32,
+    relu: bool,
+    scales_loaded: usize,
+}
+
+/// Wave under construction.
+struct WaveBuild {
+    /// Decoded codes/bias per PE `g < nb` until `Compute` consumes them.
+    codes: Vec<Option<Vec<i8>>>,
+    bias: Vec<Option<Vec<f32>>>,
+    moves: Vec<RouteMove>,
+    scatters: Vec<ScatterExec>,
+    /// Latch coverage of the most recent route (`nb * bw`).
+    filled: Vec<bool>,
+    /// Set at `Compute`: the finalized per-PE images.
+    exec_pes: Option<Vec<WavePe>>,
+}
+
+/// Symbolic buffer: length + per-element owner PE tag.
+struct SymBuf {
+    len: usize,
+    owner: Vec<u16>,
+}
+
+impl SymBuf {
+    fn fresh(len: usize) -> SymBuf {
+        SymBuf { len, owner: vec![u16::MAX; len] }
+    }
+}
+
+struct Builder<'a> {
+    program: &'a Program,
+    cfg: &'a ApuConfig,
+    tech: &'a Tech,
+    streamed: bool,
+    steps: Vec<ExecStep>,
+    tape: Vec<TapeEntry>,
+    acts: SymBuf,
+    pending: Option<SymBuf>,
+    /// Live partial buffers: buf id → (symbolic buffer, scratch slot).
+    partial: std::collections::BTreeMap<u16, (SymBuf, usize)>,
+    /// Stable buf-id → scratch-slot assignment (slots survive folds so a
+    /// re-created buffer reuses its storage).
+    slot_of_buf: std::collections::BTreeMap<u16, usize>,
+    cur: Option<Ctx>,
+    wave: Option<WaveBuild>,
+    /// Persistent per-PE (w_scale, out_scale), as `SetScales` left them.
+    pe_scales: Vec<(f32, f32)>,
+}
+
+impl Builder<'_> {
+    fn run(mut self) -> Result<ExecPlan> {
+        for insn in &self.program.insns {
+            match insn {
+                Insn::ConfigLayer { layer, nb, bh, bw, bits, relu } => {
+                    self.finish_wave()?;
+                    if self.cur.as_ref().map(|c| c.layer) != Some(*layer) {
+                        self.commit();
+                    }
+                    let (nb, bh, bw) = (*nb as usize, *bh as usize, *bw as usize);
+                    if nb > self.cfg.n_pes {
+                        bail!("plan: wave has {nb} blocks but machine has {} PEs", self.cfg.n_pes);
+                    }
+                    // qmax/Quantizer panic below 2 bits: leave those
+                    // panics on the interpreter path, don't plan them.
+                    if *bits < 2 {
+                        bail!("plan: sub-2-bit layer");
+                    }
+                    // PeUnit::configure's SRAM capacity check
+                    let need = bh.checked_mul(bw).and_then(|x| x.checked_mul(*bits as usize));
+                    match need {
+                        Some(n) if n <= self.cfg.pe_sram_bits => {}
+                        _ => bail!("plan: block exceeds PE SRAM"),
+                    }
+                    self.cur = Some(Ctx {
+                        layer: *layer,
+                        nb,
+                        bh,
+                        bw,
+                        bits: *bits as u32,
+                        relu: *relu,
+                        scales_loaded: 0,
+                    });
+                    self.wave = Some(WaveBuild {
+                        codes: vec![None; nb],
+                        bias: vec![None; nb],
+                        moves: Vec::new(),
+                        scatters: Vec::new(),
+                        filled: vec![false; nb * bw],
+                        exec_pes: None,
+                    });
+                }
+                Insn::LoadWeights { pe, seg } => self.load_weights(*pe, *seg)?,
+                Insn::LoadBias { pe, seg } => self.load_bias(*pe, *seg)?,
+                Insn::SetScales { pe, seg } => self.set_scales(*pe, *seg)?,
+                Insn::Route { seg, from_input } => self.route(*seg, *from_input)?,
+                Insn::Compute { rows } => self.compute(*rows as usize)?,
+                Insn::Scatter { seg, buf } => self.scatter(*seg, *buf)?,
+                Insn::HostOp { op, seg } => {
+                    self.finish_wave()?;
+                    self.commit();
+                    self.host_op(*op, *seg)?;
+                }
+                Insn::HostDense { w_seg, b_seg, relu } => {
+                    self.finish_wave()?;
+                    self.commit();
+                    self.host_dense(*w_seg, *b_seg, *relu)?;
+                }
+                Insn::Halt => break,
+            }
+        }
+        self.finish_wave()?;
+        self.commit();
+        if !self.partial.is_empty() {
+            bail!("plan: program ends with unfolded partial buffers");
+        }
+        if self.acts.len != self.program.dout {
+            bail!("plan: program produces {} outputs, expected {}", self.acts.len, self.program.dout);
+        }
+        Ok(ExecPlan { steps: self.steps, tape: self.tape, n_partial_slots: self.slot_of_buf.len() })
+    }
+
+    /// Append a charge, eliding all-zero charges like `Apu::charge`.
+    fn push_tape(
+        &mut self,
+        layer: Option<u16>,
+        phase: Phase,
+        detail: &'static str,
+        cycles: u64,
+        pj: f64,
+        macs: u64,
+    ) {
+        if cycles == 0 && pj == 0.0 && macs == 0 {
+            return;
+        }
+        self.tape.push(TapeEntry { layer, phase, detail, cycles, pj, macs });
+    }
+
+    fn charge_host(&mut self, detail: &'static str, ops: usize) {
+        let layer = self.cur.as_ref().map(|c| c.layer);
+        self.push_tape(layer, Phase::Host, detail, ops as u64, ops as f64 * self.tech.host_pj_per_op, 0);
+    }
+
+    /// Symbolic `commit_pending`: emits a `Commit` step only when the
+    /// pending buffer is non-empty (the interpreter's call is a no-op
+    /// otherwise — including for a zero-length pending buffer).
+    fn commit(&mut self) {
+        if self.pending.as_ref().is_some_and(|p| p.len != 0) {
+            self.acts = self.pending.take().unwrap();
+            self.steps.push(ExecStep::Commit);
+        }
+    }
+
+    /// Close the wave in flight: a computed-and-scattered wave becomes an
+    /// `ExecStep::Wave`; a wave with no compute is a value no-op and is
+    /// dropped (its route charges, if any, are already on the tape).
+    fn finish_wave(&mut self) -> Result<()> {
+        let Some(w) = self.wave.take() else { return Ok(()) };
+        match w.exec_pes {
+            None => Ok(()),
+            Some(_) if w.scatters.is_empty() => {
+                // Computed but never published: the interpreter would
+                // still bump PE row counters — fall back rather than
+                // diverge on the utilization metric.
+                bail!("plan: computed wave without scatter")
+            }
+            Some(pes) => {
+                let ctx = self.cur.as_ref().context("plan: wave without layer ctx")?;
+                self.steps.push(ExecStep::Wave(Box::new(WaveExec {
+                    nb: ctx.nb,
+                    bh: ctx.bh,
+                    bw: ctx.bw,
+                    relu: ctx.relu,
+                    pes,
+                    moves: w.moves,
+                    scatters: w.scatters,
+                })));
+                Ok(())
+            }
+        }
+    }
+
+    fn load_weights(&mut self, pe: u16, seg: u16) -> Result<()> {
+        let codes = self.program.segment(seg)?.as_i8()?;
+        let ctx = self.cur.as_ref().context("plan: LoadWeights before ConfigLayer")?;
+        let (nb, bh, bw, bits, layer) = (ctx.nb, ctx.bh, ctx.bw, ctx.bits, ctx.layer);
+        if self.streamed {
+            let sbits = codes.len() * bits as usize;
+            let pj = self.tech.dram_pj(sbits) + self.tech.sram_write_pj(sbits, self.cfg.pe_sram_bits);
+            self.push_tape(Some(layer), Phase::Stream, "weight-stream", (sbits as u64).div_ceil(64), pj, 0);
+        }
+        if pe as usize >= nb {
+            bail!("plan: LoadWeights to unconfigured PE {pe}");
+        }
+        if codes.len() != bh * bw {
+            bail!("plan: weight segment {} != {bh}x{bw}", codes.len());
+        }
+        let q = Quantizer::qmax(bits);
+        if codes.iter().any(|&c| (c as i32).abs() > q) {
+            bail!("plan: weight code exceeds INT{bits} range");
+        }
+        let wave = self.wave.as_mut().context("plan: LoadWeights outside a wave")?;
+        if wave.exec_pes.is_some() {
+            bail!("plan: LoadWeights after Compute in one wave");
+        }
+        wave.codes[pe as usize] = Some(codes.to_vec());
+        Ok(())
+    }
+
+    fn load_bias(&mut self, pe: u16, seg: u16) -> Result<()> {
+        let b = self.program.segment(seg)?.as_f32()?;
+        let ctx = self.cur.as_ref().context("plan: LoadBias before ConfigLayer")?;
+        if pe as usize >= ctx.nb {
+            bail!("plan: LoadBias to unconfigured PE {pe}");
+        }
+        if b.len() != ctx.bh {
+            bail!("plan: bias segment {} != bh {}", b.len(), ctx.bh);
+        }
+        let wave = self.wave.as_mut().context("plan: LoadBias outside a wave")?;
+        if wave.exec_pes.is_some() {
+            bail!("plan: LoadBias after Compute in one wave");
+        }
+        wave.bias[pe as usize] = Some(b.to_vec());
+        Ok(())
+    }
+
+    fn set_scales(&mut self, pe: u16, seg: u16) -> Result<()> {
+        let s = self.program.segment(seg)?.as_f32()?;
+        if s.len() != 2 {
+            bail!("plan: scales segment must be [w_scale, out_scale]");
+        }
+        // Exactly PeUnit::set_scales' rejection condition; anything it
+        // accepts (including NaN scales) flows through value-identically.
+        if s[0] <= 0.0 || s[1] < 0.0 {
+            bail!("plan: bad scales");
+        }
+        let slot = self.pe_scales.get_mut(pe as usize).context("plan: SetScales PE out of range")?;
+        *slot = (s[0], s[1]);
+        if let Some(c) = self.cur.as_mut() {
+            c.scales_loaded += 1;
+        }
+        Ok(())
+    }
+
+    /// Symbolic routing phase: replicates the interpreter's cycle loop —
+    /// same grouping by the schedule's `cycle` field, same per-group f64
+    /// energy accumulation, same crossbar conflict and latch checks.
+    fn route(&mut self, seg: u16, from_input: bool) -> Result<()> {
+        let routes = self.program.segment(seg)?.as_routes()?;
+        let n_pes = self.cfg.n_pes;
+        let ctx = self.cur.as_ref().context("plan: Route before ConfigLayer")?;
+        let (nb, bh, bw, layer) = (ctx.nb, ctx.bh, ctx.bw, ctx.layer);
+        let bits = ctx.bits as usize;
+        if ctx.scales_loaded < nb {
+            bail!("plan: Route before all PE scales loaded");
+        }
+        let src_read = if from_input {
+            self.tech.dram_pj(bits)
+        } else {
+            self.tech.sram_read_pj(bits, (bh * bits).max(1))
+        };
+        let pj_per_route = src_read
+            + self.tech.mux_pj_per_bit * bits as f64
+            + bits as f64 * self.tech.latch_pj_per_bit;
+        let wave = self.wave.as_mut().context("plan: Route outside a wave")?;
+        if wave.exec_pes.is_some() {
+            bail!("plan: Route after Compute in one wave");
+        }
+        wave.filled.fill(false); // clear_latch
+        let mut n_cycles = 0u32;
+        let mut phase_pj = 0.0f64;
+        let mut i = 0usize;
+        let mut driven: Vec<Option<u32>> = vec![None; n_pes];
+        let mut selected: Vec<Option<(usize, u32)>> = vec![None; n_pes];
+        while i < routes.len() {
+            let cycle = routes[i].cycle;
+            driven.fill(None);
+            selected.fill(None);
+            let mut j = i;
+            while j < routes.len() && routes[j].cycle == cycle {
+                let a = routes[j];
+                let act = a.act as usize;
+                if act >= self.acts.len {
+                    bail!("plan: route references activation {act} beyond buffer");
+                }
+                if !from_input {
+                    let owner = self.acts.owner[act];
+                    if owner != u16::MAX && owner != a.src % n_pes as u16 {
+                        bail!("plan: route ownership conflict on act {act}");
+                    }
+                }
+                let wire = a.src as usize % n_pes;
+                if driven[wire].is_some() {
+                    bail!("plan: wire {wire} driven twice in one cycle");
+                }
+                driven[wire] = Some(a.act);
+                let dst = a.dst as usize;
+                if dst >= n_pes {
+                    bail!("plan: route dst {dst} out of range");
+                }
+                if selected[dst].is_some() {
+                    bail!("plan: PE {dst} selects twice in one cycle");
+                }
+                selected[dst] = Some((wire, a.dst_slot));
+                j += 1;
+            }
+            phase_pj += pj_per_route * (j - i) as f64;
+            for (dst, sel) in selected.iter().enumerate() {
+                let Some((wire, slot)) = *sel else { continue };
+                if dst >= nb {
+                    bail!("plan: route targets unconfigured PE {dst}");
+                }
+                let slot = slot as usize;
+                if slot >= bw {
+                    bail!("plan: latch slot {slot} out of range {bw}");
+                }
+                let f = &mut wave.filled[dst * bw + slot];
+                if *f {
+                    bail!("plan: latch slot written twice this wave");
+                }
+                *f = true;
+                let act = driven[wire].context("plan: selected idle wire")?;
+                wave.moves.push(RouteMove { act, dst: (dst * bw + slot) as u32 });
+            }
+            n_cycles += 1;
+            i = j;
+        }
+        self.push_tape(Some(layer), Phase::Route, "route", n_cycles as u64, phase_pj, 0);
+        Ok(())
+    }
+
+    fn compute(&mut self, rows: usize) -> Result<()> {
+        let ctx = self.cur.as_ref().context("plan: Compute before ConfigLayer")?;
+        let (nb, bh, bw, bits, layer) = (ctx.nb, ctx.bh, ctx.bw, ctx.bits, ctx.layer);
+        if rows != bh {
+            bail!("plan: Compute rows {rows} != configured bh {bh}");
+        }
+        let wave = self.wave.as_mut().context("plan: Compute outside a wave")?;
+        if wave.exec_pes.is_some() {
+            bail!("plan: repeated Compute in one wave");
+        }
+        if !wave.filled.iter().all(|&f| f) {
+            bail!("plan: Compute with unfilled latch slots");
+        }
+        let mut pes = Vec::with_capacity(nb);
+        for g in 0..nb {
+            let codes = wave.codes[g].take().context("plan: Compute before weights loaded")?;
+            let bias = wave.bias[g].take().unwrap_or_default();
+            let (w_scale, out_scale) = self.pe_scales[g];
+            let quant = if out_scale > 0.0 { Some(Quantizer::new(bits, out_scale)) } else { None };
+            pes.push(WavePe { codes, bias, w_scale, quant });
+        }
+        wave.exec_pes = Some(pes);
+        let pe_cfg = PeConfig { block_h: bh, block_w: bw, bits };
+        let per_cycle = pe_energy_per_cycle(self.tech, &pe_cfg, PeMode::Spatial).total();
+        self.push_tape(
+            Some(layer),
+            Phase::Compute,
+            "compute",
+            rows as u64,
+            per_cycle * rows as f64 * nb as f64,
+            (nb * bh * bw) as u64,
+        );
+        Ok(())
+    }
+
+    fn scatter(&mut self, seg: u16, buf: u16) -> Result<()> {
+        let seg = self.program.segment(seg)?.as_u32()?;
+        let ctx = self.cur.as_ref().context("plan: Scatter before ConfigLayer")?;
+        let (nb, bh) = (ctx.nb, ctx.bh);
+        let (dout, perm) = seg.split_first().context("plan: empty scatter segment")?;
+        let dout = *dout as usize;
+        if perm.len() != nb * bh {
+            bail!("plan: scatter perm len {} != {nb}x{bh}", perm.len());
+        }
+        // Resolve the symbolic target (+ zero-init on first scatter).
+        // The interpreter's pending-init test is `pending.is_empty()`,
+        // so a zero-length pending buffer re-initializes too.
+        let (target, init) = if buf == 0 {
+            let init = !self.pending.as_ref().is_some_and(|p| p.len != 0);
+            if init {
+                self.pending = Some(SymBuf::fresh(dout));
+            }
+            (ScatterTarget::Pending, init)
+        } else {
+            let next = self.slot_of_buf.len();
+            let slot = *self.slot_of_buf.entry(buf).or_insert(next);
+            let init = !self.partial.contains_key(&buf);
+            if init {
+                self.partial.insert(buf, (SymBuf::fresh(dout), slot));
+            }
+            (ScatterTarget::Partial(slot), init)
+        };
+        let sym = match target {
+            ScatterTarget::Pending => self.pending.as_mut().unwrap(),
+            ScatterTarget::Partial(_) => &mut self.partial.get_mut(&buf).unwrap().0,
+        };
+        if sym.len != dout {
+            bail!("plan: wave scatter dout {dout} != target buffer {} (buf {buf})", sym.len);
+        }
+        for g in 0..nb {
+            for i in 0..bh {
+                let global = perm[g * bh + i] as usize;
+                if global >= dout {
+                    bail!("plan: scatter index {global} out of range {dout}");
+                }
+                if sym.owner[global] != u16::MAX {
+                    bail!("plan: scatter writes activation {global} twice (buffer {buf})");
+                }
+                sym.owner[global] = g as u16;
+            }
+        }
+        let wave = self.wave.as_mut().context("plan: Scatter outside a wave")?;
+        if wave.exec_pes.is_none() {
+            bail!("plan: Scatter before Compute");
+        }
+        wave.scatters.push(ScatterExec { target, init, dout, perm: perm.to_vec() });
+        Ok(())
+    }
+
+    fn host_op(&mut self, op: HostOpKind, seg: u16) -> Result<()> {
+        let params = self.program.segment(seg)?.as_f32()?;
+        let len = self.acts.len;
+        match op {
+            HostOpKind::Relu => {
+                // owners unchanged: values stay where they were
+                self.steps.push(ExecStep::Host(HostStep::Relu));
+                self.charge_host("relu", len);
+            }
+            HostOpKind::Quantize => {
+                let scale = *params.first().context("plan: Quantize needs [scale]")?;
+                let bits = params.get(1).map(|&b| b as u32).unwrap_or(4);
+                // Quantizer::new would panic on these — keep that panic
+                // on the interpreter path instead of planning it.
+                if scale <= 0.0 || scale.is_nan() || bits < 2 {
+                    bail!("plan: invalid Quantize params");
+                }
+                self.steps.push(ExecStep::Host(HostStep::Quantize(Quantizer::new(bits, scale))));
+                self.acts.owner.fill(u16::MAX);
+                self.charge_host("quantize", len);
+            }
+            HostOpKind::MaxPool => {
+                let [h, w, c, win, stride] = params else {
+                    bail!("plan: MaxPool needs [h, w, c, window, stride]");
+                };
+                let (h, w, c, win, stride) =
+                    (*h as usize, *w as usize, *c as usize, *win as usize, *stride as usize);
+                let plane = h.checked_mul(w).and_then(|x| x.checked_mul(c));
+                if plane != Some(len) || win == 0 || stride == 0 || win > h || win > w {
+                    bail!("plan: invalid MaxPool geometry");
+                }
+                let out_len = ((h - win) / stride + 1) * ((w - win) / stride + 1) * c;
+                self.steps.push(ExecStep::Host(HostStep::MaxPool { h, w, c, win, stride }));
+                self.charge_host("maxpool", out_len * (2 * win * win - 1));
+                self.acts = SymBuf::fresh(out_len);
+            }
+            HostOpKind::FoldAdd => {
+                let &[src] = params else {
+                    bail!("plan: FoldAdd params must be [src_buf]");
+                };
+                if !src.is_finite() || src.fract() != 0.0 || src < 1.0 || src > u16::MAX as f32 {
+                    bail!("plan: invalid FoldAdd buffer id {src}");
+                }
+                let (sym, slot) = self
+                    .partial
+                    .remove(&(src as u16))
+                    .context("plan: FoldAdd of missing partial buffer")?;
+                if sym.len != len {
+                    bail!("plan: FoldAdd buffer len {} != activation stream {len}", sym.len);
+                }
+                if sym.owner.iter().any(|&o| o == u16::MAX) {
+                    bail!("plan: FoldAdd of incomplete partial buffer");
+                }
+                self.steps.push(ExecStep::Host(HostStep::FoldAdd(slot)));
+                self.charge_host("fold-add", len);
+                self.acts.owner.fill(u16::MAX);
+            }
+            HostOpKind::Gather => {
+                let mut idx = Vec::with_capacity(params.len());
+                for &v in params {
+                    if !v.is_finite() || v.fract() != 0.0 {
+                        bail!("plan: Gather index {v} is not finite/integral");
+                    }
+                    if v < 0.0 {
+                        idx.push(-1i64);
+                        continue;
+                    }
+                    let i = v as usize;
+                    if i >= len {
+                        bail!("plan: Gather index {i} out of range");
+                    }
+                    idx.push(i as i64);
+                }
+                let out_len = idx.len();
+                self.steps.push(ExecStep::Host(HostStep::Gather(idx)));
+                self.charge_host("gather", out_len);
+                self.acts = SymBuf::fresh(out_len);
+            }
+        }
+        Ok(())
+    }
+
+    fn host_dense(&mut self, w_seg: u16, b_seg: u16, relu: bool) -> Result<()> {
+        let w = self.program.segment(w_seg)?.as_f32()?;
+        let b = self.program.segment(b_seg)?.as_f32()?;
+        let din = self.acts.len;
+        let dout = b.len();
+        if w.len() != dout * din {
+            bail!("plan: host dense weight len {} != {dout}x{din}", w.len());
+        }
+        self.steps.push(ExecStep::Host(HostStep::Dense { w: w.to_vec(), b: b.to_vec(), din, relu }));
+        let ops = dout * din;
+        let layer = self.cur.as_ref().map(|c| c.layer);
+        self.push_tape(layer, Phase::Host, "dense", ops as u64, ops as f64 * self.tech.host_pj_per_op, ops as u64);
+        self.acts = SymBuf::fresh(dout);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor
+// ---------------------------------------------------------------------------
+
+impl WaveExec {
+    /// Execute this wave for one stream: latch moves, the MAC phase into
+    /// flat scratch (bitwise the PE datapath: f64 left-to-right dot, f32
+    /// scale + bias, ReLU, grid snap), then the scatters. `rows` is the
+    /// per-PE lifetime row counter.
+    pub(crate) fn apply(&self, st: &mut StreamState, scratch: &mut WaveScratch, rows: &mut [u64]) {
+        let (nb, bh, bw) = (self.nb, self.bh, self.bw);
+        if scratch.latch.len() < nb * bw {
+            scratch.latch.resize(nb * bw, 0.0);
+        }
+        if scratch.out.len() < nb * bh {
+            scratch.out.resize(nb * bh, 0.0);
+        }
+        // Every slot a PE reads was validated as latch-covered at plan
+        // time, so stale scratch lanes are never observed.
+        for m in &self.moves {
+            scratch.latch[m.dst as usize] = st.acts[m.act as usize];
+        }
+        for (g, pe) in self.pes.iter().enumerate() {
+            let latch = &scratch.latch[g * bw..(g + 1) * bw];
+            let out = &mut scratch.out[g * bh..(g + 1) * bh];
+            for (row, o) in out.iter_mut().enumerate() {
+                let base = row * bw;
+                let acc: f64 = pe.codes[base..base + bw]
+                    .iter()
+                    .zip(latch)
+                    .map(|(&c, &a)| c as f64 * a as f64)
+                    .sum();
+                let mut v = acc as f32 * pe.w_scale + pe.bias.get(row).copied().unwrap_or(0.0);
+                if self.relu {
+                    v = v.max(0.0);
+                }
+                *o = v;
+            }
+            if let Some(q) = &pe.quant {
+                q.fake_slice(out);
+            }
+            rows[g] += bh as u64;
+        }
+        for s in &self.scatters {
+            let buf = match s.target {
+                ScatterTarget::Pending => &mut st.pending,
+                ScatterTarget::Partial(slot) => &mut st.partial[slot],
+            };
+            if s.init {
+                buf.clear();
+                buf.resize(s.dout, 0.0);
+            }
+            for (k, &global) in s.perm.iter().enumerate() {
+                buf[global as usize] = scratch.out[k];
+            }
+        }
+    }
+}
+
+impl HostStep {
+    /// Execute this host op for one stream, value-identical to the
+    /// interpreter's `host_op`/`host_dense`. Buffer swaps go through the
+    /// stream's pending scratch so nothing is reallocated per run
+    /// (`MaxPool` allocates its output, as the interpreter does).
+    pub(crate) fn apply(&self, st: &mut StreamState) {
+        match self {
+            HostStep::Relu => {
+                for v in &mut st.acts {
+                    *v = v.max(0.0);
+                }
+            }
+            HostStep::Quantize(q) => q.fake_slice(&mut st.acts),
+            HostStep::MaxPool { h, w, c, win, stride } => {
+                let out = host_maxpool(&st.acts, *h, *w, *c, *win, *stride)
+                    .expect("plan validated maxpool geometry");
+                st.acts = out;
+            }
+            HostStep::FoldAdd(slot) => {
+                let StreamState { acts, partial, .. } = st;
+                for (v, &p) in acts.iter_mut().zip(&partial[*slot]) {
+                    *v += p;
+                }
+            }
+            HostStep::Gather(idx) => {
+                st.pending.clear();
+                st.pending.reserve(idx.len());
+                for &i in idx {
+                    st.pending.push(if i < 0 { 0.0 } else { st.acts[i as usize] });
+                }
+                std::mem::swap(&mut st.acts, &mut st.pending);
+                st.pending.clear();
+            }
+            HostStep::Dense { w, b, din, relu } => {
+                st.pending.clear();
+                st.pending.reserve(b.len());
+                for (r, &bv) in b.iter().enumerate() {
+                    let row = &w[r * din..(r + 1) * din];
+                    let mut acc = 0f32;
+                    for (x, wv) in st.acts.iter().zip(row) {
+                        acc += x * wv;
+                    }
+                    st.pending.push(if *relu { (acc + bv).max(0.0) } else { acc + bv });
+                }
+                std::mem::swap(&mut st.acts, &mut st.pending);
+                st.pending.clear();
+            }
+        }
+    }
+}

@@ -49,7 +49,7 @@ impl Phase {
 
 /// One booked charge: `cycles`/`pj`/`macs` attributed to `layer` starting
 /// at machine cycle `start_cycle` (cumulative across runs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PhaseRecord {
     /// Active layer id, `None` before the first `ConfigLayer` (ingress
     /// host ops).

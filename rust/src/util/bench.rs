@@ -3,6 +3,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// Result of one benchmark.
@@ -28,6 +29,27 @@ impl BenchResult {
     pub fn per_second(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns * 1e-9)
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("iters", Json::Int(self.iters as i64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("stddev_ns", Json::num(self.stddev_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+        ])
+    }
+}
+
+/// Write a machine-readable bench report (one entry per result) — the
+/// perf-trajectory artifact `ci.sh` tracks across PRs.
+pub fn write_report(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("benches", Json::arr(results.iter().map(|r| r.to_json()))),
+        ("budget_ms", Json::Int(budget().as_millis() as i64)),
+    ]);
+    std::fs::write(path, doc.pretty())
 }
 
 /// Time `f` for ~`budget` after a short warmup. `f` returns a value that

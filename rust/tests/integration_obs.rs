@@ -200,6 +200,28 @@ fn fleet_metrics_export_prometheus_and_json() {
         let got = reg.counter_value("apu_fleet_completed_total", &[("shard", s.as_str())]);
         assert_eq!(got, sh.completed, "shard {i}");
     }
+    // one engine run_batch call per flushed batch, no more: the engine
+    // call counter equals total flushes (by reason) and the batch-size
+    // histogram's sample count, per shard and in total
+    let flushes = reg.counter_total("apu_fleet_batch_full_flush_total")
+        + reg.counter_total("apu_fleet_batch_deadline_flush_total")
+        + reg.counter_total("apu_fleet_batch_drain_flush_total");
+    let engine_calls = reg.counter_total("apu_fleet_engine_calls_total");
+    assert_eq!(engine_calls, flushes);
+    assert!(engine_calls > 0 && engine_calls <= n);
+    let text_pre = reg.render_prometheus();
+    let mut hist_count = 0u64;
+    for i in 0..m.shards.len() {
+        let line = format!("apu_fleet_batch_size_count{{shard=\"{i}\"}} ");
+        let c: u64 = text_pre
+            .lines()
+            .find_map(|l| l.strip_prefix(line.as_str()))
+            .expect("batch-size histogram series")
+            .parse()
+            .unwrap();
+        hist_count += c;
+    }
+    assert_eq!(hist_count, engine_calls);
     let report = SloReport::from_metrics(&m, t0.elapsed());
     report.export(&reg);
 
