@@ -8,15 +8,19 @@
 //! 2. Dispatch-policy comparison at 4 shards under a paced Poisson
 //!    arrival process with bounded queues: per-policy p50/p95/p99,
 //!    rejection rate, and queue depth.
+//! 3. Multi-model mix: a two-model catalog fleet (2 shards per model)
+//!    under 80/20 skewed traffic — per-model SLO rows plus the shared
+//!    plan-cache hit/build counters.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use apu::compiler::{compile_packed_layers, synthetic_packed_network};
 use apu::coordinator::{
-    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, SloReport, SubmitError,
-    SyntheticLoad,
+    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, ModelCatalog, ModelId,
+    SloReport, SubmitError, SyntheticLoad,
 };
-use apu::sim::{Apu, ApuConfig};
+use apu::sim::{plan_cache_stats, Apu, ApuConfig};
 use apu::util::table::Table;
 
 const DIMS: [usize; 3] = [128, 96, 10];
@@ -106,4 +110,55 @@ fn main() {
         let metrics = fleet.shutdown().unwrap();
         println!("{}", SloReport::from_metrics(&metrics, elapsed).render());
     }
+
+    // Multi-model mix: one catalog fleet serving two differently-sized
+    // models on their own shard groups, 80/20 skewed traffic.
+    let mut catalog = ModelCatalog::new();
+    let cfg = ApuConfig { n_pes: N_PES, pe_sram_bits: 1 << 20, clock_ghz: 1.0 };
+    for (name, dims, seed) in
+        [("mix-large", &[128usize, 96, 10][..], 2100u64), ("mix-small", &[64, 48, 10][..], 2200)]
+    {
+        let layers = synthetic_packed_network(dims, N_PES, 4, seed).unwrap();
+        let program = compile_packed_layers(name, &layers, 0.15, 4, N_PES).unwrap();
+        catalog.add_program(name, Arc::new(program), cfg.clone()).unwrap();
+    }
+    let dins: Vec<usize> = catalog.iter().map(|(_, e)| e.program.din).collect();
+    let weights = [0.8f32, 0.2];
+    println!("== multi-model mix (2 models x 2 shards, 80/20 traffic, jsq) ==");
+    let fleet = Fleet::start_catalog(
+        FleetConfig {
+            shards: 0, // sized by shards_per_model
+            policy: DispatchPolicy::JoinShortestQueue,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            queue_cap: usize::MAX,
+            ..FleetConfig::default()
+        },
+        Arc::new(catalog),
+        &[2, 2],
+    )
+    .unwrap();
+    let cache = plan_cache_stats();
+    println!("plan cache: {} builds, {} hits, {} entries", cache.builds, cache.hits, cache.entries);
+    let mut load = SyntheticLoad::new(1e9, 99);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let mut pick = load.rng.uniform(0.0, 1.0);
+            let mut m = weights.len() - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if pick < *w {
+                    m = i;
+                    break;
+                }
+                pick -= w;
+            }
+            fleet.submit_to(ModelId(m), load.next_input(dins[m])).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let metrics = fleet.shutdown().unwrap();
+    println!("{}", SloReport::from_metrics(&metrics, elapsed).render());
 }

@@ -11,8 +11,10 @@ cargo build --release --examples
 cargo test -q
 # Perf smoke: the hot-path benches must run, and the machine-readable
 # report tracks the perf trajectory from PR 5 onward (short budget —
-# this guards against rot, not noise-free numbers).
-APU_BENCH_MS=60 cargo bench --bench sim_hotpath -- --json BENCH_7.json
-test -s BENCH_7.json
+# this guards against rot, not noise-free numbers). Override the report
+# path with BENCH_OUT=... when comparing across branches.
+BENCH_OUT=${BENCH_OUT:-BENCH_8.json}
+APU_BENCH_MS=60 cargo bench --bench sim_hotpath -- --json "$BENCH_OUT"
+test -s "$BENCH_OUT"
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings

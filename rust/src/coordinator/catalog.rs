@@ -1,0 +1,256 @@
+//! Model catalog: the fleet's source of truth for *which* models are
+//! being served and *how* each one executes.
+//!
+//! The serving stack used to be single-model end to end — one engine
+//! factory, one program, every shard rebuilding its own execution plan.
+//! A [`ModelCatalog`] turns that into model-keyed serving: each entry
+//! names a model (resolved from a `zoo:<name>` spec or a compiled `.apu`
+//! artifact path), and holds everything N shards need to serve it
+//! without repeating work:
+//!
+//! * the compiled [`Program`] behind one shared [`Arc`],
+//! * the machine model ([`ApuConfig`]) the program was mapped against
+//!   (and that every shard's simulator must be sized to), and
+//! * the shared [`ExecPlan`] resolved once through the process-wide
+//!   plan cache ([`crate::sim::plan`]) — so a fleet of N shards serving
+//!   the same model pays exactly one plan build, not N.
+//!
+//! [`ModelId`] is the request-routing handle: a dense index into the
+//! catalog that [`super::fleet::Fleet::submit_to`] uses to pick the
+//! target model's shard group.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::{pipeline, CostModel, PipelineOptions};
+use crate::isa::Program;
+use crate::sim::{shared_plan, ApuConfig, ExecPlan};
+
+/// Dense handle for a catalog model — what requests carry through the
+/// fleet so the dispatcher can route them to the right shard group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelId(pub usize);
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model#{}", self.0)
+    }
+}
+
+/// One served model: its program, machine, and shared execution plan.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// Human-facing model name (the metrics/SLO label): the canonical
+    /// zoo name, or the program name baked into an `.apu` artifact.
+    pub name: String,
+    /// The spec this entry was resolved from (`zoo:vgg-nano`,
+    /// `prog.apu`, …) — kept for error messages and reports.
+    pub spec: String,
+    /// The compiled program, shared by every shard serving this model.
+    pub program: Arc<Program>,
+    /// The simulator machine the program was mapped against.
+    pub machine: ApuConfig,
+    /// Content fingerprint of `program` (the plan-cache key component).
+    pub fingerprint: u64,
+    /// Shared pre-built execution plan; `None` means the planner
+    /// declined and shards run the reference interpreter.
+    pub plan: Option<Arc<ExecPlan>>,
+}
+
+/// Named model entries resolved once, served by many shards.
+#[derive(Debug, Clone, Default)]
+pub struct ModelCatalog {
+    entries: Vec<ModelEntry>,
+}
+
+impl ModelCatalog {
+    pub fn new() -> ModelCatalog {
+        ModelCatalog::default()
+    }
+
+    /// Resolve a comma-separated or pre-split list of model specs into a
+    /// catalog (the `apu fleet --models a,b,c` entry point).
+    pub fn from_specs<S: AsRef<str>>(specs: &[S], pes_override: Option<usize>) -> Result<ModelCatalog> {
+        let mut cat = ModelCatalog::new();
+        for s in specs {
+            cat.add_spec(s.as_ref(), pes_override)?;
+        }
+        if cat.is_empty() {
+            bail!("model catalog is empty (no specs given)");
+        }
+        Ok(cat)
+    }
+
+    /// Resolve one spec and append it:
+    ///
+    /// * `zoo:<name>` — compile the zoo network through the pipeline.
+    ///   `-nano` networks map onto the nano instance, everything else
+    ///   onto the paper geometry (the same rule `apu fleet --model`
+    ///   always applied); `pes_override` resizes the PE array.
+    /// * anything else — a path to a compiled `.apu` artifact
+    ///   ([`Program::load`]); the machine defaults to the paper silicon
+    ///   instance ([`ApuConfig::default`]) with `pes_override` applied.
+    pub fn add_spec(&mut self, spec: &str, pes_override: Option<usize>) -> Result<ModelId> {
+        if let Some(name) = spec.strip_prefix("zoo:") {
+            let net = crate::nn::zoo::by_name(name).with_context(|| {
+                format!(
+                    "unknown zoo network {name} (available: {})",
+                    crate::nn::zoo::names().join(", ")
+                )
+            })?;
+            let mut machine = if net.name.ends_with("-nano") {
+                CostModel::nano_4pe()
+            } else {
+                CostModel::paper_9pe()
+            };
+            if let Some(pes) = pes_override {
+                machine.n_pes = pes;
+            }
+            let compiled = pipeline::compile_network(&net, &machine, &PipelineOptions::default())
+                .with_context(|| format!("compiling {name} for the catalog"))?;
+            let cfg = machine.apu_config();
+            self.add_named(spec, &net.name, Arc::new(compiled.program), cfg)
+        } else {
+            let program = Program::load(spec)
+                .with_context(|| format!("loading model artifact {spec} (specs are zoo:<name> or a .apu path)"))?;
+            let mut cfg = ApuConfig::default();
+            if let Some(pes) = pes_override {
+                cfg.n_pes = pes;
+            }
+            let name = program.name.clone();
+            self.add_named(spec, &name, Arc::new(program), cfg)
+        }
+    }
+
+    /// Register an already-compiled program under `name` on `machine`
+    /// (tests and benches build catalogs of synthetic programs this
+    /// way). Resolves the shared plan through the process-wide cache.
+    pub fn add_program(
+        &mut self,
+        name: &str,
+        program: Arc<Program>,
+        machine: ApuConfig,
+    ) -> Result<ModelId> {
+        self.add_named(name, name, program, machine)
+    }
+
+    fn add_named(
+        &mut self,
+        spec: &str,
+        name: &str,
+        program: Arc<Program>,
+        machine: ApuConfig,
+    ) -> Result<ModelId> {
+        if self.id_of(name).is_some() {
+            bail!("duplicate model name {name} in catalog (each entry must be unique)");
+        }
+        let fingerprint = program.fingerprint();
+        // One plan build per (program, machine) process-wide; every
+        // shard serving this entry loads the shared Arc.
+        let plan = shared_plan(&program, &machine)
+            .with_context(|| format!("resolving execution plan for {name}"))?;
+        let id = ModelId(self.entries.len());
+        self.entries.push(ModelEntry {
+            name: name.to_string(),
+            spec: spec.to_string(),
+            program,
+            machine,
+            fingerprint,
+            plan,
+        });
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entry lookup; errors (not panics) on a stale/foreign id.
+    pub fn get(&self, id: ModelId) -> Result<&ModelEntry> {
+        self.entries
+            .get(id.0)
+            .with_context(|| format!("{id} out of range (catalog has {} models)", self.entries.len()))
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<ModelId> {
+        self.entries.iter().position(|e| e.name == name).map(ModelId)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ModelId, &ModelEntry)> {
+        self.entries.iter().enumerate().map(|(i, e)| (ModelId(i), e))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Build a serving engine for `id`: a simulator sized to the entry's
+    /// machine, loading the shared program + plan (no plan build, no
+    /// program copy — the whole point of the catalog).
+    pub fn engine(&self, id: ModelId) -> Result<super::engine::ApuEngine> {
+        super::engine::ApuEngine::from_entry(self.get(id)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::emit::{compile_packed_layers, synthetic_packed_network};
+
+    fn test_program(seed: u64, name: &str) -> Arc<Program> {
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, seed).unwrap();
+        Arc::new(compile_packed_layers(name, &layers, 0.2, 4, 4).unwrap())
+    }
+
+    fn test_cfg() -> ApuConfig {
+        ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 }
+    }
+
+    #[test]
+    fn catalog_resolves_zoo_specs_with_shared_plans() {
+        let cat = ModelCatalog::from_specs(&["zoo:vgg-nano", "zoo:alexnet-nano"], None).unwrap();
+        assert_eq!(cat.len(), 2);
+        let vgg = cat.get(cat.id_of("vgg-nano").unwrap()).unwrap();
+        let alex = cat.get(cat.id_of("alexnet-nano").unwrap()).unwrap();
+        assert_ne!(vgg.fingerprint, alex.fingerprint);
+        // compiled zoo networks are plannable — the shared plan must exist
+        assert!(vgg.plan.is_some() && alex.plan.is_some());
+        assert_eq!(vgg.plan.as_ref().unwrap().fingerprint(), vgg.fingerprint);
+        // both engines serve their own dims
+        let mut e = cat.engine(ModelId(0)).unwrap();
+        use crate::coordinator::engine::Engine;
+        let out = e.infer_batch(&[vec![0.1; e.input_dim()]]).unwrap();
+        assert_eq!(out[0].len(), e.output_dim());
+    }
+
+    #[test]
+    fn duplicate_names_and_bad_specs_error() {
+        let mut cat = ModelCatalog::new();
+        cat.add_program("m", test_program(3, "m"), test_cfg()).unwrap();
+        assert!(cat.add_program("m", test_program(4, "m2"), test_cfg()).is_err());
+        let err = format!("{:#}", cat.add_spec("zoo:nope", None).unwrap_err());
+        assert!(err.contains("unknown zoo network") && err.contains("vgg-nano"), "{err}");
+        assert!(cat.add_spec("/no/such/file.apu", None).is_err());
+        let stale = format!("{:#}", cat.get(ModelId(9)).unwrap_err());
+        assert!(stale.contains("out of range"), "{stale}");
+    }
+
+    #[test]
+    fn artifact_spec_round_trips_through_catalog() {
+        let program = test_program(11, "artifact-cat");
+        let path = std::env::temp_dir().join(format!("apu-cat-{}.apu", std::process::id()));
+        program.save(&path).unwrap();
+        let mut cat = ModelCatalog::new();
+        let id = cat.add_spec(path.to_str().unwrap(), Some(4)).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let e = cat.get(id).unwrap();
+        assert_eq!(e.name, "artifact-cat");
+        assert_eq!(e.machine.n_pes, 4);
+        assert_eq!(e.fingerprint, program.fingerprint());
+    }
+}

@@ -39,6 +39,20 @@ impl ApuEngine {
         ApuEngine::new(apu, &compiled.program)
     }
 
+    /// Build a serving engine from a catalog entry: the simulator is
+    /// sized to the entry's machine and loads the *shared* program and
+    /// execution plan — no per-shard plan build, no program copy.
+    pub fn from_entry(entry: &crate::coordinator::catalog::ModelEntry) -> Result<ApuEngine> {
+        let mut apu = Apu::new(entry.machine.clone());
+        apu.load_with_plan(&entry.program, entry.plan.clone())?;
+        Ok(ApuEngine {
+            apu,
+            din: entry.program.din,
+            dout: entry.program.dout,
+            name: format!("apu-sim:{}", entry.name),
+        })
+    }
+
     pub fn stats(&self) -> &crate::sim::SimStats {
         self.apu.stats()
     }

@@ -13,6 +13,13 @@
 //! The single-engine [`Server`](super::server::Server) is the 1-shard
 //! special case of this module: it shares `serve_loop` and the shard
 //! worker code path, with an effectively unbounded queue.
+//!
+//! Fleets are **model-keyed**: shards are organized into per-model
+//! groups ([`Group`]), requests carry a [`ModelId`], and the dispatcher
+//! selects only within the target model's group. [`Fleet::start`] is the
+//! single-model case (one group, `"default"`); [`Fleet::start_catalog`]
+//! builds one group per [`ModelCatalog`] entry, with every shard in a
+//! group loading the catalog's *shared* program and execution plan.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -22,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchPolicy, Batcher, FlushReason};
+use super::catalog::{ModelCatalog, ModelId};
 use super::dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 use super::engine::Engine;
 use super::server::{Reply, ServeError, ServerMetrics};
@@ -33,6 +41,8 @@ use crate::util::stats::Summary;
 /// One inference request riding through a shard worker.
 pub(super) struct Request {
     pub(super) input: Vec<f32>,
+    /// The model this request targets (stamped onto its [`Reply`]).
+    pub(super) model: ModelId,
     pub(super) submitted: Instant,
     pub(super) reply: mpsc::Sender<Reply>,
     /// Lifecycle trace context (present when the fleet has a tracer).
@@ -127,9 +137,9 @@ pub(super) struct ShardInstruments {
 }
 
 impl ShardInstruments {
-    pub(super) fn register(reg: &Registry, shard: usize) -> ShardInstruments {
+    pub(super) fn register(reg: &Registry, model: &str, shard: usize) -> ShardInstruments {
         let s = shard.to_string();
-        let l: &[(&str, &str)] = &[("shard", s.as_str())];
+        let l: &[(&str, &str)] = &[("model", model), ("shard", s.as_str())];
         ShardInstruments {
             enqueued: reg.counter(
                 "apu_fleet_enqueued_total",
@@ -199,6 +209,33 @@ struct Shard {
     worker: Option<JoinHandle<ServerMetrics>>,
 }
 
+/// One model's slice of the fleet: the global shard ids serving it and
+/// the dispatcher that routes within them. Each group has its own
+/// dispatcher so round-robin cursors (and load comparisons) never mix
+/// traffic across models.
+pub struct Group {
+    model: ModelId,
+    label: String,
+    shard_ids: Vec<usize>,
+    dispatcher: Dispatcher,
+}
+
+impl Group {
+    pub fn model(&self) -> ModelId {
+        self.model
+    }
+
+    /// The model name used as the metrics/SLO label.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Global shard ids belonging to this group.
+    pub fn shard_ids(&self) -> &[usize] {
+        &self.shard_ids
+    }
+}
+
 /// Why a submit was refused.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
@@ -208,6 +245,8 @@ pub enum SubmitError {
     Rejected { shard: usize, depth: usize, cap: usize },
     /// No live shard to dispatch to (all engines failed or fleet stopped).
     Unavailable,
+    /// The request targeted a model this fleet does not serve.
+    UnknownModel { model: ModelId, models: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -217,6 +256,9 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "admission control rejected request: shard {shard} queue {depth}/{cap}")
             }
             SubmitError::Unavailable => write!(f, "no live shard available"),
+            SubmitError::UnknownModel { model, models } => {
+                write!(f, "{model} not served by this fleet ({models} models)")
+            }
         }
     }
 }
@@ -233,6 +275,10 @@ pub struct FleetMetrics {
     pub dead: Vec<(usize, String)>,
     /// The dispatch policy the run used.
     pub policy: DispatchPolicy,
+    /// `(model label, global shard ids)` per model group, in [`ModelId`]
+    /// order. Single-model fleets have one `"default"` group spanning
+    /// every shard.
+    pub groups: Vec<(String, Vec<usize>)>,
 }
 
 impl FleetMetrics {
@@ -276,61 +322,124 @@ impl FleetMetrics {
 /// A handle to a running fleet of shard workers.
 pub struct Fleet {
     shards: Vec<Shard>,
-    dispatcher: Dispatcher,
+    groups: Vec<Group>,
     config: FleetConfig,
     dead: Vec<(usize, String)>,
 }
 
 impl Fleet {
-    /// Spawn `config.shards` workers; `make_engine(shard_id)` runs on each
-    /// worker thread (engines are built in-thread — PJRT handles are not
-    /// `Send`). Shards whose factory fails are marked dead and skipped by
-    /// the dispatcher; `start` errors only if *every* factory fails.
+    /// Spawn `config.shards` workers serving one model; `make_engine(shard_id)`
+    /// runs on each worker thread (engines are built in-thread — PJRT
+    /// handles are not `Send`). Shards whose factory fails are marked dead
+    /// and skipped by the dispatcher; `start` errors only if *every*
+    /// factory fails. This is the single-model case of
+    /// [`Fleet::start_catalog`]: one `"default"` group spanning every shard.
     pub fn start<F>(config: FleetConfig, make_engine: F) -> Result<Fleet>
     where
         F: Fn(usize) -> Result<Box<dyn Engine>> + Send + Sync + 'static,
     {
-        if config.shards == 0 {
+        let n = config.shards;
+        Fleet::start_grouped(
+            config,
+            vec![("default".to_string(), n)],
+            Arc::new(move |shard, _model| make_engine(shard)),
+        )
+    }
+
+    /// Spawn one shard group per catalog model: group `g` serves
+    /// `catalog` entry `g` with `shards_per_model[g]` workers, each
+    /// loading the catalog's shared program and execution plan (exactly
+    /// one plan build per model process-wide). `config.shards` is
+    /// ignored; the fleet size is the sum of `shards_per_model`.
+    pub fn start_catalog(
+        config: FleetConfig,
+        catalog: Arc<ModelCatalog>,
+        shards_per_model: &[usize],
+    ) -> Result<Fleet> {
+        if catalog.is_empty() {
+            bail!("fleet catalog has no models");
+        }
+        if shards_per_model.len() != catalog.len() {
+            bail!(
+                "shards_per_model has {} entries for {} catalog models",
+                shards_per_model.len(),
+                catalog.len()
+            );
+        }
+        let groups: Vec<(String, usize)> = catalog
+            .iter()
+            .zip(shards_per_model)
+            .map(|((_, e), &n)| (e.name.clone(), n))
+            .collect();
+        Fleet::start_grouped(
+            config,
+            groups,
+            Arc::new(move |_shard, model| {
+                Ok(Box::new(catalog.engine(model)?) as Box<dyn Engine>)
+            }),
+        )
+    }
+
+    /// Shared start path: spawn `count` workers per `(label, count)` group,
+    /// assigning global shard ids group by group.
+    fn start_grouped(
+        config: FleetConfig,
+        group_spec: Vec<(String, usize)>,
+        factory: Arc<dyn Fn(usize, ModelId) -> Result<Box<dyn Engine>> + Send + Sync>,
+    ) -> Result<Fleet> {
+        let total: usize = group_spec.iter().map(|(_, n)| n).sum();
+        if total == 0 {
             bail!("fleet needs at least one shard");
+        }
+        if group_spec.iter().any(|(_, n)| *n == 0) {
+            bail!("every model group needs at least one shard");
         }
         if config.queue_cap == 0 {
             bail!("queue_cap must be at least 1 (0 admits nothing)");
         }
-        let factory = Arc::new(make_engine);
-        let mut shards = Vec::with_capacity(config.shards);
-        let mut ready = Vec::with_capacity(config.shards);
-        for id in 0..config.shards {
-            let (tx, rx) = mpsc::channel::<Request>();
-            let state = Arc::new(ShardState::new());
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-            let factory = Arc::clone(&factory);
-            let batch = config.batch.clone();
-            let worker_state = Arc::clone(&state);
-            let ins = ShardInstruments::register(&config.metrics, id);
-            let worker_ins = ins.clone();
-            let tracer = config.tracer.clone();
-            let worker = std::thread::Builder::new()
-                .name(format!("apu-shard-{id}"))
-                .spawn(move || {
-                    let engine = match factory(id) {
-                        Ok(e) => {
-                            let _ = ready_tx.send(Ok(()));
-                            e
-                        }
-                        Err(e) => {
-                            worker_state.alive.store(false, Ordering::Relaxed);
-                            let _ = ready_tx.send(Err(e));
-                            return ServerMetrics::default();
-                        }
-                    };
-                    let tr = tracer.as_ref();
-                    let metrics = serve_loop(id, engine, batch, rx, &worker_state, &worker_ins, tr);
-                    worker_state.alive.store(false, Ordering::Relaxed);
-                    metrics
-                })
-                .with_context(|| format!("spawning shard {id}"))?;
-            shards.push(Shard { tx: Some(tx), state, ins, worker: Some(worker) });
-            ready.push(ready_rx);
+        let mut shards = Vec::with_capacity(total);
+        let mut ready = Vec::with_capacity(total);
+        let mut groups = Vec::with_capacity(group_spec.len());
+        for (g, (label, count)) in group_spec.into_iter().enumerate() {
+            let model = ModelId(g);
+            let mut shard_ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                let id = shards.len();
+                shard_ids.push(id);
+                let (tx, rx) = mpsc::channel::<Request>();
+                let state = Arc::new(ShardState::new());
+                let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+                let factory = Arc::clone(&factory);
+                let batch = config.batch.clone();
+                let worker_state = Arc::clone(&state);
+                let ins = ShardInstruments::register(&config.metrics, &label, id);
+                let worker_ins = ins.clone();
+                let tracer = config.tracer.clone();
+                let worker = std::thread::Builder::new()
+                    .name(format!("apu-shard-{id}"))
+                    .spawn(move || {
+                        let engine = match factory(id, model) {
+                            Ok(e) => {
+                                let _ = ready_tx.send(Ok(()));
+                                e
+                            }
+                            Err(e) => {
+                                worker_state.alive.store(false, Ordering::Relaxed);
+                                let _ = ready_tx.send(Err(e));
+                                return ServerMetrics::default();
+                            }
+                        };
+                        let tr = tracer.as_ref();
+                        let metrics =
+                            serve_loop(id, engine, batch, rx, &worker_state, &worker_ins, tr);
+                        worker_state.alive.store(false, Ordering::Relaxed);
+                        metrics
+                    })
+                    .with_context(|| format!("spawning shard {id}"))?;
+                shards.push(Shard { tx: Some(tx), state, ins, worker: Some(worker) });
+                ready.push(ready_rx);
+            }
+            groups.push(Group { model, label, shard_ids, dispatcher: Dispatcher::new(config.policy) });
         }
         let mut dead = Vec::new();
         for (id, rx) in ready.into_iter().enumerate() {
@@ -340,15 +449,25 @@ impl Fleet {
                 Err(_) => dead.push((id, "worker died during engine construction".into())),
             }
         }
-        if dead.len() == config.shards {
+        if dead.len() == total {
             let (id, err) = &dead[0];
             bail!("every shard engine failed to construct (shard {id}: {err})");
         }
-        Ok(Fleet { shards, dispatcher: Dispatcher::new(config.policy), config, dead })
+        Ok(Fleet { shards, groups, config, dead })
     }
 
     pub fn config(&self) -> &FleetConfig {
         &self.config
+    }
+
+    /// Per-model shard groups, indexed by [`ModelId`].
+    pub fn groups(&self) -> &[Group] {
+        &self.groups
+    }
+
+    /// Look up the [`ModelId`] for a model label served by this fleet.
+    pub fn model_id(&self, name: &str) -> Option<ModelId> {
+        self.groups.iter().find(|g| g.label == name).map(|g| g.model)
     }
 
     /// Shards that failed engine construction, as `(shard id, error)`.
@@ -365,12 +484,30 @@ impl Fleet {
         self.shards.iter().map(|s| s.state.load()).collect()
     }
 
-    /// Route a request to a shard. Admission control: if the selected
-    /// shard's queue is at `queue_cap`, the request is rejected with an
-    /// explicit error — it is never buffered beyond the bound.
+    /// Route a request to the first model group (the whole fleet for
+    /// single-model fleets). Admission control: if the selected shard's
+    /// queue is at `queue_cap`, the request is rejected with an explicit
+    /// error — it is never buffered beyond the bound.
     pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Reply>, SubmitError> {
-        let loads = self.shard_loads();
-        let i = self.dispatcher.select(&loads).ok_or(SubmitError::Unavailable)?;
+        self.submit_to(ModelId(0), input)
+    }
+
+    /// Route a request to a shard of `model`'s group. The dispatcher
+    /// selects only among that model's shards; other groups' load never
+    /// influences (or is disturbed by) this request.
+    pub fn submit_to(
+        &self,
+        model: ModelId,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Reply>, SubmitError> {
+        let group = self
+            .groups
+            .get(model.0)
+            .ok_or(SubmitError::UnknownModel { model, models: self.groups.len() })?;
+        let loads: Vec<ShardLoad> =
+            group.shard_ids.iter().map(|&i| self.shards[i].state.load()).collect();
+        let local = group.dispatcher.select(&loads).ok_or(SubmitError::Unavailable)?;
+        let i = group.shard_ids[local];
         let state = &self.shards[i].state;
         // Reserve a queue slot (CAS so concurrent submitters cannot
         // overshoot the bound), or reject.
@@ -401,7 +538,7 @@ impl Fleet {
             .tracer
             .as_ref()
             .map(|t| ReqTrace { id: t.next_id(), enqueue_us: t.now_us(), dequeue_us: None });
-        let req = Request { input, submitted: Instant::now(), reply: rtx, trace };
+        let req = Request { input, model, submitted: Instant::now(), reply: rtx, trace };
         let sent = match self.shards[i].tx.as_ref() {
             Some(tx) => tx.send(req).is_ok(),
             None => false,
@@ -426,6 +563,12 @@ impl Fleet {
         rx.recv().context("fleet dropped request")
     }
 
+    /// Blocking convenience: submit to `model` and wait for the reply.
+    pub fn infer_model(&self, model: ModelId, input: Vec<f32>) -> Result<Reply> {
+        let rx = self.submit_to(model, input).map_err(anyhow::Error::from)?;
+        rx.recv().context("fleet dropped request")
+    }
+
     /// Stop all workers (draining their queues) and collect metrics.
     pub fn shutdown(mut self) -> Result<FleetMetrics> {
         let mut out = Vec::with_capacity(self.shards.len());
@@ -438,7 +581,17 @@ impl Fleet {
             m.rejected = shard.state.rejected.load(Ordering::Relaxed);
             out.push(m);
         }
-        Ok(FleetMetrics { shards: out, dead: std::mem::take(&mut self.dead), policy: self.config.policy })
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| (g.label.clone(), g.shard_ids.clone()))
+            .collect();
+        Ok(FleetMetrics {
+            shards: out,
+            dead: std::mem::take(&mut self.dead),
+            policy: self.config.policy,
+            groups,
+        })
     }
 }
 
@@ -627,6 +780,7 @@ pub(super) fn serve_loop(
                         latency,
                         batch_size,
                         shard,
+                        model: pending.payload.model,
                     });
                 }
             }
@@ -658,6 +812,7 @@ pub(super) fn serve_loop(
                         latency,
                         batch_size,
                         shard,
+                        model: pending.payload.model,
                     });
                 }
             }
@@ -868,6 +1023,54 @@ mod tests {
         });
         assert!(r.is_err());
         assert!(format!("{:#}", r.err().unwrap()).contains("every shard engine failed"));
+    }
+
+    #[test]
+    fn catalog_fleet_routes_per_model() {
+        let cfg = ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 };
+        let mut cat = ModelCatalog::new();
+        // distinct output dims so cross-model mixups would be visible
+        let la = synthetic_packed_network(&[16, 20, 12], 4, 4, 31).unwrap();
+        let a = cat
+            .add_program(
+                "model-a",
+                Arc::new(compile_packed_layers("model-a", &la, 0.2, 4, 4).unwrap()),
+                cfg.clone(),
+            )
+            .unwrap();
+        let lb = synthetic_packed_network(&[16, 18, 10], 4, 4, 32).unwrap();
+        let b = cat
+            .add_program(
+                "model-b",
+                Arc::new(compile_packed_layers("model-b", &lb, 0.2, 4, 4).unwrap()),
+                cfg,
+            )
+            .unwrap();
+        let fleet = Fleet::start_catalog(
+            config(0, DispatchPolicy::RoundRobin, 1024),
+            Arc::new(cat),
+            &[2, 1],
+        )
+        .unwrap();
+        assert_eq!(fleet.groups().len(), 2);
+        assert_eq!(fleet.model_id("model-b"), Some(b));
+        let mut load = SyntheticLoad::new(1000.0, 9);
+        for _ in 0..6 {
+            let ra = fleet.infer_model(a, load.next_input(16)).unwrap();
+            assert_eq!(ra.model, a);
+            assert_eq!(ra.output.unwrap().len(), 12);
+            assert!(fleet.groups()[0].shard_ids().contains(&ra.shard));
+            let rb = fleet.infer_model(b, load.next_input(16)).unwrap();
+            assert_eq!(rb.model, b);
+            assert_eq!(rb.output.unwrap().len(), 10);
+            assert_eq!(rb.shard, 2, "model-b traffic must stay on its own group");
+        }
+        let err = fleet.submit_to(ModelId(7), vec![0.0; 16]).err().unwrap();
+        assert!(matches!(err, SubmitError::UnknownModel { .. }), "{err}");
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.groups, vec![("model-a".into(), vec![0, 1]), ("model-b".into(), vec![2])]);
+        assert_eq!(m.shards[0].completed + m.shards[1].completed, 6);
+        assert_eq!(m.shards[2].completed, 6);
     }
 
     #[test]

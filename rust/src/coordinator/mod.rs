@@ -13,6 +13,12 @@
 //! (p50/p95/p99, queue depth, rejection rate). The single-engine
 //! [`Server`] is the 1-shard special case of the fleet.
 //!
+//! Serving is model-keyed: a [`catalog::ModelCatalog`] resolves named
+//! models (zoo specs or `.apu` artifacts) into shared programs and
+//! execution plans, [`Fleet::start_catalog`] spawns one shard group per
+//! model, requests carry a [`ModelId`], and SLO/metrics output is
+//! labelled per model as well as per shard.
+//!
 //! Every shard also registers per-shard counters/gauges/histograms in a
 //! [`crate::obs::metrics::Registry`] (the process-global one by default;
 //! inject a private registry through [`FleetConfig::metrics`] for tests),
@@ -22,6 +28,7 @@
 //! Chrome trace-event export.
 
 pub mod batcher;
+pub mod catalog;
 pub mod dispatch;
 pub mod engine;
 pub mod fleet;
@@ -29,8 +36,9 @@ pub mod server;
 pub mod slo;
 
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use catalog::{ModelCatalog, ModelEntry, ModelId};
 pub use dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 pub use engine::{ApuEngine, Engine, GoldenEngine};
-pub use fleet::{Fleet, FleetConfig, FleetMetrics, SubmitError};
+pub use fleet::{Fleet, FleetConfig, FleetMetrics, Group, SubmitError};
 pub use server::{Reply, ServeError, Server, ServerMetrics, SyntheticLoad};
 pub use slo::{SloReport, SloSnapshot};

@@ -47,6 +47,9 @@ pub struct Reply {
     pub batch_size: usize,
     /// The shard that served the request (0 for a single-engine server).
     pub shard: usize,
+    /// The model the request targeted (`ModelId(0)` for single-model
+    /// fleets and the single-engine server).
+    pub model: super::catalog::ModelId,
 }
 
 impl Reply {

@@ -1,7 +1,10 @@
-//! SLO accounting: turn a fleet run's raw metrics into per-shard and
-//! fleet-wide latency percentiles, queue-depth, and rejection-rate
-//! summaries — the numbers a production serving fleet is actually held
-//! to (p50/p95/p99 targets, bounded rejection rate).
+//! SLO accounting: turn a fleet run's raw metrics into per-shard,
+//! per-model, and fleet-wide latency percentiles, queue-depth, and
+//! rejection-rate summaries — the numbers a production serving fleet is
+//! actually held to (p50/p95/p99 targets, bounded rejection rate).
+//! Multi-model fleets get one aggregate row per model group (latency
+//! streams merged across the group's shards, so percentiles are exact),
+//! alongside the per-shard rows and the fleet total.
 
 use std::time::Duration;
 
@@ -42,6 +45,36 @@ impl SloSnapshot {
         }
     }
 
+    /// Aggregate several shards' metrics into one row (a model group, or
+    /// the whole fleet): latency/batch/depth streams are merged, so the
+    /// percentiles are exact rather than averaged across shards.
+    fn aggregate(shards: &[&ServerMetrics]) -> SloSnapshot {
+        let mut lat = crate::util::stats::Summary::new();
+        let mut batch = crate::util::stats::Summary::new();
+        let mut depth = crate::util::stats::Summary::new();
+        let (mut completed, mut failed, mut rejected) = (0u64, 0u64, 0u64);
+        for s in shards {
+            lat.merge(&s.latency_us);
+            batch.merge(&s.batch_sizes);
+            depth.merge(&s.queue_depth);
+            completed += s.completed;
+            failed += s.failed;
+            rejected += s.rejected;
+        }
+        SloSnapshot {
+            completed,
+            failed,
+            rejected,
+            p50_us: lat.p50(),
+            p95_us: lat.p95(),
+            p99_us: lat.p99(),
+            mean_us: lat.mean(),
+            mean_batch: batch.mean(),
+            mean_queue_depth: depth.mean(),
+            max_queue_depth: if depth.count() == 0 { 0.0 } else { depth.max() },
+        }
+    }
+
     /// Fraction of arrivals (admitted + rejected) that were rejected.
     pub fn rejection_rate(&self) -> f64 {
         let arrivals = self.completed + self.failed + self.rejected;
@@ -59,6 +92,13 @@ impl SloSnapshot {
 pub struct SloReport {
     pub policy: &'static str,
     pub per_shard: Vec<SloSnapshot>,
+    /// One aggregate row per model group, in model-id order.
+    /// Single-model fleets have one `"default"` entry equal to the
+    /// fleet row.
+    pub per_model: Vec<(String, SloSnapshot)>,
+    /// `(model label, global shard ids)` — which shards served which
+    /// model (used to label per-shard rows and exported series).
+    pub groups: Vec<(String, Vec<usize>)>,
     pub fleet: SloSnapshot,
     pub dead: Vec<(usize, String)>,
     pub elapsed: Duration,
@@ -68,28 +108,21 @@ pub struct SloReport {
 impl SloReport {
     pub fn from_metrics(m: &FleetMetrics, elapsed: Duration) -> SloReport {
         let per_shard: Vec<SloSnapshot> = m.shards.iter().map(SloSnapshot::from_shard).collect();
-        let mut fleet_lat = m.fleet_latency_us();
-        let mut batch = crate::util::stats::Summary::new();
-        let mut depth = crate::util::stats::Summary::new();
-        for s in &m.shards {
-            batch.merge(&s.batch_sizes);
-            depth.merge(&s.queue_depth);
-        }
-        let fleet = SloSnapshot {
-            completed: m.completed(),
-            failed: m.failed(),
-            rejected: m.rejected(),
-            p50_us: fleet_lat.p50(),
-            p95_us: fleet_lat.p95(),
-            p99_us: fleet_lat.p99(),
-            mean_us: fleet_lat.mean(),
-            mean_batch: batch.mean(),
-            mean_queue_depth: depth.mean(),
-            max_queue_depth: if depth.count() == 0 { 0.0 } else { depth.max() },
-        };
+        let per_model: Vec<(String, SloSnapshot)> = m
+            .groups
+            .iter()
+            .map(|(name, ids)| {
+                let ms: Vec<&ServerMetrics> =
+                    ids.iter().filter_map(|&i| m.shards.get(i)).collect();
+                (name.clone(), SloSnapshot::aggregate(&ms))
+            })
+            .collect();
+        let fleet = SloSnapshot::aggregate(&m.shards.iter().collect::<Vec<_>>());
         SloReport {
             policy: m.policy.name(),
             per_shard,
+            per_model,
+            groups: m.groups.clone(),
             fleet,
             dead: m.dead.clone(),
             elapsed,
@@ -97,21 +130,46 @@ impl SloReport {
         }
     }
 
+    /// The model label a shard served under (`"default"` when the fleet
+    /// predates model groups or the shard is unknown).
+    fn model_of(&self, shard: usize) -> &str {
+        self.groups
+            .iter()
+            .find(|(_, ids)| ids.contains(&shard))
+            .map(|(name, _)| name.as_str())
+            .unwrap_or("default")
+    }
+
     /// Export the report as `apu_slo_*` gauges (one series per shard
-    /// plus a `shard="fleet"` aggregate) so percentiles and rejection
-    /// rates ride the same registry dump as the live shard counters.
-    /// Shards with no completed requests are skipped — their
-    /// percentiles are undefined, and a NaN gauge would poison the
-    /// Prometheus exposition.
+    /// labelled with its model, one aggregate series per model, plus a
+    /// `shard="fleet"` total) so percentiles and rejection rates ride
+    /// the same registry dump as the live shard counters. Rows with no
+    /// completed requests are skipped — their percentiles are
+    /// undefined, and a NaN gauge would poison the Prometheus
+    /// exposition.
     pub fn export(&self, reg: &Registry) {
-        let mut rows: Vec<(String, &SloSnapshot)> =
-            self.per_shard.iter().enumerate().map(|(i, s)| (i.to_string(), s)).collect();
-        rows.push(("fleet".to_string(), &self.fleet));
-        for (label, s) in rows {
+        let mut rows: Vec<(Vec<(String, String)>, &SloSnapshot)> = self
+            .per_shard
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let labels = vec![
+                    ("model".to_string(), self.model_of(i).to_string()),
+                    ("shard".to_string(), i.to_string()),
+                ];
+                (labels, s)
+            })
+            .collect();
+        for (name, s) in &self.per_model {
+            rows.push((vec![("model".to_string(), name.clone())], s));
+        }
+        rows.push((vec![("shard".to_string(), "fleet".to_string())], &self.fleet));
+        for (labels, s) in rows {
             if s.completed == 0 {
                 continue;
             }
-            let l: &[(&str, &str)] = &[("shard", label.as_str())];
+            let l: Vec<(&str, &str)> =
+                labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
             for (name, help, v) in [
                 ("apu_slo_p50_us", "latency p50 over the run, microseconds", s.p50_us),
                 ("apu_slo_p95_us", "latency p95 over the run, microseconds", s.p95_us),
@@ -120,7 +178,7 @@ impl SloReport {
                 ("apu_slo_rejection_rate", "rejected / all arrivals", s.rejection_rate()),
             ] {
                 if v.is_finite() {
-                    reg.gauge(name, help, l).set(v);
+                    reg.gauge(name, help, &l).set(v);
                 }
             }
         }
@@ -130,14 +188,18 @@ impl SloReport {
         }
     }
 
-    /// Render the per-shard + fleet table (the `apu fleet` output).
+    /// Render the per-shard + per-model + fleet tables (the `apu fleet`
+    /// output). The per-model table only appears for multi-model fleets
+    /// — for one model it would duplicate the fleet row.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
-            "shard", "done", "fail", "rej", "rej%", "p50us", "p95us", "p99us", "batch", "qdepth",
+            "shard", "model", "done", "fail", "rej", "rej%", "p50us", "p95us", "p99us", "batch",
+            "qdepth",
         ]);
-        let row = |label: String, s: &SloSnapshot| -> Vec<String> {
+        let row = |label: String, model: String, s: &SloSnapshot| -> Vec<String> {
             vec![
                 label,
+                model,
                 s.completed.to_string(),
                 s.failed.to_string(),
                 s.rejected.to_string(),
@@ -150,9 +212,11 @@ impl SloReport {
             ]
         };
         for (i, s) in self.per_shard.iter().enumerate() {
+            let model = self.model_of(i).to_string();
             if let Some((_, err)) = self.dead.iter().find(|(id, _)| *id == i) {
                 t.row(&[
                     format!("{i}"),
+                    model,
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -164,18 +228,46 @@ impl SloReport {
                     format!("dead: {err}"),
                 ]);
             } else {
-                t.row(&row(format!("{i}"), s));
+                t.row(&row(format!("{i}"), model, s));
             }
         }
-        t.row(&row("fleet".into(), &self.fleet));
-        format!(
-            "policy={} shards={} throughput={:.1} req/s elapsed={:.2}s\n{}",
+        t.row(&row("fleet".into(), "*".into(), &self.fleet));
+        let mut out = format!(
+            "policy={} shards={} models={} throughput={:.1} req/s elapsed={:.2}s\n{}",
             self.policy,
             self.per_shard.len(),
+            self.per_model.len().max(1),
             self.throughput_rps,
             self.elapsed.as_secs_f64(),
             t.render()
-        )
+        );
+        if self.per_model.len() > 1 {
+            let mut mt = Table::new(&[
+                "model", "shards", "done", "fail", "rej", "rej%", "p50us", "p95us", "p99us",
+            ]);
+            for (name, s) in &self.per_model {
+                let n_shards = self
+                    .groups
+                    .iter()
+                    .find(|(g, _)| g == name)
+                    .map(|(_, ids)| ids.len())
+                    .unwrap_or(0);
+                mt.row(&[
+                    name.clone(),
+                    n_shards.to_string(),
+                    s.completed.to_string(),
+                    s.failed.to_string(),
+                    s.rejected.to_string(),
+                    format!("{:.1}", 100.0 * s.rejection_rate()),
+                    format!("{:.0}", s.p50_us),
+                    format!("{:.0}", s.p95_us),
+                    format!("{:.0}", s.p99_us),
+                ]);
+            }
+            out.push_str("\nper-model:\n");
+            out.push_str(&mt.render());
+        }
+        out
     }
 }
 
@@ -203,6 +295,7 @@ mod tests {
             shards: vec![a, b],
             dead: vec![],
             policy: DispatchPolicy::JoinShortestQueue,
+            groups: vec![("default".into(), vec![0, 1])],
         };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         assert_eq!(r.fleet.completed, 5);
@@ -211,13 +304,51 @@ mod tests {
         assert!(r.fleet.p99_us <= 500.0 && r.fleet.p99_us > 490.0);
         assert_eq!(r.per_shard.len(), 2);
         assert!((r.throughput_rps - 5.0).abs() < 1e-9);
+        // the single "default" group aggregates to the fleet row
+        assert_eq!(r.per_model.len(), 1);
+        assert_eq!(r.per_model[0].0, "default");
+        assert_eq!(r.per_model[0].1.completed, 5);
+        assert!((r.per_model[0].1.p50_us - r.fleet.p50_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_model_rows_are_disjoint_group_aggregates() {
+        let fm = FleetMetrics {
+            shards: vec![
+                shard_metrics(&[100.0, 200.0], 0, 0),
+                shard_metrics(&[300.0, 400.0], 0, 0),
+                shard_metrics(&[1000.0, 2000.0, 3000.0], 1, 2),
+            ],
+            dead: vec![],
+            policy: DispatchPolicy::RoundRobin,
+            groups: vec![("fast".into(), vec![0, 1]), ("slow".into(), vec![2])],
+        };
+        let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
+        assert_eq!(r.per_model.len(), 2);
+        let fast = &r.per_model[0].1;
+        let slow = &r.per_model[1].1;
+        assert_eq!(fast.completed, 4);
+        assert_eq!(slow.completed, 3);
+        assert_eq!(slow.failed, 1);
+        assert_eq!(slow.rejected, 2);
+        // fast merges shards 0+1 only: p50 of [100,200,300,400]
+        assert!(fast.p50_us <= 300.0, "fast p50 {} polluted by slow group", fast.p50_us);
+        assert!(slow.p50_us >= 1000.0, "slow p50 {} polluted by fast group", slow.p50_us);
+        assert_eq!(fast.completed + slow.completed, r.fleet.completed);
+        let out = r.render();
+        assert!(out.contains("per-model:"), "{out}");
+        assert!(out.contains("fast") && out.contains("slow"), "{out}");
     }
 
     #[test]
     fn rejection_rate_counts_all_arrivals() {
         let m = shard_metrics(&[50.0; 60], 20, 20);
-        let fm =
-            FleetMetrics { shards: vec![m], dead: vec![], policy: DispatchPolicy::RoundRobin };
+        let fm = FleetMetrics {
+            shards: vec![m],
+            dead: vec![],
+            policy: DispatchPolicy::RoundRobin,
+            groups: vec![("default".into(), vec![0])],
+        };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         // 60 completed + 20 failed + 20 rejected → 20% rejected
         assert!((r.fleet.rejection_rate() - 0.2).abs() < 1e-9);
@@ -229,17 +360,23 @@ mod tests {
             shards: vec![shard_metrics(&[100.0, 200.0, 300.0], 0, 1), ServerMetrics::default()],
             dead: vec![],
             policy: DispatchPolicy::RoundRobin,
+            groups: vec![("default".into(), vec![0, 1])],
         };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         let reg = Registry::new();
         r.export(&reg);
-        let p50 = reg.gauge_value("apu_slo_p50_us", &[("shard", "0")]).unwrap();
+        let shard0: &[(&str, &str)] = &[("model", "default"), ("shard", "0")];
+        let p50 = reg.gauge_value("apu_slo_p50_us", shard0).unwrap();
         assert!((p50 - 200.0).abs() < 1e-9);
         assert!(reg.gauge_value("apu_slo_p50_us", &[("shard", "fleet")]).is_some());
+        // one aggregate series per model, labelled by model alone
+        assert!(reg.gauge_value("apu_slo_p50_us", &[("model", "default")]).is_some());
         // the idle shard has no latency stream → no series for it
-        assert!(reg.gauge_value("apu_slo_p50_us", &[("shard", "1")]).is_none());
+        assert!(reg
+            .gauge_value("apu_slo_p50_us", &[("model", "default"), ("shard", "1")])
+            .is_none());
         assert!(reg.gauge_value("apu_slo_throughput_rps", &[]).unwrap() > 0.0);
-        let rate = reg.gauge_value("apu_slo_rejection_rate", &[("shard", "0")]).unwrap();
+        let rate = reg.gauge_value("apu_slo_rejection_rate", shard0).unwrap();
         assert!((rate - 0.25).abs() < 1e-9);
     }
 
@@ -249,6 +386,7 @@ mod tests {
             shards: vec![shard_metrics(&[10.0], 0, 0), ServerMetrics::default()],
             dead: vec![(1, "no hardware".into())],
             policy: DispatchPolicy::LeastOutstanding,
+            groups: vec![("default".into(), vec![0, 1])],
         };
         let out = SloReport::from_metrics(&fm, Duration::from_millis(100)).render();
         assert!(out.contains("dead: no hardware"));

@@ -32,6 +32,20 @@ use crate::sched::Assignment;
 
 const MAGIC: &[u8; 4] = b"APU2";
 
+/// FNV-1a 64-bit over an artifact byte image. Stable across processes
+/// and platforms (the encoding is fully little-endian and deterministic),
+/// so it can key process-wide caches and name on-disk plan artifacts.
+pub fn fingerprint_bytes(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -211,6 +225,16 @@ pub fn from_bytes(buf: &[u8]) -> Result<Program> {
 }
 
 impl Program {
+    /// Stable content fingerprint: the FNV-1a 64-bit hash of the
+    /// canonical APU2 byte encoding. Two programs share a fingerprint iff
+    /// they serialize to identical artifacts (same instructions, data
+    /// segments, dims, and name), which makes it a sound key for the
+    /// process-wide [`crate::sim::plan`] cache and for content-addressed
+    /// artifact stores.
+    pub fn fingerprint(&self) -> u64 {
+        fingerprint_bytes(&to_bytes(self))
+    }
+
     /// Write this program as a binary artifact (`apu compile --out`).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();

@@ -13,5 +13,6 @@ pub mod artifact;
 pub mod encode;
 pub mod program;
 
+pub use artifact::fingerprint_bytes;
 pub use encode::{decode_insn, encode_insn};
 pub use program::{DataSegment, HostOpKind, Insn, Program};

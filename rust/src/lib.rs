@@ -2,8 +2,8 @@
 //!
 //! Reproduction of *"Tuning Algorithms and Generators for Efficient Edge
 //! Inference"* (Naous et al., 2019) as a three-layer Rust + JAX + Pallas
-//! stack. See DESIGN.md for the system inventory and experiment index,
-//! and README.md for the quickstart.
+//! stack. See README.md for the quickstart and ROADMAP.md for the system
+//! inventory and experiment index.
 //!
 //! Layer map:
 //! * **L3 (this crate)** — the co-design framework: structured-pruning
@@ -14,8 +14,11 @@
 //!   pluggable dispatcher (`coordinator::dispatch` — round-robin,
 //!   least-outstanding, join-shortest-queue) with bounded per-shard
 //!   queues (admission control) and SLO reporting (`coordinator::slo`:
-//!   p50/p95/p99, queue depth, rejection rate). The single-engine
-//!   `Server` is the 1-shard special case of the fleet.
+//!   p50/p95/p99, queue depth, rejection rate). Serving is model-keyed:
+//!   a `coordinator::catalog::ModelCatalog` resolves named models into
+//!   shared programs/plans (one plan build per model process-wide via
+//!   the `sim::plan` cache), and fleets route per-model shard groups.
+//!   The single-engine `Server` is the 1-shard special case of the fleet.
 //! * **L2/L1 (python/, build-time only)** — JAX training with mask
 //!   molding + INT4 QAT, and the Pallas block-diagonal FC kernel, AOT
 //!   lowered to HLO text artifacts.

@@ -11,6 +11,7 @@
 //! apu serve     [--engine sim|golden] [--requests N] [--rate RPS] [--batch B]
 //! apu fleet     [--shards N] [--policy rr|lo|jsq] [--requests N] [--rate RPS]
 //!               [--batch B] [--queue-cap Q] [--model synthetic|artifact|zoo:<name>]
+//!               [--models zoo:a,zoo:b,prog.apu [--mix 70,20,10]]
 //!               [--metrics-out FILE] [--trace-out FILE]
 //! apu dse       [--sweep block|precision]
 //! apu netlist   [--pes N] [--block S] [--bits B]
@@ -23,8 +24,8 @@ use apu::compiler::{
     PipelineOptions,
 };
 use apu::coordinator::{
-    ApuEngine, BatchPolicy, DispatchPolicy, Fleet, FleetConfig, GoldenEngine, Server, SloReport,
-    SubmitError, SyntheticLoad,
+    ApuEngine, BatchPolicy, DispatchPolicy, Fleet, FleetConfig, GoldenEngine, ModelCatalog,
+    ModelId, Reply, Server, SloReport, SubmitError, SyntheticLoad,
 };
 use apu::figures;
 use apu::generator::{DesignInstance, GeneratorConfig};
@@ -147,9 +148,9 @@ fn cmd_compile(argv: &[String]) -> Result<()> {
         println!("{}", usage("compile", "Compile a network to an APU program", &opts));
         return Ok(());
     }
-    let out = args.get("out").unwrap().to_string();
-    let net_name = args.get("net").unwrap().to_string();
-    let pes_arg = args.get("pes").unwrap().to_string();
+    let out = args.req("out")?.to_string();
+    let net_name = args.req("net")?.to_string();
+    let pes_arg = args.req("pes")?.to_string();
     let pes_override = if pes_arg == "auto" {
         None
     } else {
@@ -158,7 +159,7 @@ fn cmd_compile(argv: &[String]) -> Result<()> {
 
     if net_name == "artifact" {
         // The python-trained LeNet bundle: packed FC stack → program.
-        let program = load_program(args.get("artifacts").unwrap(), pes_override.unwrap_or(10))?;
+        let program = load_program(args.req("artifacts")?, pes_override.unwrap_or(10))?;
         println!(
             "compiled {}: {} instructions, {} data segments, din={} dout={}",
             program.name,
@@ -181,7 +182,7 @@ fn cmd_compile(argv: &[String]) -> Result<()> {
     let net = apu::nn::zoo::by_name(&net_name).with_context(|| {
         format!("unknown zoo network {net_name} (available: {})", apu::nn::zoo::names().join(", "))
     })?;
-    let mut model = match args.get("machine").unwrap() {
+    let mut model = match args.req("machine")? {
         "paper" => CostModel::paper_9pe(),
         "nano" => CostModel::nano_4pe(),
         other => bail!("unknown --machine {other} (want paper | nano)"),
@@ -228,7 +229,7 @@ fn cmd_compile(argv: &[String]) -> Result<()> {
 
 fn cmd_simulate(argv: &[String]) -> Result<()> {
     let args = parse(argv, &artifact_opts())?;
-    let dir = args.get("artifacts").unwrap().to_string();
+    let dir = args.req("artifacts")?.to_string();
     let n_pes = args.get_usize("pes")?;
     let program = load_program(&dir, n_pes)?;
     let mut apu = Apu::new(ApuConfig { n_pes, ..Default::default() });
@@ -292,17 +293,17 @@ fn cmd_profile(argv: &[String]) -> Result<()> {
         println!("{}", usage("profile", "Per-layer cycle/energy breakdown of a zoo network", &opts));
         return Ok(());
     }
-    let net_name = args.get("net").unwrap().to_string();
+    let net_name = args.req("net")?.to_string();
     let net = apu::nn::zoo::by_name(&net_name).with_context(|| {
         format!("unknown zoo network {net_name} (available: {})", apu::nn::zoo::names().join(", "))
     })?;
-    let model = match args.get("machine").unwrap() {
+    let model = match args.req("machine")? {
         "paper" => CostModel::paper_9pe(),
         "nano" => CostModel::nano_4pe(),
         other => bail!("unknown --machine {other} (want paper | nano)"),
     };
     let runs = args.get_usize("runs")?.max(1);
-    let trace_out = args.get("trace-out").unwrap().to_string();
+    let trace_out = args.req("trace-out")?.to_string();
 
     let tracer = Tracer::new();
     let popts = PipelineOptions {
@@ -359,11 +360,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "pes", default: Some("10"), help: "number of PEs (sim engine)" },
     ];
     let args = parse(argv, &opts)?;
-    let engine_kind = args.get("engine").unwrap().to_string();
+    let engine_kind = args.req("engine")?.to_string();
     let n = args.get_usize("requests")?;
     let rate = args.get_f64("rate")?;
     let batch = args.get_usize("batch")?;
-    let dir = args.get("artifacts").unwrap().to_string();
+    let dir = args.req("artifacts")?.to_string();
     let n_pes = args.get_usize("pes")?;
 
     let policy = BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_millis(2) };
@@ -415,13 +416,23 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
 fn cmd_fleet(argv: &[String]) -> Result<()> {
     let opts = vec![
-        Opt { name: "shards", default: Some("4"), help: "number of shard workers" },
+        Opt { name: "shards", default: Some("4"), help: "shard workers (per model when --models is given)" },
         Opt { name: "policy", default: Some("jsq"), help: "dispatch: rr | lo | jsq" },
         Opt { name: "requests", default: Some("256"), help: "request count" },
         Opt { name: "rate", default: Some("2000"), help: "arrival rate, req/s" },
         Opt { name: "batch", default: Some("8"), help: "max batch size per shard" },
         Opt { name: "queue-cap", default: Some("64"), help: "per-shard queue bound (admission control)" },
         Opt { name: "model", default: Some("synthetic"), help: "synthetic | artifact | zoo:<name> (e.g. zoo:vgg-nano, zoo:alexnet-nano)" },
+        Opt {
+            name: "models",
+            default: Some(""),
+            help: "multi-model fleet: comma-separated specs (zoo:<name> or .apu path); overrides --model",
+        },
+        Opt {
+            name: "mix",
+            default: Some(""),
+            help: "traffic weights matching --models, e.g. 70,20,10 (default uniform)",
+        },
         Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
         Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
         Opt {
@@ -437,12 +448,15 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let shards = args.get_usize("shards")?;
-    let policy = DispatchPolicy::parse(args.get("policy").unwrap())
-        .context("unknown --policy (want rr | lo | jsq)")?;
+    let policy_arg = args.req("policy")?;
+    let policy = DispatchPolicy::parse(policy_arg).with_context(|| {
+        let valid: Vec<&str> = DispatchPolicy::ALL.iter().map(|p| p.name()).collect();
+        format!("unknown --policy {policy_arg} (valid: rr | lo | jsq, long forms: {})", valid.join(" | "))
+    })?;
     let n = args.get_usize("requests")?;
     let rate = args.get_f64("rate")?;
-    let metrics_out = args.get("metrics-out").unwrap().to_string();
-    let trace_out = args.get("trace-out").unwrap().to_string();
+    let metrics_out = args.req("metrics-out")?.to_string();
+    let trace_out = args.req("trace-out")?.to_string();
     let registry = metrics::global();
     let tracer = (!trace_out.is_empty()).then(Tracer::new);
     let config = FleetConfig {
@@ -457,7 +471,77 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         tracer: tracer.clone(),
     };
     let n_pes = args.get_usize("pes")?;
-    let (din, fleet) = match args.get("model").unwrap() {
+
+    // Multi-model fleet: resolve every spec into a shared-plan catalog,
+    // build one shard group per model, and drive a weighted traffic mix.
+    let models_arg = args.req("models")?.to_string();
+    if !models_arg.is_empty() {
+        let specs: Vec<&str> =
+            models_arg.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        let catalog = std::sync::Arc::new(ModelCatalog::from_specs(&specs, Some(n_pes))?);
+        let mix_arg = args.req("mix")?.to_string();
+        let weights: Vec<f32> = if mix_arg.is_empty() {
+            vec![1.0; catalog.len()]
+        } else {
+            let w = mix_arg
+                .split(',')
+                .map(|s| s.trim().parse::<f32>().with_context(|| format!("bad --mix weight {s:?}")))
+                .collect::<Result<Vec<f32>>>()?;
+            if w.len() != catalog.len() {
+                bail!("--mix has {} weights for {} models", w.len(), catalog.len());
+            }
+            if w.iter().any(|&x| x < 0.0) || w.iter().sum::<f32>() <= 0.0 {
+                bail!("--mix weights must be non-negative with a positive sum");
+            }
+            w
+        };
+        let dins: Vec<usize> = catalog.iter().map(|(_, e)| e.program.din).collect();
+        let per_model = vec![shards; catalog.len()];
+        let fleet = Fleet::start_catalog(config, std::sync::Arc::clone(&catalog), &per_model)?;
+        let cache = apu::sim::plan_cache_stats();
+        println!(
+            "serving {} model(s) × {shards} shard(s) each — plan cache: {} build(s), {} hit(s)",
+            catalog.len(),
+            cache.builds,
+            cache.hits
+        );
+        let total: f32 = weights.iter().sum();
+        let mut load = SyntheticLoad::new(rate, 42);
+        let t0 = std::time::Instant::now();
+        let mut receivers = Vec::with_capacity(n);
+        let mut rejected_at_submit = 0u64;
+        for _ in 0..n {
+            std::thread::sleep(load.next_gap());
+            // sample the target model from the mix weights
+            let mut pick = load.rng.uniform(0.0, total);
+            let mut m = weights.len() - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if pick < *w {
+                    m = i;
+                    break;
+                }
+                pick -= w;
+            }
+            match fleet.submit_to(ModelId(m), load.next_input(dins[m])) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::Rejected { .. }) => rejected_at_submit += 1,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        return finish_fleet_run(
+            fleet,
+            receivers,
+            rejected_at_submit,
+            n,
+            t0,
+            &registry,
+            &metrics_out,
+            &trace_out,
+            tracer,
+        );
+    }
+
+    let (din, fleet) = match args.req("model")? {
         "synthetic" => {
             // Self-contained: a synthetic packed network per shard, no
             // `make artifacts` needed.
@@ -470,7 +554,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             (64, fleet)
         }
         "artifact" => {
-            let dir = args.get("artifacts").unwrap().to_string();
+            let dir = args.req("artifacts")?.to_string();
             let fleet = Fleet::start(config, move |_| {
                 let model = import_bundle(&format!("{dir}/lenet_model.json"))?;
                 let program =
@@ -505,7 +589,10 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             })?;
             (din, fleet)
         }
-        other => bail!("unknown model {other}"),
+        other => bail!(
+            "unknown --model {other} (valid: synthetic | artifact | zoo:<name>; zoo networks: {})",
+            apu::nn::zoo::names().join(", ")
+        ),
     };
 
     let mut load = SyntheticLoad::new(rate, 42);
@@ -520,6 +607,33 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             Err(e) => return Err(e.into()),
         }
     }
+    finish_fleet_run(
+        fleet,
+        receivers,
+        rejected_at_submit,
+        n,
+        t0,
+        &registry,
+        &metrics_out,
+        &trace_out,
+        tracer,
+    )
+}
+
+/// Shared tail of `apu fleet`: wait for every reply, shut the fleet
+/// down, print the SLO report, and honor `--metrics-out`/`--trace-out`.
+#[allow(clippy::too_many_arguments)]
+fn finish_fleet_run(
+    fleet: Fleet,
+    receivers: Vec<std::sync::mpsc::Receiver<Reply>>,
+    rejected_at_submit: u64,
+    n: usize,
+    t0: std::time::Instant,
+    registry: &std::sync::Arc<metrics::Registry>,
+    metrics_out: &str,
+    trace_out: &str,
+    tracer: Option<Tracer>,
+) -> Result<()> {
     for rx in receivers {
         rx.recv()?;
     }
@@ -533,18 +647,18 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     if !metrics_out.is_empty() {
         // Fold the end-of-run SLO gauges into the same dump as the live
         // shard counters, then export in the format the path implies.
-        report.export(&registry);
+        report.export(registry);
         let body = if metrics_out.ends_with(".json") {
             registry.to_json().pretty()
         } else {
             registry.render_prometheus()
         };
-        std::fs::write(&metrics_out, body)
+        std::fs::write(metrics_out, body)
             .with_context(|| format!("writing metrics to {metrics_out}"))?;
         println!("wrote metrics to {metrics_out}");
     }
     if let Some(t) = tracer {
-        t.write_chrome_trace(&trace_out)
+        t.write_chrome_trace(trace_out)
             .with_context(|| format!("writing trace to {trace_out}"))?;
         println!("wrote Chrome trace to {trace_out} ({} spans)", t.len());
     }
@@ -554,7 +668,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
 fn cmd_dse(argv: &[String]) -> Result<()> {
     let opts = vec![Opt { name: "sweep", default: Some("block"), help: "block | precision" }];
     let args = parse(argv, &opts)?;
-    match args.get("sweep").unwrap() {
+    match args.req("sweep")? {
         "block" => println!("{}", figures::fig10_11_block()?.render()),
         "precision" => println!("{}", figures::fig10_11_precision()?.render()),
         other => bail!("unknown sweep {other}"),

@@ -149,8 +149,48 @@ struct LoadedProgram {
     weight_bits: u64,
     /// True if weights exceed residency: stream per run.
     streamed: bool,
-    /// Pre-decoded execution plan; `None` falls back to the interpreter.
-    exec: Option<ExecPlan>,
+    /// Pre-decoded execution plan, shared process-wide via the
+    /// [`super::plan`] cache; `None` falls back to the interpreter.
+    exec: Option<Arc<ExecPlan>>,
+}
+
+/// Weight residency of a program on a machine: total resident weight
+/// bits (the one-time DMA) and whether any PE's footprint exceeds its
+/// SRAM (→ weights stream per run). Pure over (program, config) — the
+/// plan cache derives the `streamed` flag from the same computation
+/// `Apu::load` charges from, so they can never disagree.
+pub(crate) fn weight_residency(program: &Program, cfg: &ApuConfig) -> Result<(u64, bool)> {
+    let mut per_pe_bits = vec![0u64; cfg.n_pes];
+    let mut weight_bits = 0u64;
+    let mut cur_bits = 4u32;
+    // Residency = the union of distinct segments each PE ever holds;
+    // re-issuing LoadWeights for the same segment (the compiler does
+    // this for ragged conv tail waves) adds no footprint.
+    let mut seen = std::collections::HashSet::new();
+    for insn in &program.insns {
+        match insn {
+            Insn::ConfigLayer { nb, bits, .. } => {
+                if *nb as usize > cfg.n_pes {
+                    bail!("wave has {nb} blocks but machine has {} PEs (compiler must fold)", cfg.n_pes);
+                }
+                cur_bits = *bits as u32;
+            }
+            Insn::LoadWeights { pe, seg } => {
+                if *pe as usize >= cfg.n_pes {
+                    bail!("LoadWeights pe {pe} out of range");
+                }
+                if seen.insert((*pe, *seg)) {
+                    let n = program.segment(*seg)?.as_i8()?.len() as u64;
+                    let bits = n * cur_bits as u64;
+                    per_pe_bits[*pe as usize] += bits;
+                    weight_bits += bits;
+                }
+            }
+            _ => {}
+        }
+    }
+    let streamed = per_pe_bits.iter().any(|&b| b > cfg.pe_sram_bits as u64);
+    Ok((weight_bits, streamed))
 }
 
 /// Program handles [`Apu::load`] accepts: an owned or shared program is
@@ -350,42 +390,56 @@ impl Apu {
     pub fn load(&mut self, program: impl IntoProgramArc) -> Result<()> {
         let program = program.into_program_arc();
         program.validate()?;
-        let mut per_pe_bits = vec![0u64; self.cfg.n_pes];
-        let mut weight_bits = 0u64;
-        let mut cur_bits = 4u32;
-        // Residency = the union of distinct segments each PE ever holds;
-        // re-issuing LoadWeights for the same segment (the compiler does
-        // this for ragged conv tail waves) adds no footprint.
-        let mut seen = std::collections::HashSet::new();
-        for insn in &program.insns {
-            match insn {
-                Insn::ConfigLayer { nb, bits, .. } => {
-                    if *nb as usize > self.cfg.n_pes {
-                        bail!("wave has {nb} blocks but machine has {} PEs (compiler must fold)", self.cfg.n_pes);
-                    }
-                    cur_bits = *bits as u32;
-                }
-                Insn::LoadWeights { pe, seg } => {
-                    if *pe as usize >= self.cfg.n_pes {
-                        bail!("LoadWeights pe {pe} out of range");
-                    }
-                    if seen.insert((*pe, *seg)) {
-                        let n = program.segment(*seg)?.as_i8()?.len() as u64;
-                        let bits = n * cur_bits as u64;
-                        per_pe_bits[*pe as usize] += bits;
-                        weight_bits += bits;
-                    }
-                }
-                _ => {}
-            }
-        }
-        let streamed = per_pe_bits.iter().any(|&b| b > self.cfg.pe_sram_bits as u64);
+        let (weight_bits, streamed) = weight_residency(&program, &self.cfg)?;
         if !streamed {
             self.stats.load_pj += self.tech.dram_pj(weight_bits as usize)
                 + self.tech.sram_write_pj(weight_bits as usize, self.cfg.pe_sram_bits);
         }
-        let exec = ExecPlan::build(&program, &self.cfg, &self.tech, streamed).ok();
+        // Plans are shared process-wide: N machines loading the same
+        // program bytes on the same config pay exactly one plan build
+        // (the reference-interpreter fallback on planner failure is
+        // cached the same way).
+        let exec = super::plan::cached_plan(&program, &self.cfg, &self.tech, streamed);
         self.plan = Some(LoadedProgram { program, weight_bits, streamed, exec });
+        Ok(())
+    }
+
+    /// Load a program together with a pre-built shared [`ExecPlan`]
+    /// (from [`super::plan::shared_plan`] or a model catalog) — skips
+    /// even the cache lookup, so a fleet shard's load path does no plan
+    /// work at all. `None` forces the reference-interpreter fallback.
+    ///
+    /// The plan carries the (fingerprint, machine) key it was built
+    /// under; loading it onto a different program or machine errors here
+    /// rather than mis-executing. Weight-DMA charging is identical to
+    /// [`Apu::load`], so `SimStats`/`SimProfile` stay bitwise equal
+    /// whether a plan was shared or built privately.
+    pub fn load_with_plan(
+        &mut self,
+        program: impl IntoProgramArc,
+        plan: Option<Arc<ExecPlan>>,
+    ) -> Result<()> {
+        let program = program.into_program_arc();
+        program.validate()?;
+        let (weight_bits, streamed) = weight_residency(&program, &self.cfg)?;
+        if let Some(p) = plan.as_deref() {
+            let key = super::plan::PlanKey::new(program.fingerprint(), &self.cfg);
+            if p.key != key {
+                bail!(
+                    "shared plan mismatch: plan was built for fingerprint {:016x} on {} PEs, \
+                     load target is fingerprint {:016x} on {} PEs",
+                    p.key.fingerprint,
+                    p.key.n_pes,
+                    key.fingerprint,
+                    key.n_pes
+                );
+            }
+        }
+        if !streamed {
+            self.stats.load_pj += self.tech.dram_pj(weight_bits as usize)
+                + self.tech.sram_write_pj(weight_bits as usize, self.cfg.pe_sram_bits);
+        }
+        self.plan = Some(LoadedProgram { program, weight_bits, streamed, exec: plan });
         Ok(())
     }
 

@@ -12,9 +12,10 @@
 
 pub mod apu;
 pub mod pe;
-mod plan;
+pub mod plan;
 pub mod profile;
 
 pub use apu::{host_maxpool, Apu, ApuConfig, IntoProgramArc, SimStats};
 pub use pe::PeUnit;
+pub use plan::{plan_cache_builds, plan_cache_stats, shared_plan, ExecPlan, PlanCacheStats};
 pub use profile::{Phase, PhaseRecord, SimProfile};

@@ -26,9 +26,13 @@
 //! reference interpreter for that program — behavior, including error
 //! messages and their timing, stays exactly what it always was.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
 use anyhow::{bail, Context, Result};
 
-use super::apu::{host_maxpool, ApuConfig};
+use super::apu::{host_maxpool, weight_residency, ApuConfig};
 use super::profile::Phase;
 use crate::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
 use crate::isa::{HostOpKind, Insn, Program};
@@ -137,14 +141,28 @@ pub(crate) struct WaveScratch {
 }
 
 /// A program compiled for repeated execution: flat steps + charge tape.
+/// Plans are immutable once built and carry no per-run state, so one
+/// plan can back any number of [`super::Apu`] instances concurrently
+/// (shared via [`Arc`] through the process-wide cache below).
 #[derive(Debug, Clone)]
-pub(crate) struct ExecPlan {
-    pub steps: Vec<ExecStep>,
-    pub tape: Vec<TapeEntry>,
-    pub n_partial_slots: usize,
+pub struct ExecPlan {
+    pub(crate) steps: Vec<ExecStep>,
+    pub(crate) tape: Vec<TapeEntry>,
+    pub(crate) n_partial_slots: usize,
+    /// The cache key this plan was built under: the program's content
+    /// fingerprint plus the machine config. [`super::Apu::load_with_plan`]
+    /// verifies a caller-provided plan against the program/machine it is
+    /// being loaded onto, so a mismatched share fails loudly at load
+    /// instead of mis-executing.
+    pub(crate) key: PlanKey,
 }
 
 impl ExecPlan {
+    /// The content fingerprint of the program this plan executes.
+    pub fn fingerprint(&self) -> u64 {
+        self.key.fingerprint
+    }
+
     /// Compile `program` (already `validate()`d) into an execution plan,
     /// or fail if the program's shape is unsupported / would error at
     /// run time — the caller then falls back to the interpreter.
@@ -153,8 +171,10 @@ impl ExecPlan {
         cfg: &ApuConfig,
         tech: &Tech,
         streamed: bool,
+        key: PlanKey,
     ) -> Result<ExecPlan> {
         Builder {
+            key,
             program,
             cfg,
             tech,
@@ -171,6 +191,112 @@ impl ExecPlan {
         }
         .run()
     }
+}
+
+// ---------------------------------------------------------------------------
+// process-wide plan cache
+// ---------------------------------------------------------------------------
+
+/// Cache key: program content fingerprint + the machine parameters that
+/// shape a plan (PE count and SRAM bound gate wave legality and
+/// residency/streaming; the clock scales nothing in the tape today but is
+/// part of the machine identity). The `Tech` model is deliberately *not*
+/// part of the key: every [`super::Apu`] is constructed with
+/// `Tech::tsmc16()` and has no setter, so plans never diverge on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct PlanKey {
+    pub fingerprint: u64,
+    pub n_pes: usize,
+    pub pe_sram_bits: usize,
+    pub clock_bits: u64,
+}
+
+impl PlanKey {
+    pub(crate) fn new(fingerprint: u64, cfg: &ApuConfig) -> PlanKey {
+        PlanKey {
+            fingerprint,
+            n_pes: cfg.n_pes,
+            pe_sram_bits: cfg.pe_sram_bits,
+            clock_bits: cfg.clock_ghz.to_bits(),
+        }
+    }
+}
+
+/// One cache entry: the shared plan (`None` = the planner bailed for
+/// this program/machine — the failure is cached too, so N interpreter
+/// fallbacks pay one failed build, not N) plus how many times a build
+/// ran for this key (1 after first touch; tests assert it stays 1).
+struct CacheSlot {
+    plan: Option<Arc<ExecPlan>>,
+    builds: u64,
+}
+
+static PLAN_CACHE: OnceLock<Mutex<HashMap<PlanKey, CacheSlot>>> = OnceLock::new();
+static CACHE_BUILDS: AtomicU64 = AtomicU64::new(0);
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+
+fn cache() -> &'static Mutex<HashMap<PlanKey, CacheSlot>> {
+    PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Process-wide plan cache counters (builds = plan compilations that
+/// actually ran, hits = loads served from the cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub builds: u64,
+    pub hits: u64,
+    pub entries: usize,
+}
+
+pub fn plan_cache_stats() -> PlanCacheStats {
+    PlanCacheStats {
+        builds: CACHE_BUILDS.load(Ordering::Relaxed),
+        hits: CACHE_HITS.load(Ordering::Relaxed),
+        entries: cache().lock().unwrap().len(),
+    }
+}
+
+/// How many plan builds ran for (`fingerprint`, machine) — 0 if this key
+/// was never loaded, 1 forever after (the per-key invariant N shards
+/// rely on). Keyed lookups stay meaningful even when unrelated tests or
+/// models churn the global counters concurrently.
+pub fn plan_cache_builds(fingerprint: u64, cfg: &ApuConfig) -> u64 {
+    cache().lock().unwrap().get(&PlanKey::new(fingerprint, cfg)).map_or(0, |s| s.builds)
+}
+
+/// Look up (or build-and-insert) the shared plan for `program` on `cfg`.
+/// The map lock is held across a miss's build, so concurrent loaders of
+/// the same model serialize into exactly one build — the others wait and
+/// take the cached `Arc`. Returns `None` when the planner bails (the
+/// caller falls back to the reference interpreter, as ever).
+pub(crate) fn cached_plan(
+    program: &Program,
+    cfg: &ApuConfig,
+    tech: &Tech,
+    streamed: bool,
+) -> Option<Arc<ExecPlan>> {
+    let key = PlanKey::new(program.fingerprint(), cfg);
+    let mut map = cache().lock().unwrap();
+    if let Some(slot) = map.get(&key) {
+        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        return slot.plan.clone();
+    }
+    CACHE_BUILDS.fetch_add(1, Ordering::Relaxed);
+    let plan = ExecPlan::build(program, cfg, tech, streamed, key).ok().map(Arc::new);
+    map.insert(key, CacheSlot { plan: plan.clone(), builds: 1 });
+    plan
+}
+
+/// Resolve the shared execution plan for `program` on machine `cfg`
+/// through the process-wide cache — the entry point model catalogs use
+/// to pay one plan build for a whole fleet of shards. Validates the
+/// program and computes weight residency exactly like [`super::Apu::load`];
+/// `Ok(None)` means the planner declined and the program will run on the
+/// reference interpreter.
+pub fn shared_plan(program: &Program, cfg: &ApuConfig) -> Result<Option<Arc<ExecPlan>>> {
+    program.validate()?;
+    let (_, streamed) = weight_residency(program, cfg)?;
+    Ok(cached_plan(program, cfg, &Tech::tsmc16(), streamed))
 }
 
 // ---------------------------------------------------------------------------
@@ -214,6 +340,7 @@ impl SymBuf {
 }
 
 struct Builder<'a> {
+    key: PlanKey,
     program: &'a Program,
     cfg: &'a ApuConfig,
     tech: &'a Tech,
@@ -302,7 +429,12 @@ impl Builder<'_> {
         if self.acts.len != self.program.dout {
             bail!("plan: program produces {} outputs, expected {}", self.acts.len, self.program.dout);
         }
-        Ok(ExecPlan { steps: self.steps, tape: self.tape, n_partial_slots: self.slot_of_buf.len() })
+        Ok(ExecPlan {
+            steps: self.steps,
+            tape: self.tape,
+            n_partial_slots: self.slot_of_buf.len(),
+            key: self.key,
+        })
     }
 
     /// Append a charge, eliding all-zero charges like `Apu::charge`.

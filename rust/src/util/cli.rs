@@ -28,6 +28,12 @@ impl Args {
         self.values.get(name).map(String::as_str)
     }
 
+    /// Like [`Args::get`], but a missing value is a context-rich error
+    /// instead of an `Option` (for options the command requires).
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         let v = self.values.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
         Ok(v.parse()?)
@@ -108,6 +114,14 @@ mod tests {
 
     fn sv(xs: &[&str]) -> Vec<String> {
         xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn req_errors_name_the_option() {
+        let a = parse(&sv(&[]), &opts()).unwrap();
+        assert_eq!(a.req("pes").unwrap(), "10");
+        let err = format!("{:#}", a.req("absent").unwrap_err());
+        assert!(err.contains("--absent"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Model-keyed serving end to end: content fingerprints are stable and
+//! content-sensitive, N simulators loading the same model pay exactly one
+//! plan build through the process-wide cache (with bitwise-identical
+//! outputs and stats whether the plan was shared or built privately), and
+//! a catalog-backed fleet routes mixed-model traffic to per-model shard
+//! groups with per-model SLO accounting.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use apu::compiler::{compile_packed_layers, synthetic_packed_network};
+use apu::coordinator::{
+    BatchPolicy, DispatchPolicy, Fleet, FleetConfig, ModelCatalog, SloReport, SyntheticLoad,
+};
+use apu::isa::artifact::to_bytes;
+use apu::isa::{fingerprint_bytes, Program};
+use apu::obs::metrics::Registry;
+use apu::sim::{plan_cache_builds, shared_plan, Apu, ApuConfig};
+use apu::util::rng::Rng;
+
+/// A small synthetic packed-FC program. Seeds must be unique per test in
+/// this binary: the plan cache is process-wide, so per-key build-count
+/// assertions rely on each test exercising its own fingerprints.
+fn test_program(dims: &[usize], seed: u64, name: &str) -> Program {
+    let layers = synthetic_packed_network(dims, 4, 4, seed).unwrap();
+    compile_packed_layers(name, &layers, 0.2, 4, 4).unwrap()
+}
+
+fn test_cfg() -> ApuConfig {
+    ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 }
+}
+
+#[test]
+fn fingerprint_is_stable_and_content_sensitive() {
+    // identical construction → identical canonical bytes → identical hash
+    let a = test_program(&[16, 20, 12], 9001, "fp-stable");
+    let b = test_program(&[16, 20, 12], 9001, "fp-stable");
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(to_bytes(&a), to_bytes(&b));
+
+    // different weights (seed) or a different name → different hash
+    let c = test_program(&[16, 20, 12], 9002, "fp-stable");
+    assert_ne!(a.fingerprint(), c.fingerprint());
+    let d = test_program(&[16, 20, 12], 9001, "fp-stable-2");
+    assert_ne!(a.fingerprint(), d.fingerprint());
+
+    // the fingerprint covers every byte of the canonical encoding:
+    // flipping any single byte must change it (spot-check a spread)
+    let bytes = to_bytes(&a);
+    let fp = fingerprint_bytes(&bytes);
+    assert_eq!(fp, a.fingerprint());
+    for frac in [0, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        let mut mutated = bytes.clone();
+        mutated[frac] ^= 0x40;
+        assert_ne!(fingerprint_bytes(&mutated), fp, "flip at byte {frac} went unnoticed");
+    }
+
+    // and it survives the artifact round-trip (save → load → same hash)
+    let path = std::env::temp_dir().join(format!("apu-fp-{}.apu", std::process::id()));
+    a.save(&path).unwrap();
+    let loaded = Program::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.fingerprint(), a.fingerprint());
+}
+
+#[test]
+fn n_shards_pay_exactly_one_plan_build() {
+    let program = Arc::new(test_program(&[16, 24, 12], 9100, "one-build"));
+    let cfg = test_cfg();
+    let fp = program.fingerprint();
+    assert_eq!(plan_cache_builds(fp, &cfg), 0, "key already touched — seed collision?");
+
+    // Resolve the shared plan once (what a ModelCatalog does), then load
+    // it onto N machines concurrently — the cache must record exactly one
+    // build no matter how many loaders race.
+    let plan = shared_plan(&program, &cfg).unwrap();
+    assert!(plan.is_some(), "synthetic packed-FC program must be plannable");
+    assert_eq!(plan_cache_builds(fp, &cfg), 1);
+
+    let mut rng = Rng::new(77);
+    let input: Vec<f32> = (0..program.din).map(|_| rng.normal()).collect();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let program = Arc::clone(&program);
+            let cfg = cfg.clone();
+            let input = input.clone();
+            std::thread::spawn(move || {
+                let mut apu = Apu::new(cfg);
+                apu.load(program).unwrap();
+                assert!(apu.is_planned());
+                (apu.run(&input).unwrap(), apu.stats().clone())
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(plan_cache_builds(fp, &cfg), 1, "concurrent loads must share one build");
+
+    // shared-plan outputs and stats are bitwise identical to a private
+    // reference-interpreter run — sharing must not perturb the numbers
+    let mut refr = Apu::new(cfg.clone());
+    refr.load(&*program).unwrap();
+    let want = refr.run_reference(&input).unwrap();
+    for (out, stats) in &results {
+        assert_eq!(out.len(), want.len());
+        for (i, (&g, &w)) in out.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "output {i}: {g} vs {w}");
+        }
+        assert_eq!(stats, refr.stats(), "shared-plan stats diverged from reference");
+    }
+
+    // a different machine shape is a different key: its own single build
+    let other = ApuConfig { pe_sram_bits: 1 << 15, ..cfg.clone() };
+    let mut apu = Apu::new(other.clone());
+    apu.load(&*program).unwrap();
+    assert_eq!(plan_cache_builds(fp, &other), 1);
+    assert_eq!(plan_cache_builds(fp, &cfg), 1, "other-machine build must not touch this key");
+}
+
+#[test]
+fn mixed_model_fleet_routes_and_reports_per_model() {
+    let cfg = test_cfg();
+    let mut cat = ModelCatalog::new();
+    // distinct output dims make cross-model routing mistakes observable
+    let pa = Arc::new(test_program(&[16, 24, 12], 9200, "mix-a"));
+    let pb = Arc::new(test_program(&[16, 18, 10], 9201, "mix-b"));
+    let (fa, fb) = (pa.fingerprint(), pb.fingerprint());
+    let a = cat.add_program("mix-a", Arc::clone(&pa), cfg.clone()).unwrap();
+    let b = cat.add_program("mix-b", Arc::clone(&pb), cfg.clone()).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let fleet = Fleet::start_catalog(
+        FleetConfig {
+            shards: 0, // ignored: sized by shards_per_model below
+            policy: DispatchPolicy::RoundRobin,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            queue_cap: 4096,
+            metrics: Arc::new(Registry::new()),
+            ..FleetConfig::default()
+        },
+        Arc::new(cat),
+        &[2, 2],
+    )
+    .unwrap();
+    // two shards per model, yet still one plan build per model
+    assert_eq!(plan_cache_builds(fa, &cfg), 1);
+    assert_eq!(plan_cache_builds(fb, &cfg), 1);
+
+    // 70/30 mixed traffic, interleaved in flight across both groups
+    let mut load = SyntheticLoad::new(50_000.0, 23);
+    let (mut na, mut nb) = (0u64, 0u64);
+    let rxs: Vec<_> = (0..40)
+        .map(|i| {
+            let m = if i % 10 < 7 { na += 1; a } else { nb += 1; b };
+            (m, fleet.submit_to(m, load.next_input(16)).unwrap())
+        })
+        .collect();
+    for (m, rx) in rxs {
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.model, m);
+        let dout = if m == a { 12 } else { 10 };
+        assert_eq!(reply.output.unwrap().len(), dout);
+        let group = &fleet.groups()[m.0];
+        assert!(group.shard_ids().contains(&reply.shard), "reply from a foreign group's shard");
+    }
+
+    let m = fleet.shutdown().unwrap();
+    let report = SloReport::from_metrics(&m, t0.elapsed());
+    assert_eq!(report.per_model.len(), 2);
+    let (ref name_a, ref slo_a) = report.per_model[a.0];
+    let (ref name_b, ref slo_b) = report.per_model[b.0];
+    assert_eq!((name_a.as_str(), name_b.as_str()), ("mix-a", "mix-b"));
+    // per-model rows are disjoint group aggregates that sum to the fleet
+    assert_eq!(slo_a.completed, na);
+    assert_eq!(slo_b.completed, nb);
+    assert_eq!(slo_a.completed + slo_b.completed, report.fleet.completed);
+    assert_eq!(report.fleet.failed + report.fleet.rejected, 0);
+    let rendered = report.render();
+    assert!(rendered.contains("per-model:") && rendered.contains("mix-a"), "{rendered}");
+}

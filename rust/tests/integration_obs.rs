@@ -194,10 +194,13 @@ fn fleet_metrics_export_prometheus_and_json() {
     let m = fleet.shutdown().unwrap();
     assert_eq!(m.completed(), n);
     assert_eq!(reg.counter_total("apu_fleet_completed_total"), n);
-    // per-shard series match per-shard dispatcher accounting
+    // per-shard series (model-labelled) match per-shard dispatcher accounting
     for (i, sh) in m.shards.iter().enumerate() {
         let s = i.to_string();
-        let got = reg.counter_value("apu_fleet_completed_total", &[("shard", s.as_str())]);
+        let got = reg.counter_value(
+            "apu_fleet_completed_total",
+            &[("model", "default"), ("shard", s.as_str())],
+        );
         assert_eq!(got, sh.completed, "shard {i}");
     }
     // one engine run_batch call per flushed batch, no more: the engine
@@ -212,7 +215,7 @@ fn fleet_metrics_export_prometheus_and_json() {
     let text_pre = reg.render_prometheus();
     let mut hist_count = 0u64;
     for i in 0..m.shards.len() {
-        let line = format!("apu_fleet_batch_size_count{{shard=\"{i}\"}} ");
+        let line = format!("apu_fleet_batch_size_count{{model=\"default\",shard=\"{i}\"}} ");
         let c: u64 = text_pre
             .lines()
             .find_map(|l| l.strip_prefix(line.as_str()))
@@ -229,9 +232,12 @@ fn fleet_metrics_export_prometheus_and_json() {
     assert!(text.contains("# TYPE apu_fleet_completed_total counter"), "{text}");
     assert!(text.contains("# TYPE apu_fleet_request_latency_us histogram"), "{text}");
     assert!(text.contains("apu_slo_p99_us{shard=\"fleet\"}"), "{text}");
+    // the per-model SLO aggregate is exported alongside the shard rows
+    assert!(text.contains("apu_slo_p99_us{model=\"default\"}"), "{text}");
     // bucket cumulativity for shard 0's latency histogram: counts never
-    // decrease and the +Inf bucket equals the series count
-    let prefix = "apu_fleet_request_latency_us_bucket{shard=\"0\",le=\"";
+    // decrease and the +Inf bucket equals the series count (labels are
+    // sorted, with `le` always last)
+    let prefix = "apu_fleet_request_latency_us_bucket{model=\"default\",shard=\"0\",le=\"";
     let mut prev = 0u64;
     let mut last = 0u64;
     let mut saw_inf = false;
@@ -244,7 +250,8 @@ fn fleet_metrics_export_prometheus_and_json() {
         saw_inf |= le == "+Inf";
     }
     assert!(saw_inf, "no +Inf bucket:\n{text}");
-    let count_line = format!("apu_fleet_request_latency_us_count{{shard=\"0\"}} {last}");
+    let count_line =
+        format!("apu_fleet_request_latency_us_count{{model=\"default\",shard=\"0\"}} {last}");
     assert!(text.contains(&count_line), "count != +Inf bucket:\n{text}");
 
     // the JSON dump parses back and carries the same totals
