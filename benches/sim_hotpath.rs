@@ -6,7 +6,7 @@
 
 use apu::compiler::emit::{compile_packed_layers, synthetic_packed_network};
 use apu::pruning::Quantizer;
-use apu::sim::{Apu, ApuConfig};
+use apu::sim::{Apu, ApuConfig, ExecOptions};
 use apu::util::bench::{bench, budget, write_report, BenchResult};
 
 fn main() {
@@ -36,6 +36,36 @@ fn main() {
     println!("{}", r.report());
     println!("  {:.0} ns/inference amortized over batch of 32", r.mean_ns / 32.0);
     results.push(r);
+
+    // The headline scoreboard: the same batch across lane-pool widths.
+    // Outputs are bitwise identical at every width — only wall clock moves.
+    let mut t1_ns = 0.0;
+    for threads in [1usize, 2, 4] {
+        apu.set_threads(threads);
+        let r = bench(&format!("sim/lenet_inference_batch32_t{threads}"), budget(), || {
+            apu.run_batch(&batch).unwrap().len()
+        });
+        println!("{}", r.report());
+        if threads == 1 {
+            t1_ns = r.mean_ns;
+        } else if t1_ns > 0.0 {
+            println!("  {:.2}x vs 1 thread", t1_ns / r.mean_ns);
+        }
+        results.push(r);
+    }
+
+    // The pre-PR-9 lane-major kernel (per-lane weight re-streaming), single
+    // thread — the baseline the batch-major weight-stationary kernel beats.
+    apu.set_exec_options(ExecOptions { threads: 1, lane_major_kernel: true });
+    let r = bench("sim/lenet_inference_batch32_lane_major_kernel", budget(), || {
+        apu.run_batch(&batch).unwrap().len()
+    });
+    println!("{}", r.report());
+    if t1_ns > 0.0 {
+        println!("  batch-major kernel is {:.2}x vs this lane-major baseline", r.mean_ns / t1_ns);
+    }
+    results.push(r);
+    apu.set_exec_options(ExecOptions::default());
 
     // big-block single layer (PE inner loop dominated)
     let layers = synthetic_packed_network(&[4000, 4000], 10, 4, 3).unwrap();

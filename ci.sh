@@ -6,14 +6,16 @@ cargo build --release
 # Examples are part of the contract (ROADMAP demos); rot fails the build.
 cargo build --release --examples
 # Observability smoke: per-layer profile must check exactly against
-# SimStats (the command fails if the invariant breaks).
-./target/release/apu profile --net vgg-nano --machine nano
+# SimStats (the command fails if the invariant breaks). --threads 2
+# exercises the lane pool: the check also proves threading is bitwise
+# invisible to stats/profile.
+./target/release/apu profile --net vgg-nano --machine nano --threads 2
 cargo test -q
 # Perf smoke: the hot-path benches must run, and the machine-readable
 # report tracks the perf trajectory from PR 5 onward (short budget —
 # this guards against rot, not noise-free numbers). Override the report
 # path with BENCH_OUT=... when comparing across branches.
-BENCH_OUT=${BENCH_OUT:-BENCH_8.json}
+BENCH_OUT=${BENCH_OUT:-BENCH_9.json}
 APU_BENCH_MS=60 cargo bench --bench sim_hotpath -- --json "$BENCH_OUT"
 test -s "$BENCH_OUT"
 cargo fmt --check

@@ -56,6 +56,12 @@ impl ApuEngine {
     pub fn stats(&self) -> &crate::sim::SimStats {
         self.apu.stats()
     }
+
+    /// Set the lane-pool width for planned `run_batch` calls (bitwise
+    /// invisible to outputs/stats; see `FleetConfig::threads_per_shard`).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.apu.set_threads(threads);
+    }
 }
 
 impl Engine for ApuEngine {

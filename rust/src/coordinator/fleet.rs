@@ -76,6 +76,11 @@ pub struct FleetConfig {
     /// enqueue→dequeue→batch-assembly→engine-run→reply lifecycle as
     /// Chrome trace spans on this tracer.
     pub tracer: Option<Tracer>,
+    /// Lane-pool width each shard's APU engine uses for planned batch
+    /// execution (`Apu::set_threads`). Bitwise invisible to outputs and
+    /// stats; 1 = sequential (no threads spawned). Only catalog-backed
+    /// fleets apply it — engines from custom factories set their own.
+    pub threads_per_shard: usize,
 }
 
 impl Default for FleetConfig {
@@ -87,6 +92,7 @@ impl Default for FleetConfig {
             queue_cap: 256,
             metrics: metrics::global(),
             tracer: None,
+            threads_per_shard: 1,
         }
     }
 }
@@ -371,11 +377,14 @@ impl Fleet {
             .zip(shards_per_model)
             .map(|((_, e), &n)| (e.name.clone(), n))
             .collect();
+        let threads = config.threads_per_shard;
         Fleet::start_grouped(
             config,
             groups,
             Arc::new(move |_shard, model| {
-                Ok(Box::new(catalog.engine(model)?) as Box<dyn Engine>)
+                let mut engine = catalog.engine(model)?;
+                engine.set_threads(threads);
+                Ok(Box::new(engine) as Box<dyn Engine>)
             }),
         )
     }

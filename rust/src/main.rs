@@ -7,11 +7,11 @@
 //!               [--pes N] [--artifacts DIR]
 //! apu simulate  [--pes N] [--n N] [--artifacts DIR]
 //! apu profile   [--net <zoo>] [--machine paper|nano] [--seed S] [--runs N]
-//!               [--trace-out FILE]
+//!               [--threads T] [--trace-out FILE]
 //! apu serve     [--engine sim|golden] [--requests N] [--rate RPS] [--batch B]
 //! apu fleet     [--shards N] [--policy rr|lo|jsq] [--requests N] [--rate RPS]
 //!               [--batch B] [--queue-cap Q] [--model synthetic|artifact|zoo:<name>]
-//!               [--models zoo:a,zoo:b,prog.apu [--mix 70,20,10]]
+//!               [--models zoo:a,zoo:b,prog.apu [--mix 70,20,10]] [--threads T]
 //!               [--metrics-out FILE] [--trace-out FILE]
 //! apu dse       [--sweep block|precision]
 //! apu netlist   [--pes N] [--block S] [--bits B]
@@ -286,6 +286,7 @@ fn cmd_profile(argv: &[String]) -> Result<()> {
         Opt { name: "machine", default: Some("nano"), help: "mapping target: paper (9×513×513) | nano (4×64×128)" },
         Opt { name: "seed", default: Some("7"), help: "synthetic weight seed" },
         Opt { name: "runs", default: Some("2"), help: "inferences to profile" },
+        Opt { name: "threads", default: Some("1"), help: "lane-pool workers for the batched run (bitwise invisible)" },
         Opt { name: "trace-out", default: Some(""), help: "write a Chrome trace-event JSON (compiler passes + sim phases)" },
     ];
     let args = parse(argv, &opts)?;
@@ -303,6 +304,7 @@ fn cmd_profile(argv: &[String]) -> Result<()> {
         other => bail!("unknown --machine {other} (want paper | nano)"),
     };
     let runs = args.get_usize("runs")?.max(1);
+    let threads = args.get_usize("threads")?.max(1);
     let trace_out = args.req("trace-out")?.to_string();
 
     let tracer = Tracer::new();
@@ -317,11 +319,16 @@ fn cmd_profile(argv: &[String]) -> Result<()> {
     let mut sim = Apu::new(cfg);
     sim.load(&compiled.program)?;
     sim.enable_profiling();
+    sim.set_threads(threads);
     let mut rng = Rng::new(popts.seed ^ 0xda7a);
-    for _ in 0..runs {
-        let x: Vec<f32> = (0..compiled.program.din).map(|_| rng.uniform(-1.0, 1.0)).collect();
-        sim.run(&x)?;
-    }
+    // One batched run over all inputs: the lane pool splits the lanes
+    // across `threads` workers, and the profile==stats check below
+    // exercises the bitwise-exactness invariant under threading.
+    let inputs: Vec<Vec<f32>> = (0..runs)
+        .map(|_| (0..compiled.program.din).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    sim.run_batch(&refs)?;
     let st = sim.stats().clone();
     let profile = sim.take_profile().context("profiling was enabled but no profile recorded")?;
     // The profiler's invariant, enforced rather than assumed: its
@@ -434,6 +441,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             help: "traffic weights matching --models, e.g. 70,20,10 (default uniform)",
         },
         Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
+        Opt { name: "threads", default: Some("1"), help: "lane-pool workers per shard engine (bitwise invisible)" },
         Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
         Opt {
             name: "metrics-out",
@@ -459,6 +467,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let trace_out = args.req("trace-out")?.to_string();
     let registry = metrics::global();
     let tracer = (!trace_out.is_empty()).then(Tracer::new);
+    let threads = args.get_usize("threads")?.max(1);
     let config = FleetConfig {
         shards,
         policy,
@@ -469,6 +478,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         queue_cap: args.get_usize("queue-cap")?,
         metrics: registry.clone(),
         tracer: tracer.clone(),
+        threads_per_shard: threads,
     };
     let n_pes = args.get_usize("pes")?;
 
@@ -549,7 +559,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 let layers = synthetic_packed_network(&[64, 48, 10], n_pes, 4, 1000 + shard as u64)?;
                 let program = compile_packed_layers("fleet", &layers, 0.15, 4, n_pes)?;
                 let apu = Apu::new(ApuConfig { n_pes, pe_sram_bits: 1 << 20, clock_ghz: 1.0 });
-                Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn apu::coordinator::Engine>)
+                let mut engine = ApuEngine::new(apu, &program)?;
+                engine.set_threads(threads);
+                Ok(Box::new(engine) as Box<dyn apu::coordinator::Engine>)
             })?;
             (64, fleet)
         }
@@ -560,7 +572,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 let program =
                     compile_packed_layers(&model.name, &model.layers, model.in_scale, model.bits, n_pes)?;
                 let apu = Apu::new(ApuConfig { n_pes, ..Default::default() });
-                Ok(Box::new(ApuEngine::new(apu, &program)?) as Box<dyn apu::coordinator::Engine>)
+                let mut engine = ApuEngine::new(apu, &program)?;
+                engine.set_threads(threads);
+                Ok(Box::new(engine) as Box<dyn apu::coordinator::Engine>)
             })?;
             (800, fleet)
         }
@@ -585,7 +599,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 .with_context(|| format!("compiling {name} for the fleet"))?;
             let din = compiled.program.din;
             let fleet = Fleet::start(config, move |_| {
-                Ok(Box::new(ApuEngine::from_compiled(&compiled)?) as Box<dyn apu::coordinator::Engine>)
+                let mut engine = ApuEngine::from_compiled(&compiled)?;
+                engine.set_threads(threads);
+                Ok(Box::new(engine) as Box<dyn apu::coordinator::Engine>)
             })?;
             (din, fleet)
         }
@@ -645,9 +661,11 @@ fn finish_fleet_run(
         println!("({rejected_at_submit} of {n} arrivals rejected by admission control)");
     }
     if !metrics_out.is_empty() {
-        // Fold the end-of-run SLO gauges into the same dump as the live
-        // shard counters, then export in the format the path implies.
+        // Fold the end-of-run SLO gauges and the plan-cache snapshot into
+        // the same dump as the live shard counters, then export in the
+        // format the path implies.
         report.export(registry);
+        apu::sim::export_plan_cache_metrics(registry);
         let body = if metrics_out.ends_with(".json") {
             registry.to_json().pretty()
         } else {

@@ -52,8 +52,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::lane_pool;
 use super::pe::PeUnit;
-use super::plan::{ExecPlan, ExecStep, StreamState, WaveScratch};
+use super::plan::{ExecPlan, StreamState, WaveScratch};
 use super::profile::{Phase, SimProfile};
 use crate::hwmodel::{pe_energy_per_cycle, PeConfig, PeMode, Tech};
 use crate::isa::{DataSegment, HostOpKind, Insn, Program};
@@ -74,6 +75,29 @@ impl Default for ApuConfig {
     /// (400×400 INT4), 1 GHz.
     fn default() -> Self {
         ApuConfig { n_pes: 10, pe_sram_bits: 640_000, clock_ghz: 1.0 }
+    }
+}
+
+/// Execution knobs for the planned datapath. Every setting is
+/// *bitwise-invisible*: outputs, [`SimStats`], and [`SimProfile`] do not
+/// depend on it (the determinism matrix in `integration_plan` enforces
+/// this), so callers tune purely for wall-clock speed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecOptions {
+    /// Worker threads for planned batch execution: the batch's lanes are
+    /// partitioned into contiguous chunks, one scoped worker per chunk
+    /// (see [`super::lane_pool`]). `1` (the default) spawns no threads —
+    /// it is exactly the historical sequential path.
+    pub threads: usize,
+    /// Use the legacy lane-at-a-time wave kernel instead of the
+    /// batch-major weight-stationary one. Kept so the bench harness can
+    /// compare the kernels; never faster, always bitwise identical.
+    pub lane_major_kernel: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { threads: 1, lane_major_kernel: false }
     }
 }
 
@@ -251,11 +275,18 @@ pub struct Apu {
     /// Per-element value state for the planned executor (one per batch
     /// lane, grown on demand, buffers reused across runs).
     streams: Vec<StreamState>,
-    /// Shared latch/output scratch for planned waves.
-    scratch: WaveScratch,
+    /// Per-worker latch/output scratch for planned waves (index = lane-
+    /// pool worker slot; slot 0 is the calling thread).
+    scratches: Vec<WaveScratch>,
+    /// Per-worker planned row counters, zeroed per batch and summed into
+    /// `planned_rows` after the workers join (u64 adds — the merge is
+    /// order-free, so the total is thread-count independent).
+    worker_rows: Vec<Vec<u64>>,
     /// Rows computed by the planned executor, per PE (the interpreter's
     /// counterpart lives in each [`PeUnit`]).
     planned_rows: Vec<u64>,
+    /// Planned-datapath execution knobs (bitwise-invisible tuning).
+    opts: ExecOptions,
 }
 
 #[derive(Debug, Clone)]
@@ -288,9 +319,29 @@ impl Apu {
             cur: None,
             profile: None,
             streams: Vec::new(),
-            scratch: WaveScratch::default(),
+            scratches: Vec::new(),
+            worker_rows: Vec::new(),
             planned_rows,
+            opts: ExecOptions::default(),
         }
+    }
+
+    /// The planned-datapath execution knobs currently in effect.
+    pub fn exec_options(&self) -> &ExecOptions {
+        &self.opts
+    }
+
+    /// Set the planned-datapath execution knobs (threads, kernel). Takes
+    /// effect on the next `run`/`run_batch`; bitwise-invisible in
+    /// outputs, stats, and profile.
+    pub fn set_exec_options(&mut self, opts: ExecOptions) {
+        self.opts = opts;
+    }
+
+    /// Convenience: set just the lane-pool worker count (`0` is clamped
+    /// to `1`, the sequential path).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.opts.threads = threads.max(1);
     }
 
     pub fn stats(&self) -> &SimStats {
@@ -493,7 +544,8 @@ impl Apu {
     }
 
     /// Planned executor: run every batch lane through the pre-decoded
-    /// steps, then replay the charge tape once per inference.
+    /// steps — lanes partitioned across the lane-pool workers — then
+    /// replay the charge tape once per inference on this thread.
     fn run_planned(&mut self, plan: &LoadedProgram, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let exec = plan.exec.as_ref().expect("run_planned without exec plan");
         let p = &plan.program;
@@ -503,6 +555,9 @@ impl Apu {
             }
         }
         let n = inputs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
         if self.streams.len() < n {
             self.streams.resize_with(n, StreamState::default);
         }
@@ -514,26 +569,45 @@ impl Apu {
                 st.partial.resize_with(exec.n_partial_slots, Vec::new);
             }
         }
-        for step in &exec.steps {
-            match step {
-                ExecStep::Commit => {
-                    for st in self.streams.iter_mut().take(n) {
-                        std::mem::swap(&mut st.acts, &mut st.pending);
-                        st.pending.clear();
-                    }
-                }
-                ExecStep::Wave(w) => {
-                    for st in self.streams.iter_mut().take(n) {
-                        w.apply(st, &mut self.scratch, &mut self.planned_rows);
-                    }
-                }
-                ExecStep::Host(h) => {
-                    for st in self.streams.iter_mut().take(n) {
-                        h.apply(st);
-                    }
-                }
+        // Partition the lanes into contiguous chunks, one scoped worker
+        // per chunk, each with a private scratch and row counter. Lanes
+        // are independent and per-lane math is identical under any
+        // partition; the charge replay below stays on this thread in
+        // lane order — so outputs, SimStats, and SimProfile are bitwise
+        // identical for any thread count (1 thread spawns nothing).
+        let (chunk, workers) = lane_pool::partition(n, self.opts.threads);
+        if self.scratches.len() < workers {
+            self.scratches.resize_with(workers, WaveScratch::default);
+        }
+        if self.worker_rows.len() < workers {
+            self.worker_rows.resize_with(workers, Vec::new);
+        }
+        for rows in self.worker_rows.iter_mut().take(workers) {
+            rows.clear();
+            rows.resize(self.cfg.n_pes, 0);
+        }
+        let steps = exec.steps.as_slice();
+        let lane_major = self.opts.lane_major_kernel;
+        {
+            let lanes = &mut self.streams[..n];
+            let jobs: Vec<_> = lanes
+                .chunks_mut(chunk)
+                .zip(self.scratches.iter_mut())
+                .zip(self.worker_rows.iter_mut())
+                .map(|((lanes, scratch), rows)| {
+                    move || super::plan::execute_steps(steps, lanes, scratch, rows, lane_major)
+                })
+                .collect();
+            lane_pool::run(jobs);
+        }
+        for rows in self.worker_rows.iter().take(workers) {
+            for (total, &r) in self.planned_rows.iter_mut().zip(rows) {
+                *total += r;
             }
         }
+        let ins = lane_pool::instruments();
+        ins.workers.set(workers as f64);
+        ins.steps.add(n as u64 * steps.len() as u64);
         // Replay the charge tape per inference: same values, same order
         // as the interpreter, so stats/profile stay bitwise identical.
         for _ in 0..n {
@@ -1241,6 +1315,42 @@ mod tests {
         let before = batched.stats().clone();
         assert!(batched.run_batch(&[]).unwrap().is_empty());
         assert_eq!(batched.stats(), &before);
+    }
+
+    #[test]
+    fn exec_options_are_bitwise_invisible() {
+        let (layers, input) = two_layer_fixture(45);
+        let program = compile_packed_layers("fixture", &layers, 0.1, 4, 4).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..5)
+            .map(|k| input.iter().map(|&x| x * (1.0 + k as f32 * 0.07)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let run_with = |opts: ExecOptions| {
+            let mut a = Apu::new(ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 });
+            a.load(&program).unwrap();
+            a.enable_profiling();
+            a.set_exec_options(opts);
+            let out = a.run_batch(&refs).unwrap();
+            let stats = a.stats().clone();
+            let profile = a.take_profile().unwrap();
+            (out, stats, profile, a.pe_rows_computed())
+        };
+        let (out, stats, profile, rows) = run_with(ExecOptions::default());
+        let variants = [
+            ExecOptions { threads: 2, lane_major_kernel: false },
+            ExecOptions { threads: 4, lane_major_kernel: false },
+            // more workers than lanes: degenerates to one lane each
+            ExecOptions { threads: 16, lane_major_kernel: false },
+            ExecOptions { threads: 1, lane_major_kernel: true },
+            ExecOptions { threads: 3, lane_major_kernel: true },
+        ];
+        for opts in variants {
+            let (o, s, p, r) = run_with(opts.clone());
+            assert_eq!(o, out, "outputs differ under {opts:?}");
+            assert_eq!(s, stats, "stats differ under {opts:?}");
+            assert_eq!(p.records(), profile.records(), "profile differs under {opts:?}");
+            assert_eq!(r, rows, "pe rows differ under {opts:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Scoped worker pool for parallel batch-lane execution (std-only).
+//!
+//! Batch lanes in the planned datapath are fully independent
+//! [`super::plan::StreamState`]s, so `Apu::run_batch` can partition them
+//! into contiguous chunks and walk the plan once per chunk on its own
+//! worker. The pool is deliberately minimal: [`run`] executes a vector
+//! of closures under [`std::thread::scope`], running the *first* job on
+//! the calling thread — a single-job call spawns no threads at all, so
+//! `threads = 1` is exactly the historical sequential path, not a
+//! simulation of it. Worker panics are re-raised on the caller after
+//! every spawned job has been joined.
+//!
+//! Nothing here touches charge accounting: the charge-tape replay stays
+//! on the calling thread in lane order (see `Apu::run_planned`), which
+//! is what keeps `SimStats`/`SimProfile` bitwise identical for any
+//! thread count.
+
+use std::sync::OnceLock;
+
+use crate::obs::metrics::{self, Counter, Gauge};
+
+/// Split `n` lanes across at most `threads` workers: contiguous chunks
+/// of `ceil(n / threads)` lanes. Returns `(chunk, workers)` where
+/// `workers` is the number of non-empty chunks actually used — full
+/// chunks are preferred over spreading thin (fewer, warmer workers).
+pub(crate) fn partition(n: usize, threads: usize) -> (usize, usize) {
+    let threads = threads.max(1);
+    if n == 0 {
+        return (1, 0);
+    }
+    let chunk = n.div_ceil(threads);
+    (chunk, n.div_ceil(chunk))
+}
+
+/// Run every job to completion, the first on the calling thread and the
+/// rest on scoped worker threads. A panicking worker is re-raised here
+/// after all handles are joined (the scope also guarantees no job can
+/// outlive its borrows).
+pub(crate) fn run<F>(mut jobs: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    if jobs.len() <= 1 {
+        if let Some(job) = jobs.pop() {
+            job();
+        }
+        return;
+    }
+    let rest = jobs.split_off(1);
+    let first = jobs.pop().expect("one job left after split_off(1)");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = rest.into_iter().map(|job| s.spawn(job)).collect();
+        first();
+        for h in handles {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    });
+}
+
+/// Lane-pool utilization handles on the process-global metrics registry.
+pub(crate) struct LaneInstruments {
+    /// `apu_sim_lane_workers`: workers used by the most recent planned
+    /// batch (a gauge — fleets read it as "current parallel width").
+    pub(crate) workers: Gauge,
+    /// `apu_sim_lane_steps_total`: plan-step executions summed over
+    /// lanes (`lanes × steps` per batch) — the work the pool divided.
+    pub(crate) steps: Counter,
+}
+
+/// Lazily register the lane metrics on [`metrics::global`] (idempotent;
+/// one process-wide pair, shared by every `Apu`).
+pub(crate) fn instruments() -> &'static LaneInstruments {
+    static INS: OnceLock<LaneInstruments> = OnceLock::new();
+    INS.get_or_init(|| {
+        let reg = metrics::global();
+        LaneInstruments {
+            workers: reg.gauge(
+                "apu_sim_lane_workers",
+                "lane-pool workers used by the most recent planned batch",
+                &[],
+            ),
+            steps: reg.counter(
+                "apu_sim_lane_steps_total",
+                "plan-step executions across batch lanes (lanes x steps)",
+                &[],
+            ),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_prefers_full_chunks() {
+        assert_eq!(partition(0, 4), (1, 0));
+        assert_eq!(partition(1, 1), (1, 1));
+        assert_eq!(partition(32, 1), (32, 1));
+        assert_eq!(partition(32, 4), (8, 4));
+        // 5 lanes on 4 workers: chunks of 2 → only 3 workers used
+        assert_eq!(partition(5, 4), (2, 3));
+        // more workers than lanes: one lane each
+        assert_eq!(partition(3, 8), (1, 3));
+        // threads = 0 is clamped to sequential
+        assert_eq!(partition(7, 0), (7, 1));
+    }
+
+    #[test]
+    fn run_executes_every_job_exactly_once() {
+        for n_jobs in [0usize, 1, 2, 5] {
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..n_jobs)
+                .map(|_| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect();
+            run(jobs);
+            assert_eq!(hits.load(Ordering::Relaxed), n_jobs);
+        }
+    }
+
+    #[test]
+    fn run_gives_each_job_exclusive_mutable_state() {
+        let mut slots = vec![0u64; 6];
+        let jobs: Vec<_> = slots
+            .chunks_mut(2)
+            .enumerate()
+            .map(|(i, chunk)| {
+                move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (10 * i + j) as u64;
+                    }
+                }
+            })
+            .collect();
+        run(jobs);
+        assert_eq!(slots, vec![0, 1, 10, 11, 20, 21]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let caught = std::panic::catch_unwind(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("lane worker boom")),
+            ];
+            run(jobs);
+        });
+        assert!(caught.is_err());
+    }
+}

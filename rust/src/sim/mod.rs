@@ -11,11 +11,15 @@
 //! numbers the paper reports.
 
 pub mod apu;
+mod lane_pool;
 pub mod pe;
 pub mod plan;
 pub mod profile;
 
-pub use apu::{host_maxpool, Apu, ApuConfig, IntoProgramArc, SimStats};
+pub use apu::{host_maxpool, Apu, ApuConfig, ExecOptions, IntoProgramArc, SimStats};
 pub use pe::PeUnit;
-pub use plan::{plan_cache_builds, plan_cache_stats, shared_plan, ExecPlan, PlanCacheStats};
+pub use plan::{
+    export_plan_cache_metrics, plan_cache_builds, plan_cache_stats, shared_plan, ExecPlan,
+    PlanCacheStats,
+};
 pub use profile::{Phase, PhaseRecord, SimProfile};

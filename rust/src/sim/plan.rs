@@ -256,6 +256,34 @@ pub fn plan_cache_stats() -> PlanCacheStats {
     }
 }
 
+/// Snapshot the process-wide plan-cache counters into `reg`, so the
+/// cache shows up in metrics exports (`apu fleet --metrics-out`) next to
+/// the shard counters instead of only in the CLI print. Gauges, not
+/// counters: the registry's counter handles are additive, while these
+/// are absolute process-wide figures — repeated exports must overwrite,
+/// not re-add.
+pub fn export_plan_cache_metrics(reg: &crate::obs::metrics::Registry) {
+    let s = plan_cache_stats();
+    reg.gauge(
+        "apu_sim_plan_cache_builds",
+        "plan compilations that actually ran (process-wide)",
+        &[],
+    )
+    .set(s.builds as f64);
+    reg.gauge(
+        "apu_sim_plan_cache_hits",
+        "program loads served from the plan cache (process-wide)",
+        &[],
+    )
+    .set(s.hits as f64);
+    reg.gauge(
+        "apu_sim_plan_cache_entries",
+        "distinct (program fingerprint, machine) plans cached (process-wide)",
+        &[],
+    )
+    .set(s.entries as f64);
+}
+
 /// How many plan builds ran for (`fingerprint`, machine) — 0 if this key
 /// was never loaded, 1 forever after (the per-key invariant N shards
 /// rely on). Keyed lookups stay meaningful even when unrelated tests or
@@ -838,11 +866,52 @@ impl Builder<'_> {
 // executor
 // ---------------------------------------------------------------------------
 
+/// Walk every plan step over a slice of batch lanes — the per-worker
+/// loop of `Apu::run_batch`. Lanes are fully independent, so a worker
+/// needs only its own lanes, a private scratch, and a private per-PE row
+/// counter (summed into the lifetime counter by the caller); value
+/// semantics are identical for any partition of the batch.
+/// `lane_major` forces the legacy lane-at-a-time wave kernel instead of
+/// the batch-major one (bitwise identical — kept so the bench harness
+/// can compare the two traversals).
+pub(crate) fn execute_steps(
+    steps: &[ExecStep],
+    lanes: &mut [StreamState],
+    scratch: &mut WaveScratch,
+    rows: &mut [u64],
+    lane_major: bool,
+) {
+    for step in steps {
+        match step {
+            ExecStep::Commit => {
+                for st in lanes.iter_mut() {
+                    std::mem::swap(&mut st.acts, &mut st.pending);
+                    st.pending.clear();
+                }
+            }
+            ExecStep::Wave(w) => {
+                if lane_major {
+                    for st in lanes.iter_mut() {
+                        w.apply(st, scratch, rows);
+                    }
+                } else {
+                    w.apply_lanes(lanes, scratch, rows);
+                }
+            }
+            ExecStep::Host(h) => {
+                for st in lanes.iter_mut() {
+                    h.apply(st);
+                }
+            }
+        }
+    }
+}
+
 impl WaveExec {
     /// Execute this wave for one stream: latch moves, the MAC phase into
     /// flat scratch (bitwise the PE datapath: f64 left-to-right dot, f32
     /// scale + bias, ReLU, grid snap), then the scatters. `rows` is the
-    /// per-PE lifetime row counter.
+    /// per-PE row counter.
     pub(crate) fn apply(&self, st: &mut StreamState, scratch: &mut WaveScratch, rows: &mut [u64]) {
         let (nb, bh, bw) = (self.nb, self.bh, self.bw);
         if scratch.latch.len() < nb * bw {
@@ -859,19 +928,7 @@ impl WaveExec {
         for (g, pe) in self.pes.iter().enumerate() {
             let latch = &scratch.latch[g * bw..(g + 1) * bw];
             let out = &mut scratch.out[g * bh..(g + 1) * bh];
-            for (row, o) in out.iter_mut().enumerate() {
-                let base = row * bw;
-                let acc: f64 = pe.codes[base..base + bw]
-                    .iter()
-                    .zip(latch)
-                    .map(|(&c, &a)| c as f64 * a as f64)
-                    .sum();
-                let mut v = acc as f32 * pe.w_scale + pe.bias.get(row).copied().unwrap_or(0.0);
-                if self.relu {
-                    v = v.max(0.0);
-                }
-                *o = v;
-            }
+            mac_rows(pe, latch, out, bh, bw, self.relu);
             if let Some(q) = &pe.quant {
                 q.fake_slice(out);
             }
@@ -890,6 +947,129 @@ impl WaveExec {
                 buf[global as usize] = scratch.out[k];
             }
         }
+    }
+
+    /// Execute this wave for every lane in `lanes`, weight-stationary:
+    /// each PE's weight rows are walked once, applying every row across
+    /// all lanes before moving to the next (batch-major traversal —
+    /// exactly the weight reuse the paper's PE scheduling targets),
+    /// instead of re-walking the whole block per lane. Per-lane math —
+    /// the f64 left-to-right dot, f32 scale + bias, ReLU, grid snap,
+    /// scatter order — is exactly [`WaveExec::apply`]'s, so every lane's
+    /// outputs are bitwise identical to a lane-at-a-time walk; only the
+    /// traversal order (and therefore weight-row locality) changes.
+    pub(crate) fn apply_lanes(
+        &self,
+        lanes: &mut [StreamState],
+        scratch: &mut WaveScratch,
+        rows: &mut [u64],
+    ) {
+        if lanes.len() == 1 {
+            // Single lane: the blocked-row kernel has better latch reuse.
+            self.apply(&mut lanes[0], scratch, rows);
+            return;
+        }
+        let (nb, bh, bw) = (self.nb, self.bh, self.bw);
+        let n = lanes.len();
+        let lane_latch = nb * bw;
+        let lane_out = nb * bh;
+        if scratch.latch.len() < n * lane_latch {
+            scratch.latch.resize(n * lane_latch, 0.0);
+        }
+        if scratch.out.len() < n * lane_out {
+            scratch.out.resize(n * lane_out, 0.0);
+        }
+        for (k, st) in lanes.iter().enumerate() {
+            let latch = &mut scratch.latch[k * lane_latch..(k + 1) * lane_latch];
+            for m in &self.moves {
+                latch[m.dst as usize] = st.acts[m.act as usize];
+            }
+        }
+        for (g, pe) in self.pes.iter().enumerate() {
+            for row in 0..bh {
+                let base = row * bw;
+                let codes = &pe.codes[base..base + bw];
+                let bias = pe.bias.get(row).copied().unwrap_or(0.0);
+                for k in 0..n {
+                    let off = k * lane_latch + g * bw;
+                    let latch = &scratch.latch[off..off + bw];
+                    let acc: f64 =
+                        codes.iter().zip(latch).map(|(&c, &a)| c as f64 * a as f64).sum();
+                    let mut v = acc as f32 * pe.w_scale + bias;
+                    if self.relu {
+                        v = v.max(0.0);
+                    }
+                    scratch.out[k * lane_out + g * bh + row] = v;
+                }
+            }
+            if let Some(q) = &pe.quant {
+                for k in 0..n {
+                    let off = k * lane_out + g * bh;
+                    q.fake_slice(&mut scratch.out[off..off + bh]);
+                }
+            }
+            rows[g] += (n * bh) as u64;
+        }
+        for (k, st) in lanes.iter_mut().enumerate() {
+            let out = &scratch.out[k * lane_out..(k + 1) * lane_out];
+            for s in &self.scatters {
+                let buf = match s.target {
+                    ScatterTarget::Pending => &mut st.pending,
+                    ScatterTarget::Partial(slot) => &mut st.partial[slot],
+                };
+                if s.init {
+                    buf.clear();
+                    buf.resize(s.dout, 0.0);
+                }
+                for (i, &global) in s.perm.iter().enumerate() {
+                    buf[global as usize] = out[i];
+                }
+            }
+        }
+    }
+}
+
+/// One PE's MAC phase over `bh` rows: per-row strictly left-to-right f64
+/// dot (bitwise the PE datapath), f32 scale + bias, optional ReLU. Rows
+/// are blocked four at a time so each latch element is loaded once per
+/// block and feeds four independent accumulators; within a row the
+/// summation order is untouched, so every output bit is unchanged.
+fn mac_rows(pe: &WavePe, latch: &[f32], out: &mut [f32], bh: usize, bw: usize, relu: bool) {
+    let finish = |acc: f64, row: usize| {
+        let v = acc as f32 * pe.w_scale + pe.bias.get(row).copied().unwrap_or(0.0);
+        if relu {
+            v.max(0.0)
+        } else {
+            v
+        }
+    };
+    let mut row = 0;
+    while row + 4 <= bh {
+        let base = row * bw;
+        let c0 = &pe.codes[base..base + bw];
+        let c1 = &pe.codes[base + bw..base + 2 * bw];
+        let c2 = &pe.codes[base + 2 * bw..base + 3 * bw];
+        let c3 = &pe.codes[base + 3 * bw..base + 4 * bw];
+        let (mut a0, mut a1, mut a2, mut a3) = (0f64, 0f64, 0f64, 0f64);
+        for (k, &a) in latch.iter().enumerate() {
+            let x = a as f64;
+            a0 += c0[k] as f64 * x;
+            a1 += c1[k] as f64 * x;
+            a2 += c2[k] as f64 * x;
+            a3 += c3[k] as f64 * x;
+        }
+        out[row] = finish(a0, row);
+        out[row + 1] = finish(a1, row + 1);
+        out[row + 2] = finish(a2, row + 2);
+        out[row + 3] = finish(a3, row + 3);
+        row += 4;
+    }
+    while row < bh {
+        let base = row * bw;
+        let acc: f64 =
+            pe.codes[base..base + bw].iter().zip(latch).map(|(&c, &a)| c as f64 * a as f64).sum();
+        out[row] = finish(acc, row);
+        row += 1;
     }
 }
 
@@ -939,6 +1119,68 @@ impl HostStep {
                 }
                 std::mem::swap(&mut st.acts, &mut st.pending);
                 st.pending.clear();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+
+    #[test]
+    fn export_snapshots_cache_counters_as_gauges() {
+        let reg = Registry::new();
+        export_plan_cache_metrics(&reg);
+        let snap = plan_cache_stats();
+        // Registration is idempotent: re-requesting the gauge returns the
+        // handle the export wrote through. Other tests churn the global
+        // cache concurrently, so assert against a fresh snapshot's lower
+        // bound rather than exact equality.
+        let builds = reg
+            .gauge("apu_sim_plan_cache_builds", "plan compilations that actually ran (process-wide)", &[])
+            .get();
+        let entries = reg
+            .gauge(
+                "apu_sim_plan_cache_entries",
+                "distinct (program fingerprint, machine) plans cached (process-wide)",
+                &[],
+            )
+            .get();
+        assert!(builds >= 0.0 && builds <= snap.builds as f64);
+        assert!(entries >= 0.0 && entries <= snap.entries as f64);
+        // Re-export overwrites (gauge semantics), never accumulates.
+        export_plan_cache_metrics(&reg);
+        let again = reg
+            .gauge("apu_sim_plan_cache_builds", "plan compilations that actually ran (process-wide)", &[])
+            .get();
+        assert!(again <= plan_cache_stats().builds as f64);
+    }
+
+    #[test]
+    fn blocked_mac_rows_matches_the_scalar_dot_bitwise() {
+        // 7 rows exercises one full 4-row block plus a 3-row tail.
+        let (bh, bw) = (7usize, 5usize);
+        let codes: Vec<i8> = (0..bh * bw).map(|i| ((i * 37 + 11) % 15) as i8 - 7).collect();
+        let bias: Vec<f32> = (0..bh).map(|i| i as f32 * 0.125 - 0.25).collect();
+        let latch: Vec<f32> = (0..bw).map(|i| (i as f32 * 0.731).sin()).collect();
+        let pe = WavePe { codes, bias, w_scale: 0.173, quant: None };
+        for relu in [false, true] {
+            let mut got = vec![0f32; bh];
+            mac_rows(&pe, &latch, &mut got, bh, bw, relu);
+            for row in 0..bh {
+                let base = row * bw;
+                let acc: f64 = pe.codes[base..base + bw]
+                    .iter()
+                    .zip(&latch)
+                    .map(|(&c, &a)| c as f64 * a as f64)
+                    .sum();
+                let mut want = acc as f32 * pe.w_scale + pe.bias[row];
+                if relu {
+                    want = want.max(0.0);
+                }
+                assert_eq!(got[row].to_bits(), want.to_bits(), "row {row} relu {relu}");
             }
         }
     }

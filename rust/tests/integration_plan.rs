@@ -3,12 +3,15 @@
 //! executor (`run` and `run_batch`) must reproduce the sequential
 //! interpreter bit-for-bit — outputs, `SimStats`, and `SimProfile` records
 //! all identical, on both machine instances, including the streamed
-//! alexnet-nano whose per-run weight DMA rides the charge tape.
+//! alexnet-nano whose per-run weight DMA rides the charge tape. The
+//! determinism matrix extends the contract across the lane pool:
+//! `run_batch` at threads ∈ {1, 2, 4} (and the lane-major kernel) must
+//! match sequential `run` bitwise on every compilable zoo network.
 
 use apu::compiler::pipeline::{compile_network, PipelineOptions};
 use apu::compiler::CostModel;
 use apu::nn::zoo;
-use apu::sim::Apu;
+use apu::sim::{Apu, ExecOptions};
 use apu::util::rng::Rng;
 
 fn cross_check(model: &CostModel, compiled: &apu::compiler::CompiledNetwork, seed: u64) {
@@ -79,6 +82,76 @@ fn planner_matches_interpreter_on_every_compilable_zoo_network() {
     assert!(executed.contains(&"nano_4pe/vgg-nano".to_string()), "executed: {executed:?}");
     assert!(executed.contains(&"nano_4pe/alexnet-nano".to_string()), "executed: {executed:?}");
     assert!(executed.contains(&"paper_9pe/lenet".to_string()), "executed: {executed:?}");
+}
+
+/// `run_batch` across lane-pool widths vs sequential `run`: outputs,
+/// `SimStats`, `SimProfile`, and PE row counters must be bitwise equal
+/// for every thread count. 5 lanes makes the chunking uneven at 2 and 4
+/// workers (3+2 and 2+2+1), so partial chunks are covered too.
+fn thread_matrix(model: &CostModel, compiled: &apu::compiler::CompiledNetwork, seed: u64) {
+    let name = &compiled.program.name;
+    let mut rng = Rng::new(seed);
+    let inputs: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..compiled.program.din).map(|_| rng.normal()).collect())
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|x| x.as_slice()).collect();
+
+    let mut seq = Apu::new(model.apu_config());
+    seq.load(&compiled.program).unwrap();
+    seq.enable_profiling();
+    let want: Vec<Vec<f32>> = inputs.iter().map(|x| seq.run(x).unwrap()).collect();
+
+    let variants = [
+        ExecOptions { threads: 1, lane_major_kernel: false },
+        ExecOptions { threads: 2, lane_major_kernel: false },
+        ExecOptions { threads: 4, lane_major_kernel: false },
+        // the pre-batch-major kernel must stay an equivalent fallback
+        ExecOptions { threads: 3, lane_major_kernel: true },
+    ];
+    for opts in variants {
+        let mut apu = Apu::new(model.apu_config());
+        apu.load(&compiled.program).unwrap();
+        apu.enable_profiling();
+        apu.set_exec_options(opts.clone());
+        let got = apu.run_batch(&refs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.len(), w.len());
+            for (i, (&a, &b)) in g.iter().zip(w).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} {opts:?} lane {k} output {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(apu.stats(), seq.stats(), "{name}: stats diverged under {opts:?}");
+        assert_eq!(
+            apu.profile().unwrap().records(),
+            seq.profile().unwrap().records(),
+            "{name}: profile diverged under {opts:?}"
+        );
+        assert_eq!(
+            apu.pe_rows_computed(),
+            seq.pe_rows_computed(),
+            "{name}: PE row counters diverged under {opts:?}"
+        );
+    }
+}
+
+#[test]
+fn run_batch_is_bitwise_deterministic_across_thread_counts() {
+    let machines = [("paper_9pe", CostModel::paper_9pe()), ("nano_4pe", CostModel::nano_4pe())];
+    let mut checked: Vec<String> = Vec::new();
+    for (mname, model) in &machines {
+        for (i, name) in zoo::names().iter().enumerate() {
+            let net = zoo::by_name(name).unwrap();
+            let Ok(compiled) = compile_network(&net, model, &PipelineOptions::default()) else {
+                continue;
+            };
+            thread_matrix(model, &compiled, 8100 + i as u64);
+            checked.push(format!("{mname}/{name}"));
+        }
+    }
+    assert!(checked.contains(&"nano_4pe/vgg-nano".to_string()), "checked: {checked:?}");
+    // streamed path: per-run weight DMA rides the tape under threading too
+    assert!(checked.contains(&"nano_4pe/alexnet-nano".to_string()), "checked: {checked:?}");
 }
 
 #[test]
