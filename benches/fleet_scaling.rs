@@ -11,16 +11,27 @@
 //! 3. Multi-model mix: a two-model catalog fleet (2 shards per model)
 //!    under 80/20 skewed traffic — per-model SLO rows plus the shared
 //!    plan-cache hit/build counters.
+//! 4. Result cache under Zipf-repeated inputs: a catalog fleet with the
+//!    request-level cache on, driven from a 64-entry Zipf(1.1) input
+//!    pool — reports hit-path vs miss-path latency and emits
+//!    `fleet/zipf_cache_{hit,miss}` bench rows.
+//!
+//! Args (after `cargo bench --bench fleet_scaling --`):
+//!   `--json PATH`   merge bench rows into PATH (ci.sh perf trajectory)
+//!   `--only cache`  run just the result-cache experiment
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use apu::compiler::{compile_packed_layers, synthetic_packed_network};
 use apu::coordinator::{
-    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, ModelCatalog, ModelId,
-    SloReport, SubmitError, SyntheticLoad,
+    ApuEngine, BatchPolicy, DispatchPolicy, Engine, Fleet, FleetConfig, InputPool, ModelCatalog,
+    ModelId, SloReport, SubmitError, SyntheticLoad,
 };
 use apu::sim::{plan_cache_stats, Apu, ApuConfig};
+use apu::util::bench::BenchResult;
+use apu::util::rng::Rng;
+use apu::util::stats::Summary;
 use apu::util::table::Table;
 
 const DIMS: [usize; 3] = [128, 96, 10];
@@ -58,7 +69,104 @@ fn saturated_throughput(shards: usize, n: usize) -> f64 {
     rps
 }
 
+/// Result-cache experiment: one catalog model with the request-level
+/// cache on, inputs drawn from a small Zipf-skewed pool so repeats
+/// actually occur. Hit replies are produced inside `submit_to` (before
+/// admission), so the hit-path p50 sits far below the engine path.
+fn cache_experiment(n: usize) -> Vec<BenchResult> {
+    let mut catalog = ModelCatalog::new();
+    let cfg = ApuConfig { n_pes: N_PES, pe_sram_bits: 1 << 20, clock_ghz: 1.0 };
+    let layers = synthetic_packed_network(&DIMS, N_PES, 4, 3100).unwrap();
+    let program = compile_packed_layers("zipf-cache", &layers, 0.15, 4, N_PES).unwrap();
+    catalog.add_program("zipf-cache", Arc::new(program), cfg).unwrap();
+    println!("== result cache (1 model x 2 shards, Zipf(1.1) pool of 64, 256 entries) ==");
+    let fleet = Fleet::start_catalog(
+        FleetConfig {
+            shards: 0,
+            policy: DispatchPolicy::JoinShortestQueue,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            queue_cap: usize::MAX,
+            cache_entries: 256,
+            ..FleetConfig::default()
+        },
+        Arc::new(catalog),
+        &[2],
+    )
+    .unwrap();
+    let pool = InputPool::zipf(DIN, 64, 1.1, 616);
+    let mut rng = Rng::new(99);
+    let rxs: Vec<_> =
+        (0..n).map(|_| fleet.submit_to(ModelId(0), pool.sample(&mut rng)).unwrap()).collect();
+    let (mut hit, mut miss) = (Summary::new(), Summary::new());
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        r.output.unwrap();
+        let ns = r.latency.as_nanos() as f64;
+        if r.cached {
+            hit.add(ns);
+        } else {
+            miss.add(ns);
+        }
+    }
+    let metrics = fleet.shutdown().unwrap();
+    if let Some(Some(stats)) = metrics.cache.first() {
+        println!(
+            "cache: {} hits / {} misses ({:.0}% hit rate), {} evictions, {} entries",
+            stats.hits,
+            stats.misses,
+            100.0 * stats.hit_rate(),
+            stats.evictions,
+            stats.entries
+        );
+    }
+    println!(
+        "hit p50 {:.0} ns ({} replies) vs miss p50 {:.0} ns ({} replies)",
+        hit.median(),
+        hit.count(),
+        miss.median(),
+        miss.count()
+    );
+    [("fleet/zipf_cache_hit", hit), ("fleet/zipf_cache_miss", miss)]
+        .into_iter()
+        .filter(|(_, s)| s.count() > 0)
+        .map(|(name, mut s)| BenchResult {
+            name: name.to_string(),
+            iters: s.count(),
+            mean_ns: s.mean(),
+            median_ns: s.median(),
+            stddev_ns: s.stddev(),
+            min_ns: s.min(),
+        })
+        .collect()
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_out: Option<String> = None;
+    let mut only: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                json_out = argv.get(i + 1).cloned();
+                i += 2;
+            }
+            "--only" => {
+                only = argv.get(i + 1).cloned();
+                i += 2;
+            }
+            _ => i += 1, // ignore the harness's own flags (--bench etc.)
+        }
+    }
+    if let Some(what) = &only {
+        assert_eq!(what, "cache", "--only supports: cache");
+        let results = cache_experiment(512);
+        if let Some(path) = &json_out {
+            apu::util::bench::write_report(path, &results).unwrap();
+            println!("wrote {} bench row(s) to {path}", results.len());
+        }
+        return;
+    }
     let n = 512;
     println!("== fleet scaling (saturating burst, {n} requests, jsq) ==");
     let mut t = Table::new(&["shards", "req/s", "speedup"]);
@@ -161,4 +269,10 @@ fn main() {
     let elapsed = t0.elapsed();
     let metrics = fleet.shutdown().unwrap();
     println!("{}", SloReport::from_metrics(&metrics, elapsed).render());
+
+    let results = cache_experiment(n);
+    if let Some(path) = &json_out {
+        apu::util::bench::write_report(path, &results).unwrap();
+        println!("wrote {} bench row(s) to {path}", results.len());
+    }
 }

@@ -15,8 +15,17 @@ cargo test -q
 # report tracks the perf trajectory from PR 5 onward (short budget —
 # this guards against rot, not noise-free numbers). Override the report
 # path with BENCH_OUT=... when comparing across branches.
-BENCH_OUT=${BENCH_OUT:-BENCH_9.json}
+BENCH_OUT=${BENCH_OUT:-BENCH_10.json}
 APU_BENCH_MS=60 cargo bench --bench sim_hotpath -- --json "$BENCH_OUT"
+# Result-cache experiment merges its fleet/zipf_cache_{hit,miss} rows into
+# the same report (write_report merges by bench name).
+cargo bench --bench fleet_scaling -- --only cache --json "$BENCH_OUT"
 test -s "$BENCH_OUT"
+# Result-cache smoke: a catalog fleet with the cache on must record hits
+# (the driver draws inputs from a Zipf pool, so repeats are guaranteed).
+./target/release/apu fleet --models zoo:lenet-5,zoo:vgg-nano --cache 256 \
+  --metrics-out fleet_cache_metrics.prom
+grep -E 'apu_fleet_cache_hits_total\{[^}]*\} [1-9]' fleet_cache_metrics.prom
+rm -f fleet_cache_metrics.prom
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings

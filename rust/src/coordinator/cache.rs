@@ -1,0 +1,463 @@
+//! Request-level result cache keyed on (model fingerprint, machine key,
+//! canonical quantized input).
+//!
+//! The cheapest inference is the one never run. Every compiled program
+//! opens with a host `Quantize` (the ingress quantizer), so two analog
+//! inputs that land on the same quantization grid are *provably* the
+//! same request: planned execution is input-deterministic (the bitwise
+//! invariant `integration_plan.rs` enforces), so a cache hit may return
+//! the stored output verbatim. [`InputKeyer`] canonicalizes an f32 input
+//! through the model's ingress [`Quantizer`] (via `fake_slice`, the same
+//! routine the engine itself runs first) and keys the result together
+//! with the program fingerprint and the machine geometry — the same
+//! fields the plan cache keys on — so entries never cross models or
+//! machine instances.
+//!
+//! Canonicalization rules:
+//! - **NaN bypasses.** `Quantizer::fake` collapses NaN to `+0.0`, which
+//!   would alias a poisoned input with a legitimate zero input. Any NaN
+//!   anywhere in the input makes [`InputKeyer::key`] return `None`; the
+//!   request rides the normal engine path and is never cached.
+//! - **`-0.0` and `0.0` share a key.** Both quantize to code 0; the sign
+//!   of zero dies at the first accumulation (every compiled network's
+//!   outputs pass through a MAC reduction whose accumulator starts at
+//!   `+0.0`, and IEEE `x + ±0.0 == x` for `x != -0.0`), so outputs are
+//!   bitwise identical. The keyer normalizes each quantized element with
+//!   `+ 0.0` before taking its bits.
+//! - **No ingress quantizer → exact bits.** Programs without a leading
+//!   `Quantize` are keyed on the raw input bits — trivially sound, just
+//!   less collapsing.
+//!
+//! **Accounting rule** (asserted by `integration_cache.rs`): a hit
+//! replies *before* admission control — it never touches a shard queue,
+//! batcher, or engine, so it increments **none** of the per-shard
+//! `apu_fleet_*` series (enqueued/completed/engine_calls/batch_size/
+//! queue_depth/latency). Hits, misses, evictions, and bypasses are
+//! counted only in the `apu_fleet_cache_*` series and the SLO cache
+//! table. This keeps JSQ's queue-depth signal honest: cached traffic is
+//! invisible to the dispatcher.
+//!
+//! The store itself is a sharded, bounded LRU: small capacities (≤ 64)
+//! use a single shard with exact LRU order (deterministic eviction, the
+//! testable contract); larger capacities split into up to 16 shards to
+//! keep lock contention off the submit path, each shard LRU within its
+//! slice of the capacity.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::metrics::{self, Counter, Histogram, Registry};
+use crate::pruning::Quantizer;
+use crate::sim::ApuConfig;
+
+use super::catalog::ModelEntry;
+
+/// A canonical cache key: program fingerprint, machine geometry, and the
+/// input's post-quantization bit pattern. Two requests with equal keys
+/// are guaranteed (by planned-run determinism) to produce bitwise-equal
+/// outputs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    fingerprint: u64,
+    n_pes: usize,
+    pe_sram_bits: usize,
+    clock_bits: u64,
+    input: Vec<u32>,
+}
+
+/// Builds [`CacheKey`]s for one model: fingerprint + machine key fixed,
+/// input canonicalized through the model's ingress quantizer.
+#[derive(Debug, Clone)]
+pub struct InputKeyer {
+    fingerprint: u64,
+    n_pes: usize,
+    pe_sram_bits: usize,
+    clock_bits: u64,
+    quant: Option<Quantizer>,
+}
+
+impl InputKeyer {
+    /// `quant` is the model's ingress quantizer when it has one; `None`
+    /// falls back to exact-bits keying.
+    pub fn new(fingerprint: u64, machine: &ApuConfig, quant: Option<Quantizer>) -> InputKeyer {
+        InputKeyer {
+            fingerprint,
+            n_pes: machine.n_pes,
+            pe_sram_bits: machine.pe_sram_bits,
+            clock_bits: machine.clock_ghz.to_bits(),
+            quant,
+        }
+    }
+
+    /// The keyer for a catalog entry: its fingerprint, its machine, and
+    /// the ingress quantizer recovered from its plan (or program).
+    pub fn for_entry(entry: &ModelEntry) -> InputKeyer {
+        InputKeyer::new(entry.fingerprint, &entry.machine, entry.input_quantizer())
+    }
+
+    /// Canonicalize `input` into a key, or `None` when the input must
+    /// bypass the cache (any NaN element — see the module rules).
+    pub fn key(&self, input: &[f32]) -> Option<CacheKey> {
+        if input.iter().any(|v| v.is_nan()) {
+            return None;
+        }
+        let words: Vec<u32> = match &self.quant {
+            Some(q) => {
+                let mut canon = input.to_vec();
+                q.fake_slice(&mut canon);
+                // `+ 0.0` folds -0.0 onto +0.0: both carry code 0.
+                canon.iter().map(|v| (v + 0.0).to_bits()).collect()
+            }
+            None => input.iter().map(|v| v.to_bits()).collect(),
+        };
+        Some(CacheKey {
+            fingerprint: self.fingerprint,
+            n_pes: self.n_pes,
+            pe_sram_bits: self.pe_sram_bits,
+            clock_bits: self.clock_bits,
+            input: words,
+        })
+    }
+}
+
+struct Slot {
+    output: Vec<f32>,
+    /// The shard tick at last touch; doubles as the LRU map key.
+    tick: u64,
+}
+
+struct LruShard {
+    cap: usize,
+    map: HashMap<Arc<CacheKey>, Slot>,
+    /// tick → key, ascending: the first entry is the least recently used.
+    lru: BTreeMap<u64, Arc<CacheKey>>,
+    tick: u64,
+}
+
+impl LruShard {
+    fn touch(&mut self, old: u64, tick: u64) {
+        let k = self.lru.remove(&old).expect("cache lru out of sync");
+        self.lru.insert(tick, k);
+    }
+}
+
+/// Sharded, bounded LRU store. `capacity` is the total entry bound; the
+/// shard caps partition it exactly. Capacities ≤ 64 are single-sharded
+/// (exact global LRU, deterministic eviction order).
+pub struct ResultCache {
+    shards: Vec<Mutex<LruShard>>,
+    capacity: usize,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> ResultCache {
+        let n = (capacity / 64).clamp(1, 16);
+        let shards = (0..n)
+            .map(|i| {
+                let cap = capacity / n + usize::from(i < capacity % n);
+                Mutex::new(LruShard { cap, map: HashMap::new(), lru: BTreeMap::new(), tick: 0 })
+            })
+            .collect();
+        ResultCache { shards, capacity }
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        h.finish() as usize % self.shards.len()
+    }
+
+    /// Look up a key, refreshing its LRU position on a hit. The stored
+    /// output is returned by clone — it is the verbatim engine reply.
+    pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
+        let mut s = self.shards[self.shard_of(key)].lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        let (old, out) = {
+            let slot = s.map.get_mut(key)?;
+            let old = slot.tick;
+            slot.tick = tick;
+            (old, slot.output.clone())
+        };
+        s.touch(old, tick);
+        Some(out)
+    }
+
+    /// Insert (or refresh) an entry, evicting least-recently-used ones
+    /// as needed to stay within the shard's capacity slice. Returns the
+    /// number of evictions. Re-inserting a present key only bumps its
+    /// recency: by determinism the stored output already equals `output`.
+    pub fn put(&self, key: CacheKey, output: Vec<f32>) -> u64 {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let mut s = self.shards[self.shard_of(&key)].lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        if let Some(slot) = s.map.get_mut(&key) {
+            let old = slot.tick;
+            slot.tick = tick;
+            s.touch(old, tick);
+            return 0;
+        }
+        let mut evicted = 0u64;
+        while s.map.len() >= s.cap {
+            let (&oldest, _) = s.lru.iter().next().expect("full shard has an lru entry");
+            let k = s.lru.remove(&oldest).unwrap();
+            s.map.remove(&k);
+            evicted += 1;
+        }
+        let k = Arc::new(key);
+        s.lru.insert(tick, Arc::clone(&k));
+        s.map.insert(k, Slot { output, tick });
+        evicted
+    }
+
+    /// Entries currently resident (across all shards).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The total entry bound this cache was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// A point-in-time view of one model's cache counters, folded into
+/// [`FleetMetrics`](super::fleet::FleetMetrics) and the SLO report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    /// Requests answered from the cache (no engine involvement).
+    pub hits: u64,
+    /// Cacheable requests that took the engine path (and populated).
+    pub misses: u64,
+    /// Entries dropped to stay within capacity.
+    pub evictions: u64,
+    /// Requests that skipped the cache entirely (NaN input).
+    pub bypass: u64,
+    /// Entries resident when the snapshot was taken.
+    pub entries: usize,
+    /// The configured entry bound.
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0 when the cache saw no cacheable traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One model group's cache: the keyer, the store, and the registry
+/// instruments (labelled by model, like every other fleet series).
+pub(super) struct GroupCache {
+    pub(super) keyer: InputKeyer,
+    pub(super) store: Arc<ResultCache>,
+    pub(super) hits: Counter,
+    pub(super) misses: Counter,
+    pub(super) evictions: Counter,
+    pub(super) bypass: Counter,
+    pub(super) hit_latency_us: Histogram,
+}
+
+impl GroupCache {
+    pub(super) fn register(
+        reg: &Registry,
+        model: &str,
+        keyer: InputKeyer,
+        capacity: usize,
+    ) -> GroupCache {
+        let l: &[(&str, &str)] = &[("model", model)];
+        GroupCache {
+            keyer,
+            store: Arc::new(ResultCache::new(capacity)),
+            hits: reg.counter(
+                "apu_fleet_cache_hits_total",
+                "requests answered from the result cache (no engine call)",
+                l,
+            ),
+            misses: reg.counter(
+                "apu_fleet_cache_misses_total",
+                "cacheable requests that took the engine path",
+                l,
+            ),
+            evictions: reg.counter(
+                "apu_fleet_cache_evictions_total",
+                "cache entries dropped to stay within capacity",
+                l,
+            ),
+            bypass: reg.counter(
+                "apu_fleet_cache_bypass_total",
+                "requests that skipped the cache (NaN input)",
+                l,
+            ),
+            hit_latency_us: reg.histogram(
+                "apu_fleet_cache_hit_latency_us",
+                "submit-to-reply latency of cache hits, microseconds",
+                &metrics::cache_latency_buckets_us(),
+                l,
+            ),
+        }
+    }
+
+    /// Snapshot the instruments into a [`CacheStats`]. Counter handles
+    /// read the registry series, so with a shared registry the figures
+    /// span every fleet that used the same model label (the CLI runs one
+    /// fleet per process; tests use private registries).
+    pub(super) fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
+            bypass: self.bypass.get(),
+            entries: self.store.len(),
+            capacity: self.store.capacity(),
+        }
+    }
+}
+
+/// Carried by a miss through the dispatch path: on a successful reply
+/// the shard worker stores the output under the precomputed key.
+pub(super) struct CacheFill {
+    pub(super) store: Arc<ResultCache>,
+    pub(super) key: CacheKey,
+    pub(super) evictions: Counter,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> ApuConfig {
+        ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 }
+    }
+
+    fn keyer(quant: Option<Quantizer>) -> InputKeyer {
+        InputKeyer::new(0xfee1_600d, &machine(), quant)
+    }
+
+    #[test]
+    fn negative_zero_and_zero_share_a_key() {
+        let k = keyer(Some(Quantizer::new(4, 0.5)));
+        let a = k.key(&[0.0, 1.0]).unwrap();
+        let b = k.key(&[-0.0, 1.0]).unwrap();
+        assert_eq!(a, b, "-0.0 and 0.0 both quantize to code 0");
+    }
+
+    #[test]
+    fn nan_inputs_bypass_and_never_alias_zero() {
+        let k = keyer(Some(Quantizer::new(4, 0.5)));
+        // fake(NaN) == +0.0, so keying a NaN would poison the zero entry;
+        // the keyer must refuse instead.
+        assert!(k.key(&[f32::NAN, 1.0]).is_none());
+        assert!(k.key(&[1.0, f32::NAN]).is_none());
+        assert!(k.key(&[0.0, 1.0]).is_some());
+    }
+
+    #[test]
+    fn same_codes_hash_to_the_same_key() {
+        // scale 0.5: 0.10 and 0.12 both round to code 0; 0.30 to code 1.
+        let k = keyer(Some(Quantizer::new(4, 0.5)));
+        assert_eq!(k.key(&[0.10, 0.80]), k.key(&[0.12, 0.80]));
+        assert_ne!(k.key(&[0.30, 0.80]), k.key(&[0.12, 0.80]));
+    }
+
+    #[test]
+    fn fingerprint_machine_and_quantizer_separate_keys() {
+        let q = Some(Quantizer::new(4, 0.5));
+        let a = keyer(q).key(&[0.4]).unwrap();
+        let other_model = InputKeyer::new(0xdead_beef, &machine(), q).key(&[0.4]).unwrap();
+        assert_ne!(a, other_model);
+        let other_machine = ApuConfig { n_pes: 9, ..machine() };
+        let b = InputKeyer::new(0xfee1_600d, &other_machine, q).key(&[0.4]).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn no_quantizer_keys_exact_bits() {
+        let k = keyer(None);
+        // Without a grid to collapse onto, nearby floats stay distinct …
+        assert_ne!(k.key(&[0.10]), k.key(&[0.12]));
+        // … and so do the signed zeros (exact-bits fallback is sound for
+        // any program, including ones that copy inputs straight through).
+        assert_ne!(k.key(&[0.0]), k.key(&[-0.0]));
+        assert!(k.key(&[f32::NAN]).is_none());
+    }
+
+    #[test]
+    fn capacity_one_evicts_lru_deterministically() {
+        let k = keyer(None);
+        let c = ResultCache::new(1);
+        let (a, b) = (k.key(&[1.0]).unwrap(), k.key(&[2.0]).unwrap());
+        assert_eq!(c.put(a.clone(), vec![1.5]), 0);
+        assert_eq!(c.get(&a).unwrap(), vec![1.5]);
+        assert_eq!(c.put(b.clone(), vec![2.5]), 1, "second insert evicts the first");
+        assert!(c.get(&a).is_none());
+        assert_eq!(c.get(&b).unwrap(), vec![2.5]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.capacity(), 1);
+    }
+
+    #[test]
+    fn get_refreshes_lru_order() {
+        let k = keyer(None);
+        let c = ResultCache::new(2);
+        let (a, b, d) =
+            (k.key(&[1.0]).unwrap(), k.key(&[2.0]).unwrap(), k.key(&[3.0]).unwrap());
+        c.put(a.clone(), vec![1.5]);
+        c.put(b.clone(), vec![2.5]);
+        // Touch `a`: now `b` is the LRU entry and must be the one evicted.
+        assert!(c.get(&a).is_some());
+        assert_eq!(c.put(d.clone(), vec![3.5]), 1);
+        assert!(c.get(&b).is_none(), "b was least recently used");
+        assert!(c.get(&a).is_some());
+        assert!(c.get(&d).is_some());
+    }
+
+    #[test]
+    fn reinserting_a_present_key_only_bumps_recency() {
+        let k = keyer(None);
+        let c = ResultCache::new(2);
+        let (a, b, d) =
+            (k.key(&[1.0]).unwrap(), k.key(&[2.0]).unwrap(), k.key(&[3.0]).unwrap());
+        c.put(a.clone(), vec![1.5]);
+        c.put(b.clone(), vec![2.5]);
+        assert_eq!(c.put(a.clone(), vec![1.5]), 0, "refresh, not insert");
+        assert_eq!(c.len(), 2);
+        c.put(d, vec![3.5]);
+        assert!(c.get(&b).is_none(), "refreshing a made b the LRU entry");
+        assert!(c.get(&a).is_some());
+    }
+
+    #[test]
+    fn large_capacity_shards_and_stays_bounded() {
+        let k = keyer(None);
+        let c = ResultCache::new(256);
+        assert!(c.is_empty());
+        let mut evicted = 0;
+        for i in 0..1000 {
+            evicted += c.put(k.key(&[i as f32]).unwrap(), vec![i as f32]);
+        }
+        assert!(c.len() <= 256, "resident {} exceeds capacity", c.len());
+        assert_eq!(c.len() as u64 + evicted, 1000, "every insert is resident or evicted");
+    }
+
+    #[test]
+    fn hit_rate_folds_hits_and_misses() {
+        let s = CacheStats { hits: 3, misses: 1, ..CacheStats::default() };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

@@ -24,7 +24,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::compiler::{pipeline, CostModel, PipelineOptions};
-use crate::isa::Program;
+use crate::isa::{HostOpKind, Insn, Program};
+use crate::pruning::Quantizer;
 use crate::sim::{shared_plan, ApuConfig, ExecPlan};
 
 /// Dense handle for a catalog model — what requests carry through the
@@ -56,6 +57,37 @@ pub struct ModelEntry {
     /// Shared pre-built execution plan; `None` means the planner
     /// declined and shards run the reference interpreter.
     pub plan: Option<Arc<ExecPlan>>,
+    /// Per-model result-cache capacity override: `None` inherits the
+    /// fleet default ([`FleetConfig::cache_entries`]
+    /// (super::fleet::FleetConfig::cache_entries)), `Some(0)` disables
+    /// caching for this model, `Some(n)` bounds it to `n` entries.
+    pub cache_entries: Option<usize>,
+}
+
+impl ModelEntry {
+    /// The model's ingress quantizer — the host `Quantize` every
+    /// compiled program opens with — recovered from the shared plan, or
+    /// (for unplanned entries) by decoding the program's first
+    /// instruction the way the planner would. `None` when the program
+    /// does not start with a well-formed quantize; the result cache then
+    /// falls back to exact-bits keying.
+    pub fn input_quantizer(&self) -> Option<Quantizer> {
+        if let Some(plan) = &self.plan {
+            return plan.input_quantizer();
+        }
+        let Some(Insn::HostOp { op: HostOpKind::Quantize, seg }) = self.program.insns.first()
+        else {
+            return None;
+        };
+        let params = self.program.segment(*seg).ok()?.as_f32().ok()?;
+        let scale = params.first().copied()?;
+        let bits = params.get(1).map(|&b| b as u32).unwrap_or(4);
+        if scale > 0.0 && scale.is_finite() && (2..=16).contains(&bits) {
+            Some(Quantizer::new(bits, scale))
+        } else {
+            None
+        }
+    }
 }
 
 /// Named model entries resolved once, served by many shards.
@@ -158,8 +190,22 @@ impl ModelCatalog {
             machine,
             fingerprint,
             plan,
+            cache_entries: None,
         });
         Ok(id)
+    }
+
+    /// Set (or clear) a model's result-cache capacity override — see
+    /// [`ModelEntry::cache_entries`]. Takes effect on the next
+    /// [`Fleet::start_catalog`](super::fleet::Fleet::start_catalog).
+    pub fn set_cache_entries(&mut self, id: ModelId, entries: Option<usize>) -> Result<()> {
+        let n = self.entries.len();
+        let e = self
+            .entries
+            .get_mut(id.0)
+            .with_context(|| format!("{id} out of range (catalog has {n} models)"))?;
+        e.cache_entries = entries;
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -238,6 +284,20 @@ mod tests {
         assert!(cat.add_spec("/no/such/file.apu", None).is_err());
         let stale = format!("{:#}", cat.get(ModelId(9)).unwrap_err());
         assert!(stale.contains("out of range"), "{stale}");
+    }
+
+    #[test]
+    fn entries_expose_ingress_quantizer_and_cache_override() {
+        let mut cat = ModelCatalog::new();
+        let id = cat.add_program("q", test_program(5, "q"), test_cfg()).unwrap();
+        let e = cat.get(id).unwrap();
+        // every compiled program opens with the ingress quantize
+        let q = e.input_quantizer().expect("packed programs open with a quantize");
+        assert!(q.scale > 0.0 && q.bits >= 2);
+        assert_eq!(e.cache_entries, None, "entries inherit the fleet default");
+        cat.set_cache_entries(id, Some(8)).unwrap();
+        assert_eq!(cat.get(id).unwrap().cache_entries, Some(8));
+        assert!(cat.set_cache_entries(ModelId(9), Some(1)).is_err());
     }
 
     #[test]

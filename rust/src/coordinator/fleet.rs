@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchPolicy, Batcher, FlushReason};
+use super::cache::{CacheFill, CacheStats, GroupCache, InputKeyer};
 use super::catalog::{ModelCatalog, ModelId};
 use super::dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 use super::engine::Engine;
@@ -47,7 +48,14 @@ pub(super) struct Request {
     pub(super) reply: mpsc::Sender<Reply>,
     /// Lifecycle trace context (present when the fleet has a tracer).
     pub(super) trace: Option<ReqTrace>,
+    /// Present on a cache miss: the shard worker stores the successful
+    /// output under this precomputed key when the reply goes out.
+    pub(super) fill: Option<CacheFill>,
 }
+
+/// The `Reply::shard` sentinel for cache hits: a cached reply was never
+/// dispatched, so it carries no real shard id.
+pub const CACHE_SHARD: usize = usize::MAX;
 
 /// Per-request lifecycle timestamps, µs on the fleet tracer's clock.
 pub(super) struct ReqTrace {
@@ -81,6 +89,13 @@ pub struct FleetConfig {
     /// stats; 1 = sequential (no threads spawned). Only catalog-backed
     /// fleets apply it — engines from custom factories set their own.
     pub threads_per_shard: usize,
+    /// Default result-cache capacity per model group, in entries; 0
+    /// disables caching. Only catalog-backed fleets build caches (the
+    /// keyer needs the entry's fingerprint/machine/quantizer); a catalog
+    /// entry's own `cache_entries` overrides this default. Hits reply
+    /// before admission control and touch none of the per-shard metrics
+    /// — see the accounting rule in [`super::cache`].
+    pub cache_entries: usize,
 }
 
 impl Default for FleetConfig {
@@ -93,6 +108,7 @@ impl Default for FleetConfig {
             metrics: metrics::global(),
             tracer: None,
             threads_per_shard: 1,
+            cache_entries: 0,
         }
     }
 }
@@ -224,6 +240,8 @@ pub struct Group {
     label: String,
     shard_ids: Vec<usize>,
     dispatcher: Dispatcher,
+    /// The model's result cache, when enabled for this group.
+    cache: Option<GroupCache>,
 }
 
 impl Group {
@@ -240,6 +258,20 @@ impl Group {
     pub fn shard_ids(&self) -> &[usize] {
         &self.shard_ids
     }
+
+    /// Live snapshot of this group's result-cache counters; `None` when
+    /// the group serves uncached.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+}
+
+/// Internal per-group start spec: label, shard count, and the result
+/// cache to build (keyer + capacity), if any.
+struct GroupSpec {
+    label: String,
+    count: usize,
+    cache: Option<(InputKeyer, usize)>,
 }
 
 /// Why a submit was refused.
@@ -285,6 +317,10 @@ pub struct FleetMetrics {
     /// order. Single-model fleets have one `"default"` group spanning
     /// every shard.
     pub groups: Vec<(String, Vec<usize>)>,
+    /// Final result-cache counters per group, aligned with `groups`
+    /// (`None` for groups that served uncached). Empty for fleets
+    /// without any cache.
+    pub cache: Vec<Option<CacheStats>>,
 }
 
 impl FleetMetrics {
@@ -347,7 +383,7 @@ impl Fleet {
         let n = config.shards;
         Fleet::start_grouped(
             config,
-            vec![("default".to_string(), n)],
+            vec![GroupSpec { label: "default".to_string(), count: n, cache: None }],
             Arc::new(move |shard, _model| make_engine(shard)),
         )
     }
@@ -372,10 +408,16 @@ impl Fleet {
                 catalog.len()
             );
         }
-        let groups: Vec<(String, usize)> = catalog
+        let groups: Vec<GroupSpec> = catalog
             .iter()
             .zip(shards_per_model)
-            .map(|((_, e), &n)| (e.name.clone(), n))
+            .map(|((_, e), &n)| {
+                // Per-model capacity override, else the fleet default;
+                // 0 leaves the group uncached.
+                let capacity = e.cache_entries.unwrap_or(config.cache_entries);
+                let cache = (capacity > 0).then(|| (InputKeyer::for_entry(e), capacity));
+                GroupSpec { label: e.name.clone(), count: n, cache }
+            })
             .collect();
         let threads = config.threads_per_shard;
         Fleet::start_grouped(
@@ -389,18 +431,18 @@ impl Fleet {
         )
     }
 
-    /// Shared start path: spawn `count` workers per `(label, count)` group,
+    /// Shared start path: spawn `count` workers per group spec,
     /// assigning global shard ids group by group.
     fn start_grouped(
         config: FleetConfig,
-        group_spec: Vec<(String, usize)>,
+        group_spec: Vec<GroupSpec>,
         factory: Arc<dyn Fn(usize, ModelId) -> Result<Box<dyn Engine>> + Send + Sync>,
     ) -> Result<Fleet> {
-        let total: usize = group_spec.iter().map(|(_, n)| n).sum();
+        let total: usize = group_spec.iter().map(|g| g.count).sum();
         if total == 0 {
             bail!("fleet needs at least one shard");
         }
-        if group_spec.iter().any(|(_, n)| *n == 0) {
+        if group_spec.iter().any(|g| g.count == 0) {
             bail!("every model group needs at least one shard");
         }
         if config.queue_cap == 0 {
@@ -409,7 +451,7 @@ impl Fleet {
         let mut shards = Vec::with_capacity(total);
         let mut ready = Vec::with_capacity(total);
         let mut groups = Vec::with_capacity(group_spec.len());
-        for (g, (label, count)) in group_spec.into_iter().enumerate() {
+        for (g, GroupSpec { label, count, cache }) in group_spec.into_iter().enumerate() {
             let model = ModelId(g);
             let mut shard_ids = Vec::with_capacity(count);
             for _ in 0..count {
@@ -448,7 +490,15 @@ impl Fleet {
                 shards.push(Shard { tx: Some(tx), state, ins, worker: Some(worker) });
                 ready.push(ready_rx);
             }
-            groups.push(Group { model, label, shard_ids, dispatcher: Dispatcher::new(config.policy) });
+            let cache =
+                cache.map(|(keyer, cap)| GroupCache::register(&config.metrics, &label, keyer, cap));
+            groups.push(Group {
+                model,
+                label,
+                shard_ids,
+                dispatcher: Dispatcher::new(config.policy),
+                cache,
+            });
         }
         let mut dead = Vec::new();
         for (id, rx) in ready.into_iter().enumerate() {
@@ -513,6 +563,41 @@ impl Fleet {
             .groups
             .get(model.0)
             .ok_or(SubmitError::UnknownModel { model, models: self.groups.len() })?;
+        let submitted = Instant::now();
+        // Result-cache check, deliberately *before* admission control: a
+        // hit replies without ever touching a shard queue, so the JSQ
+        // queue-depth signal and every per-shard metric see only real
+        // engine traffic (the accounting rule in `coordinator::cache`).
+        let mut fill = None;
+        if let Some(cache) = &group.cache {
+            match cache.keyer.key(&input) {
+                Some(key) => {
+                    if let Some(output) = cache.store.get(&key) {
+                        cache.hits.inc();
+                        let latency = submitted.elapsed();
+                        cache.hit_latency_us.observe(latency.as_secs_f64() * 1e6);
+                        let (rtx, rrx) = mpsc::channel();
+                        let _ = rtx.send(Reply {
+                            output: Ok(output),
+                            latency,
+                            batch_size: 0,
+                            shard: CACHE_SHARD,
+                            model,
+                            cached: true,
+                        });
+                        return Ok(rrx);
+                    }
+                    cache.misses.inc();
+                    fill = Some(CacheFill {
+                        store: Arc::clone(&cache.store),
+                        key,
+                        evictions: cache.evictions.clone(),
+                    });
+                }
+                // NaN input: never keyed, never stored (see cache docs).
+                None => cache.bypass.inc(),
+            }
+        }
         let loads: Vec<ShardLoad> =
             group.shard_ids.iter().map(|&i| self.shards[i].state.load()).collect();
         let local = group.dispatcher.select(&loads).ok_or(SubmitError::Unavailable)?;
@@ -547,7 +632,7 @@ impl Fleet {
             .tracer
             .as_ref()
             .map(|t| ReqTrace { id: t.next_id(), enqueue_us: t.now_us(), dequeue_us: None });
-        let req = Request { input, model, submitted: Instant::now(), reply: rtx, trace };
+        let req = Request { input, model, submitted, reply: rtx, trace, fill };
         let sent = match self.shards[i].tx.as_ref() {
             Some(tx) => tx.send(req).is_ok(),
             None => false,
@@ -595,11 +680,13 @@ impl Fleet {
             .iter()
             .map(|g| (g.label.clone(), g.shard_ids.clone()))
             .collect();
+        let cache: Vec<Option<CacheStats>> = self.groups.iter().map(Group::cache_stats).collect();
         Ok(FleetMetrics {
             shards: out,
             dead: std::mem::take(&mut self.dead),
             policy: self.config.policy,
             groups,
+            cache: if cache.iter().any(Option::is_some) { cache } else { Vec::new() },
         })
     }
 }
@@ -765,7 +852,13 @@ pub(super) fn serve_loop(
         let done = Instant::now();
         match result {
             Ok(outputs) => {
-                for (pending, output) in batch.into_iter().zip(outputs) {
+                for (mut pending, output) in batch.into_iter().zip(outputs) {
+                    // A miss that carried a fill populates the cache on
+                    // its way out; the stored bytes are the verbatim
+                    // reply (planned runs are input-deterministic).
+                    if let Some(fill) = pending.payload.fill.take() {
+                        fill.evictions.add(fill.store.put(fill.key, output.clone()));
+                    }
                     let latency = done.duration_since(pending.payload.submitted);
                     metrics.completed += 1;
                     metrics.latency_us.add(latency.as_secs_f64() * 1e6);
@@ -790,6 +883,7 @@ pub(super) fn serve_loop(
                         batch_size,
                         shard,
                         model: pending.payload.model,
+                        cached: false,
                     });
                 }
             }
@@ -816,12 +910,15 @@ pub(super) fn serve_loop(
                             engine_end_us,
                         );
                     }
+                    // The fill (if any) is dropped with the request:
+                    // failed outputs never enter the cache.
                     let _ = pending.payload.reply.send(Reply {
                         output: Err(ServeError::Engine(msg.clone())),
                         latency,
                         batch_size,
                         shard,
                         model: pending.payload.model,
+                        cached: false,
                     });
                 }
             }
@@ -1080,6 +1177,60 @@ mod tests {
         assert_eq!(m.groups, vec![("model-a".into(), vec![0, 1]), ("model-b".into(), vec![2])]);
         assert_eq!(m.shards[0].completed + m.shards[1].completed, 6);
         assert_eq!(m.shards[2].completed, 6);
+    }
+
+    #[test]
+    fn catalog_fleet_serves_repeats_from_cache() {
+        let cfg = ApuConfig { n_pes: 4, pe_sram_bits: 1 << 16, clock_ghz: 1.0 };
+        let mut cat = ModelCatalog::new();
+        let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, 77).unwrap();
+        cat.add_program(
+            "cached",
+            Arc::new(compile_packed_layers("cached", &layers, 0.2, 4, 4).unwrap()),
+            cfg,
+        )
+        .unwrap();
+        let reg = Arc::new(Registry::new());
+        let fleet = Fleet::start_catalog(
+            FleetConfig {
+                shards: 0,
+                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+                queue_cap: 1024,
+                metrics: Arc::clone(&reg),
+                cache_entries: 32,
+                ..FleetConfig::default()
+            },
+            Arc::new(cat),
+            &[1],
+        )
+        .unwrap();
+        let mut load = SyntheticLoad::new(1000.0, 5);
+        let input = load.next_input(16);
+        let cold = fleet.infer(input.clone()).unwrap();
+        assert!(!cold.cached, "first submission must ride the engine path");
+        let want = cold.output.unwrap();
+        let hot = fleet.infer(input.clone()).unwrap();
+        assert!(hot.cached);
+        assert_eq!(hot.shard, CACHE_SHARD);
+        assert_eq!(hot.batch_size, 0);
+        let got = hot.output.unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "hit must be the stored output verbatim");
+        }
+        // NaN bypasses the cache but is still served by the engine.
+        let nan = fleet.infer(vec![f32::NAN; 16]).unwrap();
+        assert!(!nan.cached && nan.output.is_ok());
+        assert_eq!(reg.counter_total("apu_fleet_cache_hits_total"), 1);
+        assert_eq!(reg.counter_total("apu_fleet_cache_misses_total"), 1);
+        assert_eq!(reg.counter_total("apu_fleet_cache_bypass_total"), 1);
+        // Accounting rule: only the two engine-path requests enqueued.
+        assert_eq!(reg.counter_total("apu_fleet_enqueued_total"), 2);
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.cache.len(), 1);
+        let stats = m.cache[0].as_ref().unwrap();
+        assert_eq!((stats.hits, stats.misses, stats.bypass), (1, 1, 1));
+        assert_eq!(stats.entries, 1);
     }
 
     #[test]

@@ -19,6 +19,14 @@
 //! model, requests carry a [`ModelId`], and SLO/metrics output is
 //! labelled per model as well as per shard.
 //!
+//! A request-level result [`cache`] can sit in front of the whole
+//! dispatch path: catalog-backed fleets key each request on (program
+//! fingerprint, machine key, canonical quantized input) and serve
+//! repeats verbatim — sound because planned runs are input-
+//! deterministic. Hits reply *before* admission control, so the queue
+//! signal and every per-shard metric see only real engine traffic; the
+//! cache keeps its own `apu_fleet_cache_*` series and SLO table.
+//!
 //! Every shard also registers per-shard counters/gauges/histograms in a
 //! [`crate::obs::metrics::Registry`] (the process-global one by default;
 //! inject a private registry through [`FleetConfig::metrics`] for tests),
@@ -28,6 +36,7 @@
 //! Chrome trace-event export.
 
 pub mod batcher;
+pub mod cache;
 pub mod catalog;
 pub mod dispatch;
 pub mod engine;
@@ -36,9 +45,10 @@ pub mod server;
 pub mod slo;
 
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use cache::{CacheKey, CacheStats, InputKeyer, ResultCache};
 pub use catalog::{ModelCatalog, ModelEntry, ModelId};
 pub use dispatch::{DispatchPolicy, Dispatcher, ShardLoad};
 pub use engine::{ApuEngine, Engine, GoldenEngine};
-pub use fleet::{Fleet, FleetConfig, FleetMetrics, Group, SubmitError};
-pub use server::{Reply, ServeError, Server, ServerMetrics, SyntheticLoad};
+pub use fleet::{Fleet, FleetConfig, FleetMetrics, Group, SubmitError, CACHE_SHARD};
+pub use server::{InputPool, Reply, ServeError, Server, ServerMetrics, SyntheticLoad};
 pub use slo::{SloReport, SloSnapshot};

@@ -50,6 +50,11 @@ pub struct Reply {
     /// The model the request targeted (`ModelId(0)` for single-model
     /// fleets and the single-engine server).
     pub model: super::catalog::ModelId,
+    /// True when the reply came from the fleet's result cache. Cached
+    /// replies never touched a shard queue, batcher, or engine:
+    /// `batch_size` is 0 and `shard` is
+    /// [`CACHE_SHARD`](super::fleet::CACHE_SHARD).
+    pub cached: bool,
 }
 
 impl Reply {
@@ -155,6 +160,51 @@ impl SyntheticLoad {
     }
 }
 
+/// A fixed pool of pre-generated inputs drawn with Zipf-skewed
+/// popularity — the repeated-request workload a result cache exists
+/// for. [`SyntheticLoad::next_input`] never repeats an input, so the
+/// cache-enabled fleet driver and the `fleet_scaling` bench sample from
+/// one of these instead: entry `k` is drawn with weight
+/// `1 / (k + 1)^exponent`, making entry 0 the hot key.
+pub struct InputPool {
+    inputs: Vec<Vec<f32>>,
+    /// Cumulative (unnormalized) Zipf weights, one per pool entry.
+    cdf: Vec<f64>,
+}
+
+impl InputPool {
+    pub fn zipf(dim: usize, n: usize, exponent: f64, seed: u64) -> InputPool {
+        let mut rng = Rng::new(seed);
+        let n = n.max(1);
+        let inputs =
+            (0..n).map(|_| (0..dim).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(exponent);
+            cdf.push(acc);
+        }
+        InputPool { inputs, cdf }
+    }
+
+    /// Draw one input by Zipf popularity (cloned — requests take
+    /// ownership of their input).
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        let total = *self.cdf.last().expect("pool is never empty");
+        let u = rng.f64() * total;
+        let i = self.cdf.partition_point(|&c| c < u).min(self.inputs.len() - 1);
+        self.inputs[i].clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +288,26 @@ mod tests {
         let mean: f64 = (0..2000).map(|_| l.next_gap().as_secs_f64()).sum::<f64>() / 2000.0;
         assert!((mean - 0.01).abs() < 0.002, "mean gap {mean}");
         assert_eq!(l.next_input(5).len(), 5);
+    }
+
+    #[test]
+    fn input_pool_skews_toward_the_hot_entry() {
+        let pool = InputPool::zipf(4, 16, 1.1, 42);
+        assert_eq!(pool.len(), 16);
+        assert!(!pool.is_empty());
+        let hot = pool.inputs[0].clone();
+        let cold = pool.inputs[15].clone();
+        let mut rng = Rng::new(7);
+        let (mut hot_n, mut cold_n) = (0, 0);
+        for _ in 0..2000 {
+            let x = pool.sample(&mut rng);
+            assert_eq!(x.len(), 4);
+            if x == hot {
+                hot_n += 1;
+            } else if x == cold {
+                cold_n += 1;
+            }
+        }
+        assert!(hot_n > 8 * cold_n.max(1), "hot {hot_n} vs cold {cold_n}: no skew");
     }
 }

@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use super::cache::CacheStats;
 use super::fleet::FleetMetrics;
 use super::server::ServerMetrics;
 use crate::obs::metrics::Registry;
@@ -103,6 +104,11 @@ pub struct SloReport {
     pub dead: Vec<(usize, String)>,
     pub elapsed: Duration,
     pub throughput_rps: f64,
+    /// `(model label, final cache counters)` for every group that served
+    /// with a result cache; empty for uncached fleets. Cache hits are
+    /// *not* part of any latency/throughput row above — they never touch
+    /// the engine path (the accounting rule in `coordinator::cache`).
+    pub cache: Vec<(String, CacheStats)>,
 }
 
 impl SloReport {
@@ -118,6 +124,14 @@ impl SloReport {
             })
             .collect();
         let fleet = SloSnapshot::aggregate(&m.shards.iter().collect::<Vec<_>>());
+        let cache = m
+            .groups
+            .iter()
+            .enumerate()
+            .filter_map(|(i, (name, _))| {
+                m.cache.get(i).cloned().flatten().map(|s| (name.clone(), s))
+            })
+            .collect();
         SloReport {
             policy: m.policy.name(),
             per_shard,
@@ -127,6 +141,7 @@ impl SloReport {
             dead: m.dead.clone(),
             elapsed,
             throughput_rps: m.throughput_rps(elapsed),
+            cache,
         }
     }
 
@@ -185,6 +200,19 @@ impl SloReport {
         if self.throughput_rps.is_finite() {
             reg.gauge("apu_slo_throughput_rps", "completed requests per second", &[])
                 .set(self.throughput_rps);
+        }
+        for (name, s) in &self.cache {
+            // Skip models whose cache saw no cacheable traffic — a flat
+            // 0 would read as "everything missed".
+            if s.hits + s.misses == 0 {
+                continue;
+            }
+            reg.gauge(
+                "apu_slo_cache_hit_rate",
+                "result-cache hits / (hits + misses) over the run",
+                &[("model", name.as_str())],
+            )
+            .set(s.hit_rate());
         }
     }
 
@@ -267,6 +295,25 @@ impl SloReport {
             out.push_str("\nper-model:\n");
             out.push_str(&mt.render());
         }
+        if !self.cache.is_empty() {
+            let mut ct = Table::new(&[
+                "model", "cap", "entries", "hits", "miss", "bypass", "evict", "hit%",
+            ]);
+            for (name, s) in &self.cache {
+                ct.row(&[
+                    name.clone(),
+                    s.capacity.to_string(),
+                    s.entries.to_string(),
+                    s.hits.to_string(),
+                    s.misses.to_string(),
+                    s.bypass.to_string(),
+                    s.evictions.to_string(),
+                    format!("{:.1}", 100.0 * s.hit_rate()),
+                ]);
+            }
+            out.push_str("\nresult cache (hits bypass the engine path entirely):\n");
+            out.push_str(&ct.render());
+        }
         out
     }
 }
@@ -296,6 +343,7 @@ mod tests {
             dead: vec![],
             policy: DispatchPolicy::JoinShortestQueue,
             groups: vec![("default".into(), vec![0, 1])],
+            cache: vec![],
         };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         assert_eq!(r.fleet.completed, 5);
@@ -322,6 +370,7 @@ mod tests {
             dead: vec![],
             policy: DispatchPolicy::RoundRobin,
             groups: vec![("fast".into(), vec![0, 1]), ("slow".into(), vec![2])],
+            cache: vec![],
         };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         assert_eq!(r.per_model.len(), 2);
@@ -348,6 +397,7 @@ mod tests {
             dead: vec![],
             policy: DispatchPolicy::RoundRobin,
             groups: vec![("default".into(), vec![0])],
+            cache: vec![],
         };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         // 60 completed + 20 failed + 20 rejected → 20% rejected
@@ -361,6 +411,7 @@ mod tests {
             dead: vec![],
             policy: DispatchPolicy::RoundRobin,
             groups: vec![("default".into(), vec![0, 1])],
+            cache: vec![],
         };
         let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
         let reg = Registry::new();
@@ -381,12 +432,56 @@ mod tests {
     }
 
     #[test]
+    fn cache_rows_render_and_export_hit_rate() {
+        let fm = FleetMetrics {
+            shards: vec![shard_metrics(&[100.0, 200.0], 0, 0), shard_metrics(&[300.0], 0, 0)],
+            dead: vec![],
+            policy: DispatchPolicy::JoinShortestQueue,
+            groups: vec![("hot".into(), vec![0]), ("coldonly".into(), vec![1])],
+            cache: vec![
+                Some(CacheStats {
+                    hits: 30,
+                    misses: 10,
+                    evictions: 2,
+                    bypass: 1,
+                    entries: 8,
+                    capacity: 16,
+                }),
+                // cached group that saw no cacheable traffic: rendered,
+                // but no hit-rate gauge (it would read as "all missed")
+                Some(CacheStats { capacity: 4, ..CacheStats::default() }),
+            ],
+        };
+        let r = SloReport::from_metrics(&fm, Duration::from_secs(1));
+        assert_eq!(r.cache.len(), 2);
+        let out = r.render();
+        assert!(out.contains("result cache"), "{out}");
+        assert!(out.contains("75.0"), "hit rate missing: {out}");
+        let reg = Registry::new();
+        r.export(&reg);
+        let rate = reg.gauge_value("apu_slo_cache_hit_rate", &[("model", "hot")]).unwrap();
+        assert!((rate - 0.75).abs() < 1e-9);
+        assert!(reg.gauge_value("apu_slo_cache_hit_rate", &[("model", "coldonly")]).is_none());
+        // uncached fleets keep rendering without a cache table
+        let bare = FleetMetrics {
+            shards: vec![shard_metrics(&[10.0], 0, 0)],
+            dead: vec![],
+            policy: DispatchPolicy::RoundRobin,
+            groups: vec![("default".into(), vec![0])],
+            cache: vec![],
+        };
+        let out = SloReport::from_metrics(&bare, Duration::from_secs(1)).render();
+        assert!(!out.contains("result cache"), "{out}");
+    }
+
+    #[test]
     fn render_marks_dead_shards() {
         let fm = FleetMetrics {
             shards: vec![shard_metrics(&[10.0], 0, 0), ServerMetrics::default()],
             dead: vec![(1, "no hardware".into())],
             policy: DispatchPolicy::LeastOutstanding,
             groups: vec![("default".into(), vec![0, 1])],
+            cache: vec![],
         };
         let out = SloReport::from_metrics(&fm, Duration::from_millis(100)).render();
         assert!(out.contains("dead: no hardware"));

@@ -165,8 +165,16 @@ pub fn from_bytes(buf: &[u8]) -> Result<Program> {
     }
     let name_len = r.u32()? as usize;
     let name = String::from_utf8(r.take(name_len)?.to_vec()).context("artifact name not utf8")?;
-    let din = r.u64()? as usize;
-    let dout = r.u64()? as usize;
+    // Bound the claimed dims before casting: a clobbered length here would
+    // otherwise flow into downstream `Vec::with_capacity` calls and abort
+    // the process on capacity overflow instead of returning an error.
+    const MAX_DIM: u64 = 1 << 24;
+    let din = r.u64()?;
+    let dout = r.u64()?;
+    if din > MAX_DIM || dout > MAX_DIM {
+        bail!("artifact claims absurd dims din={din} dout={dout} (max {MAX_DIM})");
+    }
+    let (din, dout) = (din as usize, dout as usize);
     let n_words = r.u32()? as usize;
     r.check_count(n_words, 8)?;
     let mut words = Vec::with_capacity(n_words);
@@ -302,6 +310,47 @@ mod tests {
         let off = 4 + 4 + p.name.len() + 16;
         bytes[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_at_every_length_errors_cleanly() {
+        let bytes = to_bytes(&sample());
+        for k in 0..bytes.len() {
+            let prefix = bytes[..k].to_vec();
+            let got = std::panic::catch_unwind(move || from_bytes(&prefix).map(|_| ()));
+            match got {
+                Ok(parsed) => assert!(parsed.is_err(), "prefix of {k} bytes parsed as valid"),
+                Err(_) => panic!("from_bytes panicked on a {k}-byte prefix"),
+            }
+        }
+    }
+
+    #[test]
+    fn byte_corruption_never_panics() {
+        let bytes = to_bytes(&sample());
+        let mut rng = crate::util::rng::Rng::new(0xbad5eed);
+        for case in 0..2000usize {
+            let mut blob = bytes.clone();
+            for _ in 0..1 + (case % 4) {
+                let at = rng.usize_below(blob.len());
+                blob[at] = rng.next_u64() as u8;
+            }
+            // Either a clean error or (rarely) a still-valid program is
+            // fine; aborting the loader is not.
+            let got = std::panic::catch_unwind(move || from_bytes(&blob).map(|_| ()));
+            assert!(got.is_ok(), "from_bytes panicked on corrupted blob (case {case})");
+        }
+    }
+
+    #[test]
+    fn absurd_dims_error_instead_of_poisoning_downstream() {
+        let p = sample();
+        let mut bytes = to_bytes(&p);
+        // din sits right after magic + name (u32 len + utf8).
+        let off = 4 + 4 + p.name.len();
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let msg = format!("{:#}", from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("absurd dims"), "{msg}");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! apu fleet     [--shards N] [--policy rr|lo|jsq] [--requests N] [--rate RPS]
 //!               [--batch B] [--queue-cap Q] [--model synthetic|artifact|zoo:<name>]
 //!               [--models zoo:a,zoo:b,prog.apu [--mix 70,20,10]] [--threads T]
+//!               [--cache ENTRIES | --no-cache]
 //!               [--metrics-out FILE] [--trace-out FILE]
 //! apu dse       [--sweep block|precision]
 //! apu netlist   [--pes N] [--block S] [--bits B]
@@ -24,8 +25,8 @@ use apu::compiler::{
     PipelineOptions,
 };
 use apu::coordinator::{
-    ApuEngine, BatchPolicy, DispatchPolicy, Fleet, FleetConfig, GoldenEngine, ModelCatalog,
-    ModelId, Reply, Server, SloReport, SubmitError, SyntheticLoad,
+    ApuEngine, BatchPolicy, DispatchPolicy, Fleet, FleetConfig, GoldenEngine, InputPool,
+    ModelCatalog, ModelId, Reply, Server, SloReport, SubmitError, SyntheticLoad,
 };
 use apu::figures;
 use apu::generator::{DesignInstance, GeneratorConfig};
@@ -442,6 +443,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         },
         Opt { name: "pes", default: Some("4"), help: "PEs per shard engine" },
         Opt { name: "threads", default: Some("1"), help: "lane-pool workers per shard engine (bitwise invisible)" },
+        Opt {
+            name: "cache",
+            default: Some("1024"),
+            help: "result-cache entries per model (catalog fleets only; 0 disables)",
+        },
+        Opt { name: "no-cache", default: None, help: "disable the result cache (same as --cache 0)" },
         Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory (--model artifact)" },
         Opt {
             name: "metrics-out",
@@ -468,6 +475,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let registry = metrics::global();
     let tracer = (!trace_out.is_empty()).then(Tracer::new);
     let threads = args.get_usize("threads")?.max(1);
+    let cache_entries = if args.has_flag("no-cache") { 0 } else { args.get_usize("cache")? };
     let config = FleetConfig {
         shards,
         policy,
@@ -479,6 +487,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         metrics: registry.clone(),
         tracer: tracer.clone(),
         threads_per_shard: threads,
+        cache_entries,
     };
     let n_pes = args.get_usize("pes")?;
 
@@ -515,6 +524,18 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             cache.builds,
             cache.hits
         );
+        // With the result cache on, draw each model's inputs from a small
+        // Zipf-skewed pool so repeats actually occur (uniform random f32
+        // vectors would never collide and the cache would sit cold).
+        let pools: Option<Vec<InputPool>> = (cache_entries > 0).then(|| {
+            dins.iter()
+                .enumerate()
+                .map(|(i, &d)| InputPool::zipf(d, 64, 1.1, 4242 + i as u64))
+                .collect()
+        });
+        if pools.is_some() {
+            println!("result cache: {cache_entries} entries/model, Zipf(1.1) input pool of 64");
+        }
         let total: f32 = weights.iter().sum();
         let mut load = SyntheticLoad::new(rate, 42);
         let t0 = std::time::Instant::now();
@@ -532,7 +553,11 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 }
                 pick -= w;
             }
-            match fleet.submit_to(ModelId(m), load.next_input(dins[m])) {
+            let input = match &pools {
+                Some(p) => p[m].sample(&mut load.rng),
+                None => load.next_input(dins[m]),
+            };
+            match fleet.submit_to(ModelId(m), input) {
                 Ok(rx) => receivers.push(rx),
                 Err(SubmitError::Rejected { .. }) => rejected_at_submit += 1,
                 Err(e) => return Err(e.into()),

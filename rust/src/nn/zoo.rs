@@ -192,7 +192,9 @@ pub fn vgg_nano() -> Network {
 /// CLI lookup: a zoo network by name (`apu compile --net <name>`).
 pub fn by_name(name: &str) -> Option<Network> {
     Some(match name {
-        "lenet" | "lenet-300-100" => lenet_300_100(),
+        // "lenet-5" is the spelling most serving configs use; it maps
+        // to the same FC stack the paper evaluates.
+        "lenet" | "lenet-300-100" | "lenet-5" => lenet_300_100(),
         "alexnet" => alexnet(),
         "alexnet-nano" | "alexnet_nano" => alexnet_nano(),
         "vgg19" | "vgg19-group" => vgg19(true),

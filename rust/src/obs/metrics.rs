@@ -441,6 +441,13 @@ pub fn batch_buckets() -> Vec<f64> {
     vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
 }
 
+/// Cache-hit latency buckets, microseconds. Hits skip batching and the
+/// engine entirely, so they land orders of magnitude below
+/// [`latency_buckets_us`] — these resolve the 1µs–1ms range instead.
+pub fn cache_latency_buckets_us() -> Vec<f64> {
+    vec![1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 1000.0]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -556,7 +563,7 @@ mod tests {
 
     #[test]
     fn default_bucket_sets_are_ascending() {
-        for b in [latency_buckets_us(), batch_buckets()] {
+        for b in [latency_buckets_us(), batch_buckets(), cache_latency_buckets_us()] {
             assert!(b.windows(2).all(|w| w[0] < w[1]));
         }
     }

@@ -163,6 +163,18 @@ impl ExecPlan {
         self.key.fingerprint
     }
 
+    /// The ingress quantizer: the host `Quantize` every compiled program
+    /// opens with, applied to the raw input before anything else. The
+    /// result cache (`coordinator::cache`) keys requests on this grid so
+    /// inputs that collapse to the same codes share one entry; plans
+    /// that do not start with a quantize step return `None`.
+    pub fn input_quantizer(&self) -> Option<Quantizer> {
+        match self.steps.first() {
+            Some(ExecStep::Host(HostStep::Quantize(q))) => Some(*q),
+            _ => None,
+        }
+    }
+
     /// Compile `program` (already `validate()`d) into an execution plan,
     /// or fail if the program's shape is unsupported / would error at
     /// run time — the caller then falls back to the interpreter.

@@ -44,9 +44,27 @@ impl BenchResult {
 
 /// Write a machine-readable bench report (one entry per result) — the
 /// perf-trajectory artifact `ci.sh` tracks across PRs.
+///
+/// Merges by name with any report already at `path`: entries whose names
+/// match the new results are replaced, everything else is kept. This lets
+/// separate bench binaries (sim_hotpath, fleet_scaling) contribute to one
+/// BENCH_*.json without clobbering each other.
 pub fn write_report(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let fresh: Vec<&str> = results.iter().map(|r| r.name.as_str()).collect();
+    let mut merged: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|doc| match doc.path("benches") {
+            Some(Json::Arr(prev)) => Some(prev.clone()),
+            _ => None,
+        })
+        .unwrap_or_default()
+        .into_iter()
+        .filter(|b| b.path("name").and_then(Json::as_str).is_some_and(|n| !fresh.contains(&n)))
+        .collect();
+    merged.extend(results.iter().map(BenchResult::to_json));
     let doc = Json::obj(vec![
-        ("benches", Json::arr(results.iter().map(|r| r.to_json()))),
+        ("benches", Json::Arr(merged)),
         ("budget_ms", Json::Int(budget().as_millis() as i64)),
     ]);
     std::fs::write(path, doc.pretty())
@@ -95,6 +113,46 @@ mod tests {
         assert!(r.iters > 100);
         assert!(r.mean_ns >= 0.0);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn write_report_merges_by_name() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("apu-bench-merge-{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let mk = |name: &str, mean: f64| BenchResult {
+            name: name.into(),
+            iters: 1,
+            mean_ns: mean,
+            median_ns: mean,
+            stddev_ns: 0.0,
+            min_ns: mean,
+        };
+        write_report(&path, &[mk("a", 1.0), mk("b", 2.0)]).unwrap();
+        // second writer updates "b" and adds "c"; "a" must survive
+        write_report(&path, &[mk("b", 20.0), mk("c", 3.0)]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let Some(Json::Arr(benches)) = doc.path("benches") else {
+            panic!("no benches array");
+        };
+        let mut seen: Vec<(String, f64)> = benches
+            .iter()
+            .map(|b| {
+                let name = b.path("name").and_then(Json::as_str).unwrap().to_string();
+                let mean = match b.path("mean_ns") {
+                    Some(Json::Num(x)) => *x,
+                    Some(Json::Int(x)) => *x as f64,
+                    other => panic!("bad mean_ns {other:?}"),
+                };
+                (name, mean)
+            })
+            .collect();
+        seen.sort();
+        assert_eq!(
+            seen,
+            vec![("a".to_string(), 1.0), ("b".to_string(), 20.0), ("c".to_string(), 3.0)]
+        );
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Request-level result cache end to end: cache-hit replies must be
+//! bitwise identical to engine replies on every compilable zoo network ×
+//! both machine instances × lane-pool widths {1, 4} — anchored on the
+//! planner's input-determinism contract (integration_plan.rs). The rest
+//! of the matrix: a hot key hammered from N threads pays exactly one
+//! miss, capacity-1 LRU evicts deterministically, a disabled cache is
+//! byte-identical to the uncached fleet, hits leave the JSQ queue signal
+//! and every per-shard metric untouched (the accounting rule), and
+//! entries never leak across ModelIds even for same-shaped inputs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use apu::compiler::pipeline::{compile_network, PipelineOptions};
+use apu::compiler::{compile_packed_layers, synthetic_packed_network, CostModel};
+use apu::coordinator::{
+    BatchPolicy, DispatchPolicy, Fleet, FleetConfig, ModelCatalog, ModelId, CACHE_SHARD,
+};
+use apu::nn::zoo;
+use apu::obs::metrics::Registry;
+use apu::sim::{Apu, ApuConfig};
+use apu::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn config(threads: usize, cache_entries: usize, reg: Arc<Registry>) -> FleetConfig {
+    FleetConfig {
+        shards: 0, // sized by shards_per_model at start_catalog
+        policy: DispatchPolicy::JoinShortestQueue,
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        queue_cap: 4096,
+        metrics: reg,
+        threads_per_shard: threads,
+        cache_entries,
+        ..FleetConfig::default()
+    }
+}
+
+fn synth_catalog(models: &[(&str, &[usize], u64)]) -> (ModelCatalog, ApuConfig) {
+    let cfg = ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 };
+    let mut cat = ModelCatalog::new();
+    for (name, dims, seed) in models {
+        let layers = synthetic_packed_network(dims, 4, 4, *seed).unwrap();
+        let program = compile_packed_layers(name, &layers, 0.15, 4, 4).unwrap();
+        cat.add_program(name, Arc::new(program), cfg.clone()).unwrap();
+    }
+    (cat, cfg)
+}
+
+/// The centerpiece: on every compilable zoo network × both machines ×
+/// lane widths {1, 4}, a cold submission must match a directly-driven
+/// planned Apu bit-for-bit, and the warm resubmission must be served
+/// from the cache (shard = CACHE_SHARD, batch_size = 0) with the exact
+/// same bits. All models share one mixed catalog per fleet, so routing
+/// and keying are exercised together. Also pins the ±0.0 canonicalization
+/// soundness: an all-(−0.0) request may be served from the all-(+0.0)
+/// entry, so the engine's outputs for the two inputs must be bitwise
+/// equal (the sign of zero dies at the first accumulation).
+#[test]
+fn cache_hits_are_bitwise_identical_across_the_zoo() {
+    let machines = [("paper_9pe", CostModel::paper_9pe()), ("nano_4pe", CostModel::nano_4pe())];
+    let mut executed: Vec<String> = Vec::new();
+    for (mname, model) in &machines {
+        // the big paper networks are analytic-only on these instances;
+        // the cache contract covers whatever actually compiles
+        let mut programs: Vec<(String, Arc<apu::isa::Program>)> = Vec::new();
+        for name in zoo::names() {
+            let net = zoo::by_name(name).unwrap();
+            let Ok(compiled) = compile_network(&net, model, &PipelineOptions::default()) else {
+                continue;
+            };
+            programs.push((name.to_string(), Arc::new(compiled.program)));
+            executed.push(format!("{mname}/{name}"));
+        }
+        for threads in [1usize, 4] {
+            let mut cat = ModelCatalog::new();
+            for (name, prog) in &programs {
+                cat.add_program(name, Arc::clone(prog), model.apu_config()).unwrap();
+            }
+            let reg = Arc::new(Registry::new());
+            let fleet = Fleet::start_catalog(
+                config(threads, 128, Arc::clone(&reg)),
+                Arc::new(cat),
+                &vec![1; programs.len()],
+            )
+            .unwrap();
+            for (m, (name, prog)) in programs.iter().enumerate() {
+                let id = ModelId(m);
+                let mut refr = Apu::new(model.apu_config());
+                refr.load(Arc::clone(prog)).unwrap();
+                let mut rng = Rng::new(4000 + m as u64);
+                for k in 0..2 {
+                    let x: Vec<f32> = (0..prog.din).map(|_| rng.normal()).collect();
+                    let want = bits(&refr.run(&x).unwrap());
+
+                    let cold = fleet.submit_to(id, x.clone()).unwrap().recv().unwrap();
+                    assert!(!cold.cached, "{mname}/{name} t{threads} input {k}: cold hit?");
+                    assert_eq!(
+                        bits(&cold.output.unwrap()),
+                        want,
+                        "{mname}/{name} t{threads} input {k}: engine reply != direct run"
+                    );
+
+                    let hot = fleet.submit_to(id, x).unwrap().recv().unwrap();
+                    assert!(hot.cached, "{mname}/{name} t{threads} input {k}: repeat missed");
+                    assert_eq!(hot.shard, CACHE_SHARD);
+                    assert_eq!(hot.batch_size, 0, "hits must not claim batch work");
+                    assert_eq!(hot.model, id);
+                    let served = hot.output.unwrap();
+                    assert_eq!(served.len(), prog.dout);
+                    assert_eq!(
+                        bits(&served),
+                        want,
+                        "{mname}/{name} t{threads} input {k}: cached reply != direct run"
+                    );
+                }
+
+                // ±0.0 soundness, empirically: whatever the keyer decides
+                // (hit via the collapsed key, or miss on the raw-bits
+                // fallback), the served bits must equal the +0.0 run's.
+                let plus = vec![0.0f32; prog.din];
+                let zp = fleet.submit_to(id, plus.clone()).unwrap().recv().unwrap();
+                let zm = fleet.submit_to(id, vec![-0.0f32; prog.din]).unwrap().recv().unwrap();
+                let zero_bits = bits(&zp.output.unwrap());
+                assert_eq!(
+                    bits(&zm.output.unwrap()),
+                    zero_bits,
+                    "{mname}/{name} t{threads}: -0.0 input diverged from +0.0"
+                );
+                assert_eq!(bits(&refr.run(&plus).unwrap()), zero_bits);
+            }
+            assert!(reg.counter_total("apu_fleet_cache_hits_total") > 0);
+            fleet.shutdown().unwrap();
+        }
+    }
+    assert!(executed.contains(&"nano_4pe/vgg-nano".to_string()), "executed: {executed:?}");
+    assert!(executed.contains(&"nano_4pe/alexnet-nano".to_string()), "executed: {executed:?}");
+    assert!(executed.contains(&"paper_9pe/lenet".to_string()), "executed: {executed:?}");
+}
+
+/// N threads hammering one warmed key are all served from the cache: one
+/// miss total, one engine call total, and every reply carries the warm
+/// run's exact bits.
+#[test]
+fn a_hot_key_hammered_from_many_threads_pays_one_miss() {
+    let (cat, _) = synth_catalog(&[("hot", &[16usize, 20, 12][..], 5100)]);
+    let reg = Arc::new(Registry::new());
+    let fleet =
+        Fleet::start_catalog(config(1, 64, Arc::clone(&reg)), Arc::new(cat), &[2]).unwrap();
+    let input: Vec<f32> = {
+        let mut rng = Rng::new(1);
+        (0..16).map(|_| rng.normal()).collect()
+    };
+    let warm = fleet.submit_to(ModelId(0), input.clone()).unwrap().recv().unwrap();
+    assert!(!warm.cached);
+    let want = bits(&warm.output.unwrap());
+
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                for _ in 0..50 {
+                    let r = fleet.submit_to(ModelId(0), input.clone()).unwrap().recv().unwrap();
+                    assert!(r.cached && r.shard == CACHE_SHARD);
+                    assert_eq!(bits(&r.output.unwrap()), want);
+                }
+            });
+        }
+    });
+
+    assert_eq!(reg.counter_total("apu_fleet_cache_misses_total"), 1);
+    assert_eq!(reg.counter_total("apu_fleet_cache_hits_total"), 400);
+    // the accounting rule: only the warm-up ever reached a shard
+    assert_eq!(reg.counter_total("apu_fleet_enqueued_total"), 1);
+    assert_eq!(reg.counter_total("apu_fleet_engine_calls_total"), 1);
+    let m = fleet.shutdown().unwrap();
+    let stats = m.cache[0].clone().unwrap();
+    assert_eq!((stats.hits, stats.misses, stats.entries), (400, 1, 1));
+}
+
+/// A per-model capacity-1 override (ModelCatalog::set_cache_entries)
+/// gives a single-shard exact-LRU cache whose eviction order is fully
+/// deterministic under serialized traffic.
+#[test]
+fn capacity_one_override_evicts_deterministically() {
+    let (mut cat, _) = synth_catalog(&[("tiny", &[16usize, 20, 12][..], 5200)]);
+    cat.set_cache_entries(ModelId(0), Some(1)).unwrap();
+    let reg = Arc::new(Registry::new());
+    // fleet default says "no cache"; the entry's override wins
+    let fleet = Fleet::start_catalog(config(1, 0, Arc::clone(&reg)), Arc::new(cat), &[1]).unwrap();
+    let mut rng = Rng::new(2);
+    let in1: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    let in2: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    let go = |x: &Vec<f32>| fleet.submit_to(ModelId(0), x.clone()).unwrap().recv().unwrap();
+
+    assert!(!go(&in1).cached); // miss 1: fills the single slot
+    assert!(go(&in1).cached); // hit 1
+    assert!(!go(&in2).cached); // miss 2: evicts in1
+    assert!(!go(&in1).cached); // miss 3: evicts in2
+    assert!(go(&in1).cached); // hit 2
+
+    let m = fleet.shutdown().unwrap();
+    let stats = m.cache[0].clone().unwrap();
+    assert_eq!((stats.hits, stats.misses, stats.evictions), (2, 3, 2));
+    assert_eq!((stats.entries, stats.capacity), (1, 1));
+}
+
+/// cache_entries = 0 and no per-model override: no cache series exist,
+/// no reply is ever marked cached, and repeated inputs still reproduce
+/// the direct planned run bit-for-bit (the pre-cache contract).
+#[test]
+fn disabled_cache_serves_bitwise_identical_replies() {
+    let cfg = ApuConfig { n_pes: 4, pe_sram_bits: 1 << 20, clock_ghz: 1.0 };
+    let layers = synthetic_packed_network(&[16, 20, 12], 4, 4, 5300).unwrap();
+    let program = Arc::new(compile_packed_layers("plain", &layers, 0.15, 4, 4).unwrap());
+    let mut cat = ModelCatalog::new();
+    cat.add_program("plain", Arc::clone(&program), cfg.clone()).unwrap();
+    let reg = Arc::new(Registry::new());
+    let fleet = Fleet::start_catalog(config(1, 0, Arc::clone(&reg)), Arc::new(cat), &[1]).unwrap();
+
+    let mut refr = Apu::new(cfg);
+    refr.load(Arc::clone(&program)).unwrap();
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    let want = bits(&refr.run(&x).unwrap());
+    for _ in 0..2 {
+        let r = fleet.submit_to(ModelId(0), x.clone()).unwrap().recv().unwrap();
+        assert!(!r.cached && r.shard != CACHE_SHARD);
+        assert_eq!(bits(&r.output.unwrap()), want);
+    }
+    assert_eq!(reg.counter_total("apu_fleet_cache_hits_total"), 0);
+    assert_eq!(reg.counter_total("apu_fleet_cache_misses_total"), 0);
+    let m = fleet.shutdown().unwrap();
+    assert!(m.cache.is_empty(), "uncached fleet must not report cache stats");
+}
+
+/// The accounting rule, measured: a burst of hits moves only the
+/// apu_fleet_cache_* series. Enqueued/engine-call counters, the whole
+/// batch-size histogram family, and the JSQ load snapshot (queued and
+/// outstanding per shard) stay exactly where the warm-up left them.
+#[test]
+fn hits_leave_shard_metrics_and_the_jsq_signal_untouched() {
+    let (cat, _) = synth_catalog(&[("signal", &[16usize, 20, 12][..], 5400)]);
+    let reg = Arc::new(Registry::new());
+    let fleet =
+        Fleet::start_catalog(config(1, 128, Arc::clone(&reg)), Arc::new(cat), &[2]).unwrap();
+    let batch_family = |reg: &Registry| -> String {
+        reg.render_prometheus()
+            .lines()
+            .filter(|l| l.contains("apu_fleet_batch_size"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let mut rng = Rng::new(4);
+    let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    assert!(!fleet.submit_to(ModelId(0), x.clone()).unwrap().recv().unwrap().cached);
+
+    let enq0 = reg.counter_total("apu_fleet_enqueued_total");
+    let calls0 = reg.counter_total("apu_fleet_engine_calls_total");
+    let hist0 = batch_family(&reg);
+    assert!(hist0.contains("apu_fleet_batch_size"), "warm-up produced no batch histogram");
+
+    for _ in 0..100 {
+        assert!(fleet.submit_to(ModelId(0), x.clone()).unwrap().recv().unwrap().cached);
+    }
+
+    assert_eq!(reg.counter_total("apu_fleet_enqueued_total"), enq0);
+    assert_eq!(reg.counter_total("apu_fleet_engine_calls_total"), calls0);
+    assert_eq!(batch_family(&reg), hist0, "hits leaked into the batch-size histogram");
+    for (i, load) in fleet.shard_loads().iter().enumerate() {
+        assert_eq!((load.queued, load.outstanding), (0, 0), "shard {i} saw cache traffic");
+    }
+    assert_eq!(reg.counter_total("apu_fleet_cache_hits_total"), 100);
+    fleet.shutdown().unwrap();
+}
+
+/// Same-shaped inputs to different models never share entries: the key
+/// carries the program fingerprint, so each model's hit returns its own
+/// output (observable here through the distinct output dims).
+#[test]
+fn identical_inputs_never_leak_across_models() {
+    let (cat, _) =
+        synth_catalog(&[("wide", &[16usize, 20, 12][..], 5500), ("narrow", &[16, 18, 10][..], 5501)]);
+    let reg = Arc::new(Registry::new());
+    let fleet =
+        Fleet::start_catalog(config(1, 64, Arc::clone(&reg)), Arc::new(cat), &[1, 1]).unwrap();
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+
+    let mut cold_bits = Vec::new();
+    for (m, dout) in [(0usize, 12usize), (1, 10)] {
+        let cold = fleet.submit_to(ModelId(m), x.clone()).unwrap().recv().unwrap();
+        assert!(!cold.cached, "model {m}: first submission hit a foreign entry");
+        let out = cold.output.unwrap();
+        assert_eq!(out.len(), dout);
+        cold_bits.push(bits(&out));
+    }
+    for (m, dout) in [(0usize, 12usize), (1, 10)] {
+        let hot = fleet.submit_to(ModelId(m), x.clone()).unwrap().recv().unwrap();
+        assert!(hot.cached && hot.model == ModelId(m));
+        let out = hot.output.unwrap();
+        assert_eq!(out.len(), dout, "model {m}: hit served a foreign model's output");
+        assert_eq!(bits(&out), cold_bits[m]);
+    }
+    let m = fleet.shutdown().unwrap();
+    for (i, stats) in m.cache.iter().enumerate() {
+        let s = stats.clone().unwrap();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1), "group {i}: {s:?}");
+    }
+}
